@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing, row format, synthetic content."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (block_until_ready aware)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def smooth_clip(key, t=4, b=1, h=64, w=64):
+    """Synthetic video with real temporal structure (drifting blobs)."""
+    from repro.data.video import VideoStream, render_clip
+
+    s = VideoStream(0, int(jax.random.randint(key, (), 0, 1 << 30)), h, w, 30.0, 64)
+    frames = render_clip(s, 0, t)  # (T, H, W, 3)
+    return frames[:, None].repeat(b, axis=1) if b > 1 else frames[:, None]
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

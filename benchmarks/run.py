@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Set BENCH_FULL=1 for the longer
+codec-training variant of the Fig. 8/9 rate-distortion sweep.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernels_bench, paper_tables
+    from benchmarks.common import fmt_rows
+
+    quick = os.environ.get("BENCH_FULL", "0") != "1"
+    suites = [
+        ("table1", paper_tables.table1_resource),
+        ("table2", paper_tables.table2_placement),
+        ("fig4", paper_tables.fig4_workstation),
+        ("fig5", paper_tables.fig5_consolidated),
+        ("fig6", paper_tables.fig6_multinode),
+        ("fig7", paper_tables.fig7_encryption),
+        ("fig8/9", lambda: paper_tables.fig8_fig9_codec(quick=quick)),
+        ("fig10", paper_tables.fig10_movement_scaling),
+        ("fig11", paper_tables.fig11_csd_ratio),
+        ("kernels/polymul", kernels_bench.polymul_kernel),
+        ("kernels/motion", kernels_bench.motion_kernel),
+        ("kernels/quantize", kernels_bench.quantize_kernel),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            print(fmt_rows(fn()), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR: {e!r}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end continuous-learning edge-server driver (the paper's Fig. 1 loop).
+
+Eight camera streams with distribution drift feed the SalientTrainer:
+exemplar selection routes novel clips to codec training (Alg. 2) and known
+clips to the archival pipeline; a straggling storage shard triggers placement
+rebalancing; checkpoints are erasure-coded; the run then simulates a power
+loss and restarts from the journal.
+
+Run:  PYTHONPATH=src python examples/continuous_learning_video.py
+"""
+
+import shutil
+import tempfile
+
+from repro.data.video import make_streams
+from repro.train.trainer import SalientTrainer, TrainerConfig
+
+
+def main():
+    workdir = tempfile.mkdtemp(prefix="salient_")
+    streams = make_streams(8, height=32, width=32)
+    cfg = TrainerConfig(checkpoint_every=3, n_shards=4)
+    tr = SalientTrainer(streams, workdir, cfg)
+    print(f"== continuous learning: 8 streams, 4 storage shards -> {workdir}")
+    print(f"initial placement: {tr.placement.assignment}")
+
+    shard_times = [1.0, 1.0, 1.0, 1.0]
+    for step in range(6):
+        if step == 3:
+            shard_times = [1.0, 6.0, 1.0, 1.0]  # shard 1 starts straggling
+            print("-- shard 1 degrades (straggler) --")
+        rep = tr.run_step(shard_times=shard_times)
+        print(
+            f"step {rep.step}: loss={rep.codec_loss:.4f} "
+            f"novel->{rep.novel_selected} archived->{rep.archived_streams} "
+            f"({rep.archive_bytes}B sealed) psnr={rep.psnr:.1f}dB "
+            f"rebalanced={rep.rebalanced}"
+        )
+
+    print(f"placement after straggler: {tr.placement.assignment}")
+    print("-- simulating power loss: new trainer restores from journal --")
+    tr2 = SalientTrainer(streams, workdir, cfg)
+    print(f"restored at step {tr2.step} (journal replay, torn writes dropped)")
+    rep = tr2.run_step()
+    print(f"step {rep.step}: loss={rep.codec_loss:.4f} — resumed cleanly")
+    shutil.rmtree(workdir)
+
+
+if __name__ == "__main__":
+    main()

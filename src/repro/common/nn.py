@@ -1,0 +1,103 @@
+"""Minimal parameterized NN primitives shared by the codec and model zoo.
+
+Plain pytrees of arrays + pure functions (no flax/haiku dependency): params are
+nested dicts, apply functions are jit/pjit-friendly and shard_map-safe.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_conv",
+    "conv2d",
+    "init_conv_transpose",
+    "conv2d_transpose",
+    "init_dense",
+    "dense",
+    "layer_norm",
+    "rms_norm",
+]
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def init_conv(key, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    wk, bk = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(wk, (kh, kw, cin, cout), dtype, -scale, scale),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def conv2d(params, x, stride=1, padding="SAME", feature_group_count=1):
+    s = (stride, stride) if isinstance(stride, int) else stride
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["w"].astype(x.dtype),
+        window_strides=s,
+        padding=padding,
+        dimension_numbers=_DN,
+        feature_group_count=feature_group_count,
+    )
+    return y + params["b"].astype(x.dtype)
+
+
+def init_conv_transpose(key, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    wk, bk = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(wk, (kh, kw, cin, cout), dtype, -scale, scale),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def conv2d_transpose(params, x, stride=2, padding="SAME"):
+    s = (stride, stride) if isinstance(stride, int) else stride
+    y = jax.lax.conv_transpose(
+        x,
+        params["w"].astype(x.dtype),
+        strides=s,
+        padding=padding,
+        dimension_numbers=_DN,
+    )
+    return y + params["b"].astype(x.dtype)
+
+
+def init_dense(key, din, dout, dtype=jnp.float32, bias=True):
+    scale = 1.0 / math.sqrt(din)
+    p = {"w": jax.random.uniform(key, (din, dout), dtype, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def layer_norm(x, gamma=None, beta=None, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma.astype(x.dtype)
+    if beta is not None:
+        y = y + beta.astype(x.dtype)
+    return y
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    # reduce in f32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)

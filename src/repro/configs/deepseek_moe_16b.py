@@ -1,0 +1,22 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=102400, MoE 64e top-6 -- 2 shared + 64 routed, fine-grained experts
+[arXiv:2401.06066; hf]."""
+
+from repro.models.config import ModelConfig, MoECfg
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek_moe_16b",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab=102400,
+        act="silu_gated",
+        rope_theta=1e4,
+        moe=MoECfg(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2, every=1),
+        tie_embeddings=False,
+    )

@@ -1,0 +1,30 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2, Mamba:attention 7:1 interleave
+[arXiv:2403.19887; hf].
+
+Period-8 pattern MMMAMMMM (attention at position 3 of each 8, as in Jamba),
+MoE FFN on every other layer: 36 MoE layers x 16 experts x 3*8192*24576
+~ 348B + mamba/attention/dense ~ 50B -> ~398B total.  Sub-quadratic mixer
+majority: runs the long_500k cell.
+"""
+
+from repro.models.config import ModelConfig, MoECfg, SSMCfg
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba_1_5_large_398b",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab=65536,
+        act="silu_gated",
+        rope_theta=1e4,
+        layer_pattern="MMMAMMMM",
+        moe=MoECfg(n_experts=16, top_k=2, d_ff_expert=24576, n_shared=0, every=2),
+        ssm=SSMCfg(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+        tie_embeddings=False,
+    )

@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 128e top-1 [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+MoE on alternate layers (every=2): 24 MoE layers x 128 experts x
+3*5120*8192 ~ 386B expert params + dense/attention ~ 12B -> ~398B total,
+~14B active (top-1 + dense FFN + attention) -- the published 400B-A17B class.
+"""
+
+from repro.models.config import ModelConfig, MoECfg
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4_maverick_400b_a17b",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab=202048,
+        act="silu_gated",
+        rope_theta=5e5,
+        moe=MoECfg(n_experts=128, top_k=1, d_ff_expert=8192, n_shared=1, every=2),
+        tie_embeddings=False,
+    )

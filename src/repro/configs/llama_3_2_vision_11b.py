@@ -1,0 +1,29 @@
+"""llama-3.2-vision-11b [vlm]: 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256, cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+The vision tower is a STUB per the assignment: ``input_specs()`` supplies
+precomputed (B, 1601, 7680) patch embeddings; a learned projection maps them
+to d_model.  Cross-attention every 5th layer (8 cross layers in 40).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama_3_2_vision_11b",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab=128256,
+        act="silu_gated",
+        rope_theta=5e5,
+        cross_attn_every=5,
+        n_frontend_tokens=1601,
+        frontend_dim=7680,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,25 @@
+"""mamba2-370m [ssm]: 48L d_model=1024, attn-free, ssm_state=128, SSD
+(state-space duality) [arXiv:2405.21060; unverified].
+
+Every layer is a Mamba2 mixer (d_ff=0: no separate FFN, matching the Mamba
+architecture).  Sub-quadratic: runs the long_500k cell.
+"""
+
+from repro.models.config import ModelConfig, SSMCfg
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2_370m",
+        n_layers=48,
+        d_model=1024,
+        n_heads=16,       # unused by M blocks; kept for schema completeness
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=0,
+        vocab=50280,
+        act="silu_gated",
+        layer_pattern="M",
+        ssm=SSMCfg(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+        tie_embeddings=True,
+    )

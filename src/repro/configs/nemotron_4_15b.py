@@ -1,0 +1,20 @@
+"""nemotron-4-15b [dense]: 32L d_model=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000, squared-ReLU FFN [arXiv:2402.16819; unverified]."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron_4_15b",
+        n_layers=32,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab=256000,
+        act="squared_relu",
+        rope_theta=1e4,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,21 @@
+"""qwen2-0.5b [dense]: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936,
+QKV bias [arXiv:2407.10671; hf]."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2_0_5b",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        vocab=151936,
+        act="silu_gated",
+        qkv_bias=True,
+        rope_theta=1e6,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,52 @@
+"""Assigned input-shape set (the 4 shapes x 10 archs = 40 cells).
+
+``long_500k`` requires a sub-quadratic mixer: it runs only for archs whose
+layer pattern contains Mamba blocks (mamba2-370m, jamba-1.5) and is recorded
+as SKIPPED for the 8 pure-full-attention archs (see DESIGN.md
+§Arch-applicability and EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "applicable_shapes", "all_cells"]
+
+
+class ShapeSpec(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if "M" in cfg.layer_pattern:  # sub-quadratic mixers only
+        names.append("long_500k")
+    return names
+
+
+def skipped_shapes(cfg: ModelConfig) -> List[str]:
+    return [n for n in SHAPES if n not in applicable_shapes(cfg)]
+
+
+def all_cells():
+    """Yield (arch_id, shape_name, runnable: bool) for all 40 cells."""
+    from repro.models.registry import ARCH_IDS, get_config
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        app = set(applicable_shapes(cfg))
+        for shape in SHAPES:
+            yield arch, shape, shape in app

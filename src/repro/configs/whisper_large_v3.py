@@ -1,0 +1,29 @@
+"""whisper-large-v3 [audio]: enc-dec, 32L d_model=1280 20H (kv=20) d_ff=5120
+vocab=51866, conv frontend STUB [arXiv:2212.04356; unverified].
+
+The modality frontend is a stub per the assignment: ``input_specs()`` supplies
+precomputed (B, 1500, 1280) mel-frame embeddings (post-conv).  Deviation noted
+in DESIGN.md: positions use sinusoids (encoder) + RoPE (decoder) instead of
+whisper's learned decoder embeddings.
+"""
+
+from repro.models.config import EncoderCfg, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_large_v3",
+        n_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv_heads=20,
+        head_dim=64,
+        d_ff=5120,
+        vocab=51866,
+        act="gelu",
+        qkv_bias=True,
+        rope_theta=1e4,
+        encoder=EncoderCfg(n_layers=32, n_heads=20, n_kv_heads=20, seq_len=1500),
+        frontend_dim=1280,
+        tie_embeddings=True,
+    )

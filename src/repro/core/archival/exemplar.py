@@ -1,0 +1,114 @@
+"""Exemplar selection: representation learning + k-means++ (paper §2.2).
+
+The continuous-learning loop converts data to feature vectors with the frozen
+backbone, clusters them (k-means++ seeding, Lloyd refinement), and scores
+novelty as distance-to-nearest-centroid: far samples are "new classes" routed
+to training; near samples are "known classes" routed to the archival path.
+Pure JAX, jit-able, runs per storage shard inside shard_map.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kmeanspp_init", "kmeans", "novelty_scores", "select_exemplars", "ExemplarSplit"]
+
+
+class ExemplarSplit(NamedTuple):
+    train_idx: jax.Array  # indices routed to continuous learning
+    archive_idx: jax.Array  # indices routed to the archival pipeline
+    novelty: jax.Array  # per-sample novelty score
+    centroids: jax.Array
+
+
+def _sqdist(x, c):
+    """(N, D), (K, D) -> (N, K) squared distances."""
+    return (
+        jnp.sum(x * x, -1, keepdims=True)
+        - 2.0 * x @ c.T
+        + jnp.sum(c * c, -1)[None, :]
+    )
+
+
+def kmeanspp_init(key, x, k: int):
+    """k-means++ seeding (Arthur & Vassilvitskii) in pure JAX."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        cents, key = carry
+        d = _sqdist(x, cents)
+        # distance to nearest chosen centroid (mask out un-chosen slots)
+        mask = jnp.arange(k) < i
+        dmin = jnp.min(jnp.where(mask[None, :], d, jnp.inf), axis=1)
+        key, kc = jax.random.split(key)
+        probs = dmin / jnp.maximum(dmin.sum(), 1e-12)
+        nxt = jax.random.choice(kc, n, p=probs)
+        return cents.at[i].set(x[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, x, k: int, iters: int = 10):
+    """Returns (centroids (k, D), assignment (N,))."""
+    cents = kmeanspp_init(key, x, k)
+
+    def step(_, cents):
+        d = _sqdist(x, cents)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (N, K)
+        counts = onehot.sum(0)  # (K,)
+        sums = onehot.T @ x  # (K, D)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old centroid for empty clusters
+        return jnp.where(counts[:, None] > 0, new, cents)
+
+    cents = jax.lax.fori_loop(0, iters, step, cents)
+    assign = jnp.argmin(_sqdist(x, cents), axis=1)
+    return cents, assign
+
+
+def novelty_scores(x, centroids):
+    return jnp.sqrt(jnp.maximum(jnp.min(_sqdist(x, centroids), axis=1), 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_train", "iters"))
+def select_exemplars(
+    key, feats, k: int = 8, n_train: int = 16, iters: int = 8, known_centroids=None
+):
+    """feats: (N, D) pooled feature vectors.
+
+    Novelty is measured against the *known* distribution: the centroids from
+    previous rounds (``known_centroids``) when available — the paper's "images
+    much different from the training data distribution".  Without history,
+    clusters are fit on the batch and only *established* clusters (size >=
+    N/2k) count as known, so a handful of out-of-distribution samples forming
+    their own tiny cluster still scores as novel.
+
+    Top-``n_train`` most-novel samples go to training; the rest to archival.
+    """
+    n = feats.shape[0]
+    cents, assign = kmeans(key, feats, k, iters)
+    if known_centroids is not None:
+        nov = novelty_scores(feats, known_centroids)
+    else:
+        counts = jax.nn.one_hot(assign, k, dtype=feats.dtype).sum(0)  # (K,)
+        established = counts >= (n / (2.0 * k))
+        d = _sqdist(feats, cents)
+        d = jnp.where(established[None, :], d, jnp.inf)
+        nov = jnp.sqrt(jnp.maximum(jnp.min(d, axis=1), 0.0))
+    order = jnp.argsort(-nov)  # most novel first
+    return ExemplarSplit(
+        train_idx=order[:n_train],
+        archive_idx=order[n_train:],
+        novelty=nov,
+        centroids=cents,
+    )

@@ -1,0 +1,147 @@
+"""Erasure coding for the archival pipeline: RAID-5 (XOR) and RAID-6 (GF(256) RS).
+
+Salient Store's archival flow ends in "a distributed set of disks to ensure
+redundancy (e.g., RAID 5)".  On the TPU adaptation a "disk" is a storage shard
+on the data mesh axis; parity shards let the system survive shard loss
+(node failure / the paper's intermittent-power events) and are also applied to
+checkpoint shards (train/checkpoint.py).
+
+All arithmetic is vectorized JAX on uint8 payloads: XOR on the VPU for P,
+log/antilog-table Reed-Solomon over GF(2^8) (poly 0x11D, generator 2) for Q.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "gf_mul",
+    "gf_div",
+    "gf_pow_gen",
+    "raid5_encode",
+    "raid5_reconstruct",
+    "raid6_encode",
+    "raid6_reconstruct",
+]
+
+
+def _gf_tables():
+    exp = np.zeros(512, np.int32)
+    log = np.zeros(256, np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= 0x11D
+    exp[255:510] = exp[:255]
+    exp[510:] = exp[:2]
+    return jnp.asarray(exp), jnp.asarray(log)
+
+
+_EXP, _LOG = _gf_tables()
+
+
+def gf_mul(a, b):
+    """Elementwise GF(256) multiply; a, b uint8 arrays (broadcastable)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    prod = jnp.take(_EXP, jnp.take(_LOG, a) + jnp.take(_LOG, b))
+    return jnp.where((a == 0) | (b == 0), 0, prod).astype(jnp.uint8)
+
+
+def gf_div(a, b):
+    """Elementwise GF(256) divide (b must be nonzero where a is nonzero)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    quot = jnp.take(_EXP, jnp.take(_LOG, a) - jnp.take(_LOG, b) + 255)
+    return jnp.where(a == 0, 0, quot).astype(jnp.uint8)
+
+
+def gf_pow_gen(i: int) -> int:
+    """g^i for generator g=2 (host-side scalar)."""
+    return int(_EXP[i % 255])
+
+
+# ------------------------------------------------------------------ RAID-5
+def raid5_encode(shards: jnp.ndarray) -> jnp.ndarray:
+    """shards: (k, ...) uint8 -> parity (...,) uint8."""
+    p = shards[0]
+    for i in range(1, shards.shape[0]):
+        p = p ^ shards[i]
+    return p
+
+
+def raid5_reconstruct(
+    shards: Sequence[Optional[jnp.ndarray]], parity: jnp.ndarray, missing: int
+) -> jnp.ndarray:
+    """Recover the single missing data shard."""
+    acc = parity
+    for i, s in enumerate(shards):
+        if i != missing:
+            assert s is not None, f"shard {i} also missing; RAID-5 covers 1 erasure"
+            acc = acc ^ s
+    return acc
+
+
+# ------------------------------------------------------------------ RAID-6
+def raid6_encode(shards: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shards: (k, ...) uint8 -> (P, Q) parities."""
+    k = shards.shape[0]
+    p = raid5_encode(shards)
+    q = jnp.zeros_like(shards[0])
+    for i in range(k):
+        q = q ^ gf_mul(np.uint8(gf_pow_gen(i)), shards[i])
+    return p, q
+
+
+def raid6_reconstruct(
+    shards: List[Optional[jnp.ndarray]],
+    p: Optional[jnp.ndarray],
+    q: Optional[jnp.ndarray],
+    missing: Sequence[int],
+) -> List[jnp.ndarray]:
+    """Recover up to two missing *data* shards (P/Q may be among the losses).
+
+    ``missing`` lists data-shard indices that are None in ``shards``.  Lost
+    parities are simply re-encoded afterwards by the caller.
+    Returns the complete data shard list.
+    """
+    shards = list(shards)
+    k = len(shards)
+    missing = sorted(missing)
+    if len(missing) == 0:
+        return shards
+    if len(missing) == 1:
+        (i,) = missing
+        if p is not None:
+            shards[i] = raid5_reconstruct(shards, p, i)
+        else:
+            assert q is not None, "need P or Q for a single erasure"
+            acc = q
+            for m, s in enumerate(shards):
+                if m != i:
+                    acc = acc ^ gf_mul(np.uint8(gf_pow_gen(m)), s)
+            shards[i] = gf_div(acc, np.uint8(gf_pow_gen(i)))
+        return shards
+    if len(missing) == 2:
+        i, j = missing
+        assert p is not None and q is not None, "two erasures need both P and Q"
+        pxor = p
+        qxor = q
+        for m, s in enumerate(shards):
+            if m not in (i, j):
+                pxor = pxor ^ s
+                qxor = qxor ^ gf_mul(np.uint8(gf_pow_gen(m)), s)
+        # pxor = d_i ^ d_j ;  qxor = g^i d_i ^ g^j d_j
+        gi, gj = np.uint8(gf_pow_gen(i)), np.uint8(gf_pow_gen(j))
+        denom = np.uint8(int(gi) ^ int(gj))
+        dj = gf_div(qxor ^ gf_mul(gi, pxor), denom)
+        di = pxor ^ dj
+        shards[i], shards[j] = di, dj
+        return shards
+    raise ValueError(f"RAID-6 covers at most 2 erasures, got {missing}")

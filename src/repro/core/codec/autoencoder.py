@@ -1,0 +1,139 @@
+"""Layered (progressive) autoencoder — the trainable "A" of Alg. 1/2.
+
+Structure (paper §3: "each successive layer ... corrects errors from the
+previous layers"):
+
+    x~0 = 0
+    for k in 1..K:
+        z_k   = Enc_k(residual_k)            residual_k = target - partial recon
+        zq_k  = Q(z_k)                       per-layer trained quantization scale
+        x~k   = x~{k-1} + Dec_k(zq_k)
+
+Decoding any prefix of the K layers yields a progressively better
+reconstruction (SVC/SHVC-style quality layers).  The encoder consumes the
+*frozen backbone's features* (+ optional motion-vector latent conditioning,
+the paper's "motion vectors as a latent space"), the decoder reconstructs
+pixels, upsampling by the backbone stride.
+
+Quantization uses a straight-through estimator during training; at archive
+time the int8 codes are the bitstream (entropy-coded with zstd host-side).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.nn import conv2d, conv2d_transpose, init_conv, init_conv_transpose
+
+__all__ = [
+    "init_layered_ae",
+    "encode_layers",
+    "decode_layers",
+    "quantize_code",
+    "dequantize_code",
+]
+
+
+def init_layered_ae(
+    key,
+    feat_ch: int = 64,
+    latent_ch: int = 8,
+    n_layers: int = 4,
+    out_ch: int = 3,
+    cond_ch: int = 0,
+    width: int = 32,
+    stride: int = 8,
+    dtype=jnp.float32,
+):
+    """cond_ch: channels of the conditioning latent (motion field), concat'd
+    to the encoder input of every layer.  stride: backbone downsampling (the
+    decoder upsamples 2 x 2 x (stride/4))."""
+    assert stride in (4, 8), stride
+    layers = []
+    keys = jax.random.split(key, n_layers)
+    for k in range(n_layers):
+        ek = jax.random.split(keys[k], 8)
+        # every layer's encoder sees backbone features + cond + the pooled
+        # remaining error (layer 0's "error" is the target itself)
+        enc_in = feat_ch + cond_ch + out_ch
+        layer = {
+            # encoder: features (+cond, +pixel residual downsampled) -> latent
+            "enc1": init_conv(ek[0], 3, 3, enc_in, width, dtype),
+            "enc2": init_conv(ek[1], 3, 3, width, latent_ch, dtype),
+            # decoder: latent -> pixels (x2 up, x2 up, x(stride/4) up)
+            "dec1": init_conv_transpose(ek[2], 4, 4, latent_ch, width, dtype),
+            "dec2": init_conv_transpose(ek[3], 4, 4, width, width, dtype),
+            "dec3": init_conv_transpose(ek[4], 4, 4, width, width, dtype)
+            if stride == 8
+            else None,
+            "dec_out": init_conv(ek[5], 3, 3, width, out_ch, dtype),
+            "q_log_scale": jnp.full((latent_ch,), -3.0, dtype),  # trained quant scale (init ~0.05)
+        }
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def _avgpool(x, factor):
+    B, H, W, C = x.shape
+    return x.reshape(B, H // factor, factor, W // factor, factor, C).mean((2, 4))
+
+
+def quantize_code(z, log_scale, train: bool = False):
+    """Symmetric int8 quantization with straight-through gradients."""
+    scale = jnp.exp(log_scale)
+    y = z / scale
+    yq = jnp.clip(jnp.round(y), -127, 127)
+    if train:
+        yq = y + jax.lax.stop_gradient(yq - y)  # STE
+    return yq
+
+
+def dequantize_code(zq, log_scale):
+    return zq * jnp.exp(log_scale)
+
+
+def _decode_one(layer, zq):
+    h = dequantize_code(zq, layer["q_log_scale"])
+    h = jax.nn.relu(conv2d_transpose(layer["dec1"], h, stride=2))
+    h = jax.nn.relu(conv2d_transpose(layer["dec2"], h, stride=2))
+    if layer["dec3"] is not None:
+        h = jax.nn.relu(conv2d_transpose(layer["dec3"], h, stride=2))
+    return conv2d(layer["dec_out"], h)
+
+
+def encode_layers(params, feats, target, cond=None, n_layers=None, train=False):
+    """Progressive encode.
+
+    feats:  (B, h, w, F) frozen-backbone features of the *coding target*
+    target: (B, H, W, C) pixels to reconstruct (frame or residual)
+    cond:   optional (B, h, w, M) conditioning latent (motion field)
+    Returns (codes [K x (B, h, w, L)], recon (B, H, W, C)).
+    """
+    layers = params["layers"]
+    K = len(layers) if n_layers is None else n_layers
+    stride = target.shape[1] // feats.shape[1]  # backbone downsampling factor
+    recon = jnp.zeros_like(target)
+    codes = []
+    for k in range(K):
+        layer = layers[k]
+        err = target - recon  # what previous layers failed to explain
+        enc_in = feats
+        if cond is not None:
+            enc_in = jnp.concatenate([enc_in, cond], axis=-1)
+        enc_in = jnp.concatenate([enc_in, _avgpool(err, stride)], axis=-1)
+        h = jax.nn.relu(conv2d(layer["enc1"], enc_in))
+        z = conv2d(layer["enc2"], h)
+        zq = quantize_code(z, layer["q_log_scale"], train=train)
+        codes.append(zq)
+        recon = recon + _decode_one(layer, zq)
+    return codes, recon
+
+
+def decode_layers(params, codes):
+    """Reconstruct from any prefix of quality layers."""
+    recon = None
+    for k, zq in enumerate(codes):
+        d = _decode_one(params["layers"][k], zq)
+        recon = d if recon is None else recon + d
+    return recon

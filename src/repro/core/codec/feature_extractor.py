@@ -1,0 +1,48 @@
+"""Frozen MobileNet-style feature extractor (Salient Store Alg. 1/2, "M").
+
+The paper reuses the analytics backbone (MobileNet) as the codec's feature
+extractor: its weights are frozen, the codec's autoencoder trains on top.
+This is the "maximize compute reuse between inference and archival" insight —
+the same forward pass serves exemplar selection AND compression.
+
+Depthwise-separable stack, stride-8 total downsampling:
+  stem 3x3 s2 -> [dw 3x3 + pw 1x1] x3 (strides 2, 2, 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.nn import conv2d, init_conv
+
+__all__ = ["init_feature_extractor", "extract_features", "FEATURE_STRIDE"]
+
+FEATURE_STRIDE = 8
+
+
+def init_feature_extractor(key, in_ch=3, width=16, out_ch=64, dtype=jnp.float32):
+    k = jax.random.split(key, 7)
+    w2 = width * 2
+    return {
+        "stem": init_conv(k[0], 3, 3, in_ch, width, dtype),
+        "dw1": init_conv(k[1], 3, 3, 1, width, dtype),  # depthwise (groups=width)
+        "pw1": init_conv(k[2], 1, 1, width, w2, dtype),
+        "dw2": init_conv(k[3], 3, 3, 1, w2, dtype),
+        "pw2": init_conv(k[4], 1, 1, w2, out_ch, dtype),
+        "dw3": init_conv(k[5], 3, 3, 1, out_ch, dtype),
+        "pw3": init_conv(k[6], 1, 1, out_ch, out_ch, dtype),
+    }
+
+
+def extract_features(params, frames):
+    """frames: (B, H, W, C) in [0, 1] -> (B, H/8, W/8, out_ch)."""
+    x = frames
+    x = jax.nn.relu(conv2d(params["stem"], x, stride=2))
+    x = jax.nn.relu(conv2d(params["dw1"], x, stride=2, feature_group_count=x.shape[-1]))
+    x = jax.nn.relu(conv2d(params["pw1"], x))
+    x = jax.nn.relu(conv2d(params["dw2"], x, stride=2, feature_group_count=x.shape[-1]))
+    x = jax.nn.relu(conv2d(params["pw2"], x))
+    x = jax.nn.relu(conv2d(params["dw3"], x, stride=1, feature_group_count=x.shape[-1]))
+    x = jax.nn.relu(conv2d(params["pw3"], x))
+    return x

@@ -1,0 +1,171 @@
+"""The full Salient Store layered neural codec (Alg. 1): GOP pipeline.
+
+Per GOP of G frames: the anchor frame is intra-coded (features -> layered AE);
+every subsequent frame is inter-coded — block motion vs the previous
+*reconstruction*, `R_t = F_t - predict(F_{t-1}, M_t)`, the residual encoded by
+the layered AE *conditioned on the motion-vector latent* (the paper's "motion
+vectors as a latent space").  The bitstream per frame is (int8 layer codes,
+int8 motion field); the byte-level entropy stage is zstd (the paper's own
+Table 1 entropy coder), applied host-side at persist time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.nn import conv2d, init_conv
+from repro.core.codec.autoencoder import (
+    decode_layers,
+    encode_layers,
+    init_layered_ae,
+)
+from repro.core.codec.feature_extractor import (
+    FEATURE_STRIDE,
+    extract_features,
+    init_feature_extractor,
+)
+from repro.kernels.motion.ops import estimate_motion, warp
+
+__all__ = [
+    "init_codec",
+    "encode_frame",
+    "encode_gop",
+    "decode_gop",
+    "psnr",
+    "serialize_bitstream",
+    "CodecConfig",
+    "FrameCode",
+]
+
+
+class CodecConfig(NamedTuple):
+    n_layers: int = 4
+    latent_ch: int = 8
+    feat_ch: int = 64
+    mv_cond_ch: int = 8
+    block: int = 16
+    radius: int = 8
+    gop: int = 8
+
+
+class FrameCode(NamedTuple):
+    codes: Sequence[jax.Array]  # K x (B, h, w, latent) quantized (int values)
+    mv: Optional[jax.Array]  # (B, nby, nbx, 2) int32 or None for anchors
+
+
+def init_codec(key, cfg: CodecConfig = CodecConfig(), dtype=jnp.float32):
+    ke, ka, km = jax.random.split(key, 3)
+    return {
+        "extractor": init_feature_extractor(ke, out_ch=cfg.feat_ch, dtype=dtype),
+        "ae": init_layered_ae(
+            ka,
+            feat_ch=cfg.feat_ch,
+            latent_ch=cfg.latent_ch,
+            n_layers=cfg.n_layers,
+            cond_ch=cfg.mv_cond_ch,
+            stride=FEATURE_STRIDE,
+            dtype=dtype,
+        ),
+        "mv_embed": init_conv(km, 1, 1, 2, cfg.mv_cond_ch, dtype),
+    }
+
+
+def _mv_cond(params, mv, feat_hw, cfg: CodecConfig):
+    """Motion field (B, nby, nbx, 2) -> conditioning latent at feature res."""
+    h, w = feat_hw
+    mvf = mv.astype(jnp.float32) / float(cfg.radius)
+    rep = cfg.block // FEATURE_STRIDE
+    mvf = jnp.repeat(jnp.repeat(mvf, rep, axis=1), rep, axis=2)  # (B, h, w, 2)
+    return conv2d(params["mv_embed"], mvf)
+
+
+def _zero_cond(params, feats, cfg: CodecConfig):
+    B, h, w, _ = feats.shape
+    zeros = jnp.zeros((B, h, w, 2), feats.dtype)
+    return conv2d(params["mv_embed"], zeros)
+
+
+def encode_frame(params, cfg: CodecConfig, frame, prev_recon, *, train=False, n_layers=None):
+    """One frame. frame: (B, H, W, 3) in [0,1]; prev_recon: same or None.
+
+    Returns (FrameCode, recon).
+    """
+    if prev_recon is None:
+        feats = extract_features(params["extractor"], frame)
+        cond = _zero_cond(params, feats, cfg)
+        codes, recon = encode_layers(
+            params["ae"], feats, frame, cond=cond, n_layers=n_layers, train=train
+        )
+        return FrameCode(codes, None), jnp.clip(recon, 0.0, 1.0)
+    mv, _sad = jax.vmap(
+        lambda c, p: estimate_motion(c, p, block=cfg.block, radius=cfg.radius)
+    )(frame, prev_recon)
+    pred = jax.vmap(lambda p, m: warp(p, m, cfg.block))(prev_recon, mv)
+    resid = frame - pred
+    feats = extract_features(params["extractor"], resid * 0.5 + 0.5)
+    cond = _mv_cond(params, mv, feats.shape[1:3], cfg)
+    codes, rec_resid = encode_layers(
+        params["ae"], feats, resid, cond=cond, n_layers=n_layers, train=train
+    )
+    recon = jnp.clip(pred + rec_resid, 0.0, 1.0)
+    return FrameCode(codes, mv), recon
+
+
+def encode_gop(params, cfg: CodecConfig, frames, *, train=False, n_layers=None):
+    """frames: (T, B, H, W, 3). Returns (list[FrameCode], recons (T, B, H, W, 3))."""
+    T = frames.shape[0]
+    frame_codes = []
+    recons = []
+    prev = None
+    for t in range(T):
+        fc, recon = encode_frame(
+            params, cfg, frames[t], prev, train=train, n_layers=n_layers
+        )
+        frame_codes.append(fc)
+        recons.append(recon)
+        prev = recon
+    return frame_codes, jnp.stack(recons)
+
+
+def decode_gop(params, cfg: CodecConfig, frame_codes):
+    """Inverse of encode_gop (uses only codes + mv)."""
+    recons = []
+    prev = None
+    for fc in frame_codes:
+        part = decode_layers(params["ae"], fc.codes)
+        if fc.mv is None:
+            recon = jnp.clip(part, 0.0, 1.0)
+        else:
+            pred = jax.vmap(lambda p, m: warp(p, m, cfg.block))(prev, fc.mv)
+            recon = jnp.clip(pred + part, 0.0, 1.0)
+        recons.append(recon)
+        prev = recon
+    return jnp.stack(recons)
+
+
+def psnr(a, b, max_val=1.0):
+    mse = jnp.mean((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+    return 10.0 * jnp.log10(max_val**2 / jnp.maximum(mse, 1e-12))
+
+
+def serialize_bitstream(frame_codes, level: int = 9):
+    """Host-side entropy stage: int8 codes + int8 motion -> zstd bytes.
+
+    Returns (blob: bytes, n_raw_bytes: int).  Compression ratios in the
+    benchmarks are computed from real compressed sizes, not proxies.
+    """
+    import numpy as np
+    import zstandard as zstd
+
+    parts = []
+    for fc in frame_codes:
+        for z in fc.codes:
+            parts.append(np.asarray(z).astype(np.int8).tobytes())
+        if fc.mv is not None:
+            parts.append(np.asarray(fc.mv).astype(np.int8).tobytes())
+    raw = b"".join(parts)
+    blob = zstd.ZstdCompressor(level=level).compress(raw)
+    return blob, len(raw)

@@ -1,0 +1,83 @@
+"""ChaCha20 stream cipher in pure JAX uint32 (RFC 8439 dataflow).
+
+Role in Salient Store: the paper encrypts *bulk* archival data; R-LWE is the
+quantum-safe key layer.  Production archival stacks wrap a symmetric stream
+cipher under the KEM (encrypting terabytes coefficient-by-coefficient with
+R-LWE would inflate data ~80x, defeating the data-movement goal).  ChaCha20
+is pure 32-bit add/rotate/xor — fully vectorizable on the TPU VPU, one lane
+per 64-byte block, so the whole keystream is a single fused elementwise graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chacha20_block", "keystream", "xor_stream", "encrypt_u32", "decrypt_u32"]
+
+_CONSTANTS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)  # "expand 32-byte k"
+
+_COLUMN_IX = ((0, 4, 8, 12), (1, 5, 9, 13), (2, 6, 10, 14), (3, 7, 11, 15))
+_DIAG_IX = ((0, 5, 10, 15), (1, 6, 11, 12), (2, 7, 8, 13), (3, 4, 9, 14))
+
+
+def _rotl(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def _quarter(x, ia, ib, ic, id_):
+    a, b, c, d = x[..., ia], x[..., ib], x[..., ic], x[..., id_]
+    a = a + b
+    d = _rotl(d ^ a, 16)
+    c = c + d
+    b = _rotl(b ^ c, 12)
+    a = a + b
+    d = _rotl(d ^ a, 8)
+    c = c + d
+    b = _rotl(b ^ c, 7)
+    return x.at[..., ia].set(a).at[..., ib].set(b).at[..., ic].set(c).at[..., id_].set(d)
+
+
+def _double_round(x):
+    for ix in _COLUMN_IX:
+        x = _quarter(x, *ix)
+    for ix in _DIAG_IX:
+        x = _quarter(x, *ix)
+    return x
+
+
+def chacha20_block(key: jax.Array, counter: jax.Array, nonce: jax.Array) -> jax.Array:
+    """key (8,) u32, counter scalar-or-(B,) u32, nonce (3,) u32 -> (..., 16) u32."""
+    counter = jnp.atleast_1d(jnp.asarray(counter, jnp.uint32))
+    B = counter.shape[0]
+    const = jnp.tile(jnp.array(_CONSTANTS, jnp.uint32), (B, 1))
+    keyw = jnp.tile(key.astype(jnp.uint32), (B, 1))
+    noncew = jnp.tile(nonce.astype(jnp.uint32), (B, 1))
+    state = jnp.concatenate([const, keyw, counter[:, None], noncew], axis=-1)
+    x = state
+    x = jax.lax.fori_loop(0, 10, lambda _, s: _double_round(s), x)
+    return x + state
+
+
+@functools.partial(jax.jit, static_argnames=("n_words",))
+def keystream(
+    key: jax.Array, nonce: jax.Array, n_words: int, counter0: int = 0
+) -> jax.Array:
+    """(n_words,) uint32 keystream (n_words rounded up internally to 16)."""
+    n_blocks = (n_words + 15) // 16
+    counters = jnp.uint32(counter0) + jnp.arange(n_blocks, dtype=jnp.uint32)
+    ks = chacha20_block(key, counters, nonce)  # (n_blocks, 16)
+    return ks.reshape(-1)[:n_words]
+
+
+def xor_stream(key, nonce, data_u32: jax.Array, counter0: int = 0) -> jax.Array:
+    """XOR a flat uint32 array with the keystream (encrypt == decrypt)."""
+    flat = data_u32.reshape(-1).astype(jnp.uint32)
+    ks = keystream(key, nonce, flat.shape[0], counter0)
+    return (flat ^ ks).reshape(data_u32.shape)
+
+
+encrypt_u32 = xor_stream
+decrypt_u32 = xor_stream

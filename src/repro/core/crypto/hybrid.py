@@ -1,0 +1,71 @@
+"""Hybrid archival encryption: R-LWE KEM + ChaCha20 bulk layer.
+
+This is the quantum-safe archival path of Salient Store: every archived block
+is encrypted under a fresh session key encapsulated with the lattice KEM, so
+the store-now-decrypt-later adversary faces the R-LWE problem, while the bulk
+bytes only pay a stream-cipher XOR (vectorized on the VPU, near-memory on the
+"CSD" shard).  The design is programmable per the paper's requirement —
+session keys rotate per block / per epoch by construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crypto import rlwe
+from repro.core.crypto.chacha import xor_stream
+
+__all__ = ["SealedBlock", "seal", "unseal", "bytes_to_u32", "u32_to_bytes"]
+
+
+class SealedBlock(NamedTuple):
+    kem_c1: jax.Array  # (1, n) int32
+    kem_c2: jax.Array  # (1, n) int32
+    nonce: jax.Array  # (3,) uint32
+    body: jax.Array  # uint32 payload, same shape as the input
+    n_valid_u32: int  # logical length (payload may be padded by callers)
+
+
+def bytes_to_u32(data: bytes) -> jax.Array:
+    """Little-endian pack, zero-padded to a multiple of 4 bytes."""
+    import numpy as np
+
+    pad = (-len(data)) % 4
+    buf = np.frombuffer(data + b"\0" * pad, dtype="<u4")
+    return jnp.asarray(buf)
+
+
+def u32_to_bytes(words: jax.Array, n_bytes: int) -> bytes:
+    import numpy as np
+
+    return np.asarray(words).astype("<u4").tobytes()[:n_bytes]
+
+
+def seal(
+    pub: rlwe.PublicKey,
+    payload_u32: jax.Array,
+    key: jax.Array,
+    params: rlwe.RLWEParams = rlwe.RLWEParams(),
+) -> SealedBlock:
+    """Encrypt a uint32 payload under a fresh encapsulated session key."""
+    k_kem, k_nonce = jax.random.split(key)
+    ct, session = rlwe.kem_encapsulate(pub, k_kem, params)
+    nonce = jax.random.randint(
+        k_nonce, (3,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    ).astype(jnp.uint32)
+    body = xor_stream(session, nonce, payload_u32)
+    return SealedBlock(ct.c1, ct.c2, nonce, body, int(payload_u32.size))
+
+
+def unseal(
+    s: jax.Array,
+    block: SealedBlock,
+    params: rlwe.RLWEParams = rlwe.RLWEParams(),
+) -> jax.Array:
+    session = rlwe.kem_decapsulate(
+        s, rlwe.Ciphertext(block.kem_c1, block.kem_c2), params
+    )
+    return xor_stream(session, block.nonce, block.body)

@@ -1,0 +1,140 @@
+"""Ring-LWE public-key encryption / KEM (Salient Store §4, Alg. 3).
+
+Paper-faithful parameters: ring dimension n = 256 (the HSPM services degree-256
+polynomials with 128 MAC lanes), 13-bit modulus q = 12289 (the SDMM packs
+13-bit "signed Gaussian" samples), centered-binomial error distribution
+(psi_16, sigma ~= 2.83 — the signed-sampling trick of Liu et al. cited by the
+paper).  The encryption equation is the paper's ``d = a.b + c`` dataflow:
+
+    keygen:   b_pk = a o s + e
+    encrypt:  C1 = a o r + e1,        (Alg. 3 line 4, "utilizing HSPM")
+              C2 = b_pk o r + e2 + encode(m)   (line 5, "employing SDMM")
+    decrypt:  m  = decode(C2 - C1 o s)
+
+All polynomial products route through the Pallas MXU kernel
+(``kernels/polymul``) in the bulk fixed-key layout.
+
+This is a systems reproduction of the paper's accelerator, not an audited
+cryptographic implementation (no CCA transform, no constant-time host code).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.polymul.ops import polymul_fixed
+
+__all__ = [
+    "RLWEParams",
+    "PublicKey",
+    "Ciphertext",
+    "keygen",
+    "encrypt_bits",
+    "decrypt_bits",
+    "kem_encapsulate",
+    "kem_decapsulate",
+    "pack_bits_u32",
+    "unpack_bits_u32",
+]
+
+
+class RLWEParams(NamedTuple):
+    n: int = 256  # ring dimension (x^n + 1)
+    q: int = 12289  # 13-bit modulus (NewHope-style, matches paper's samples)
+    cbd_k: int = 16  # centered binomial psi_k, sigma = sqrt(k/2)
+
+
+class PublicKey(NamedTuple):
+    a: jax.Array  # (n,) uniform public polynomial
+    b: jax.Array  # (n,) a o s + e
+
+
+class Ciphertext(NamedTuple):
+    c1: jax.Array  # (B, n)
+    c2: jax.Array  # (B, n)
+
+
+def _sample_uniform(key, shape, q):
+    return jax.random.randint(key, shape, 0, q, dtype=jnp.int32)
+
+
+def _sample_cbd(key, shape, k, q):
+    """Centered binomial psi_k in [0, q) (mod-q representation)."""
+    bits = jax.random.bernoulli(key, 0.5, shape + (2 * k,)).astype(jnp.int32)
+    e = bits[..., :k].sum(-1) - bits[..., k:].sum(-1)  # in [-k, k]
+    return jnp.mod(e, q).astype(jnp.int32)
+
+
+def keygen(key: jax.Array, params: RLWEParams = RLWEParams()):
+    """Returns (PublicKey, secret s)."""
+    n, q, k = params
+    ka, ks, ke = jax.random.split(key, 3)
+    a = _sample_uniform(ka, (n,), q)
+    s = _sample_cbd(ks, (n,), k, q)
+    e = _sample_cbd(ke, (n,), k, q)
+    b = jnp.mod(polymul_fixed(a, s[None, :], q)[0] + e, q)
+    return PublicKey(a, b), s
+
+
+def encrypt_bits(
+    pub: PublicKey, m_bits: jax.Array, key: jax.Array, params: RLWEParams = RLWEParams()
+) -> Ciphertext:
+    """Encrypt a batch of bit-vectors. m_bits: (B, n) in {0, 1}."""
+    n, q, k = params
+    B = m_bits.shape[0]
+    kr, k1, k2 = jax.random.split(key, 3)
+    r = _sample_cbd(kr, (B, n), k, q)
+    e1 = _sample_cbd(k1, (B, n), k, q)
+    e2 = _sample_cbd(k2, (B, n), k, q)
+    half_q = q // 2
+    c1 = jnp.mod(polymul_fixed(pub.a, r, q) + e1, q)
+    c2 = jnp.mod(polymul_fixed(pub.b, r, q) + e2 + m_bits.astype(jnp.int32) * half_q, q)
+    return Ciphertext(c1, c2)
+
+
+def decrypt_bits(
+    s: jax.Array, ct: Ciphertext, params: RLWEParams = RLWEParams()
+) -> jax.Array:
+    """Decrypt to (B, n) bits."""
+    n, q, k = params
+    d = jnp.mod(ct.c2 - polymul_fixed(s, ct.c1, q), q)
+    # bit = 1 iff d is closer to q/2 than to 0 (mod q)
+    return ((d > q // 4) & (d < 3 * q // 4)).astype(jnp.int32)
+
+
+def pack_bits_u32(bits: jax.Array) -> jax.Array:
+    """(..., 32*w) {0,1} -> (..., w) uint32, little-endian bit order."""
+    *lead, nb = bits.shape
+    assert nb % 32 == 0, nb
+    b = bits.reshape(*lead, nb // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return (b * weights).sum(-1).astype(jnp.uint32)
+
+
+def unpack_bits_u32(words: jax.Array, nbits: int) -> jax.Array:
+    """(..., w) uint32 -> (..., nbits) {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * 32)[..., :nbits].astype(
+        jnp.int32
+    )
+
+
+def kem_encapsulate(pub: PublicKey, key: jax.Array, params: RLWEParams = RLWEParams()):
+    """Returns (Ciphertext, shared_key (8,) uint32 = 256 bits)."""
+    n, q, k = params
+    kb, ke = jax.random.split(key)
+    m = jax.random.bernoulli(kb, 0.5, (1, n)).astype(jnp.int32)
+    ct = encrypt_bits(pub, m, ke, params)
+    shared = pack_bits_u32(m[0])
+    return ct, shared
+
+
+def kem_decapsulate(
+    s: jax.Array, ct: Ciphertext, params: RLWEParams = RLWEParams()
+) -> jax.Array:
+    m = decrypt_bits(s, ct, params)
+    return pack_bits_u32(m[0])

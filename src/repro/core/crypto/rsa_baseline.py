@@ -1,0 +1,54 @@
+"""RSA-512 software baseline for the Fig. 7 encryption comparison.
+
+The paper compares its FPGA lattice engine against software/FPGA RSA.  This
+module provides the *software RSA* work profile: textbook RSA over a 511-bit
+modulus built from two fixed primes (2^256 - 189 and 2^255 - 19, both prime),
+e = 65537, square-and-multiply modexp on the host CPU.  It exists purely as a
+measured baseline — it is not a hardened RSA implementation (no OAEP, fixed
+primes).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+__all__ = ["RSA_P", "RSA_Q", "rsa_keypair", "rsa_encrypt_int", "rsa_decrypt_int",
+           "rsa_encrypt_blocks", "rsa_decrypt_blocks"]
+
+RSA_P = (1 << 256) - 189  # largest prime below 2^256
+RSA_Q = (1 << 255) - 19  # the Curve25519 prime
+_E = 65537
+
+
+def rsa_keypair() -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Returns ((n, e), (n, d))."""
+    n = RSA_P * RSA_Q
+    lam = (RSA_P - 1) * (RSA_Q - 1)
+    d = pow(_E, -1, lam)
+    return (n, _E), (n, d)
+
+
+def rsa_encrypt_int(m: int, pub: Tuple[int, int]) -> int:
+    n, e = pub
+    assert 0 <= m < n
+    return pow(m, e, n)
+
+
+def rsa_decrypt_int(c: int, priv: Tuple[int, int]) -> int:
+    n, d = priv
+    return pow(c, d, n)
+
+
+def rsa_encrypt_blocks(data: bytes, pub: Tuple[int, int]) -> List[int]:
+    """Encrypt in 48-byte blocks (< 511-bit modulus)."""
+    out = []
+    for i in range(0, len(data), 48):
+        out.append(rsa_encrypt_int(int.from_bytes(data[i : i + 48], "little"), pub))
+    return out
+
+
+def rsa_decrypt_blocks(blocks: List[int], n_bytes: int, priv) -> bytes:
+    out = bytearray()
+    for c in blocks:
+        out += rsa_decrypt_int(c, priv).to_bytes(64, "little")[:48]
+    return bytes(out[:n_bytes])

@@ -1,0 +1,176 @@
+"""Analytical latency/data-movement model of the storage system (§5 figures).
+
+The container has no SmartSSDs, so the paper's *hardware* numbers (Figs 4, 5,
+6, 10, 11 and Table 2) are reproduced with a structural cost model:
+every scenario is decomposed into link transfers + compute stages, with
+bandwidths/rates as explicit parameters.  The defaults below are calibrated
+so the model reproduces the paper's published ratios (see
+benchmarks/table2_placement.py etc.; EXPERIMENTS.md reports model-vs-paper
+error per figure).  The same model drives placement decisions at runtime
+(csd/placement.py) — it is the framework's storage scheduler, not just a
+benchmark artifact.
+
+Key structural facts encoded:
+  * classical path ships RAW bytes over the host link and archives on the
+    storage-server CPU;
+  * the CSD path computes AT the data (SSD-internal bandwidth), ships only
+    COMPRESSED+ENCRYPTED bytes peer-to-peer — the paper's entire thesis;
+  * CSD compute rate ~= 3.9x storage-CPU rate (Table 2 row 2);
+  * multi-node remote access suffers contention growing with node count
+    (Fig. 10's super-linear latency).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+__all__ = ["SystemModel", "classical_archive", "vss_archive", "csd_archive",
+           "multinode_latency", "multinode_movement_latency", "csd_ratio_tradeoff"]
+
+
+class SystemModel(NamedTuple):
+    host_link_GBps: float = 3.2  # host <-> storage bus (effective)
+    p2p_GBps: float = 6.4  # CSD peer-to-peer PCIe
+    ssd_internal_GBps: float = 9.6  # SSD internal bandwidth feeding the FPGA
+    cpu_rate_GBps: float = 0.55  # storage-CPU archival pipeline throughput
+    csd_speedup: float = 3.9  # Table 2: CSD kernel vs CPU kernel
+    ssd_write_GBps: float = 2.0
+    network_GBps: float = 1.25  # inter storage-node (10 GbE)
+    contention: float = 0.55  # per-extra-node network contention factor
+    compress_ratio: float = 6.1  # paper's data-volume reduction (Fig. 5c)
+    vss_factor: float = 1.38  # VSS speedup over classical (Fig. 5b ratio)
+    stripe_serial_frac: float = 0.25  # non-parallel stripe work (parity,
+    # coordination, metadata) — system-level only; Table 2's independent
+    # streams scale near-linearly, Fig. 11's shared stripe does not.
+
+    @property
+    def csd_rate_GBps(self) -> float:
+        return self.cpu_rate_GBps * self.csd_speedup
+
+
+class ArchiveCost(NamedTuple):
+    latency_s: float
+    moved_bytes: float  # bytes crossing host/network links (the Fig. 5c metric)
+
+
+def classical_archive(sys: SystemModel, raw_bytes: float) -> ArchiveCost:
+    """Raw video -> host link -> storage CPU (compress+encrypt+RAID) -> disks.
+
+    All scenarios model *streamed/pipelined* stages: latency = the bottleneck
+    stage (max), not the sum — this is what reproduces the paper's Table 2
+    curve (3.9x single CSD -> 7.7x at 50/50; a summed model caps at ~6.5x).
+    """
+    out = raw_bytes / sys.compress_ratio
+    lat = max(
+        raw_bytes / (sys.host_link_GBps * 1e9),
+        raw_bytes / (sys.cpu_rate_GBps * 1e9),
+        out / (sys.ssd_write_GBps * 1e9),
+    )
+    return ArchiveCost(lat, raw_bytes)
+
+
+def vss_archive(sys: SystemModel, raw_bytes: float) -> ArchiveCost:
+    """VSS (Haynes et al.): better data organization/caching, same data path."""
+    base = classical_archive(sys, raw_bytes)
+    return ArchiveCost(base.latency_s / sys.vss_factor, raw_bytes)
+
+
+def csd_archive(
+    sys: SystemModel, raw_bytes: float, split: Sequence[float] = (1.0,)
+) -> ArchiveCost:
+    """Salient Store: data already resides on CSD shards (fractions ``split``);
+    each FPGA archives its fraction in parallel; only compressed bytes move
+    peer-to-peer to their parity/placement targets."""
+    assert abs(sum(split) - 1.0) < 1e-6, split
+    out = raw_bytes / sys.compress_ratio
+    frac = max(split)  # slowest shard bounds the stripe (pipelined stages)
+    lat = max(
+        frac * raw_bytes / (sys.csd_rate_GBps * 1e9),  # FPGA archival kernels
+        frac * raw_bytes / (sys.ssd_internal_GBps * 1e9),  # flash -> FPGA feed
+        out / (sys.p2p_GBps * 1e9),  # sealed bytes, peer-to-peer
+        out / (sys.ssd_write_GBps * 1e9),
+    )
+    return ArchiveCost(lat, out)
+
+
+def cpu_on_csd_data(sys: SystemModel, raw_bytes: float) -> ArchiveCost:
+    """Table 2 row 1: data on CSD but kernels on the host CPU — raw bytes must
+    cross the host link first (pipelined with CPU compute)."""
+    out = raw_bytes / sys.compress_ratio
+    lat = max(
+        raw_bytes / (sys.host_link_GBps * 1e9),
+        raw_bytes / (sys.cpu_rate_GBps * 1e9),
+        out / (sys.ssd_write_GBps * 1e9),
+    )
+    return ArchiveCost(lat, raw_bytes)
+
+
+def multinode_movement_latency(
+    sys: SystemModel, raw_bytes: float, n_nodes: int
+) -> float:
+    """Fig. 10: *data-movement* latency when one application's data is spread
+    over N storage servers.  A (1 - 1/N) fraction needs a remote hop, and the
+    network contends with the other N-1 servers' traffic — super-linear
+    growth, the paper's "keep an application's data on one server" advice."""
+    if n_nodes <= 1:
+        return 0.0
+    remote_bytes = raw_bytes * (1.0 - 1.0 / n_nodes)
+    eff_net = sys.network_GBps * 1e9 / (1.0 + sys.contention * (n_nodes - 1))
+    return remote_bytes / eff_net
+
+
+def multinode_latency(
+    sys: SystemModel, raw_bytes: float, n_nodes: int, locality: float = 0.8
+) -> ArchiveCost:
+    """Fig. 6 (Salient Store row): total archival on N storage nodes.  Compute
+    parallelizes over nodes; the (1 - locality) remote fraction crosses the
+    contended network *compressed at the ingest CSD* — the near-data thesis
+    applied to the network hop.  Speedup over the classical row is sub-linear
+    in N (movement grows super-linearly)."""
+    per_node = raw_bytes / n_nodes
+    local = csd_archive(sys, per_node)
+    remote_raw = raw_bytes * (1.0 - locality)
+    net_lat = multinode_movement_latency(
+        sys, remote_raw / sys.compress_ratio, n_nodes
+    )
+    moved = local.moved_bytes * n_nodes + (remote_raw / sys.compress_ratio) * (
+        1.0 - 1.0 / n_nodes
+    )
+    return ArchiveCost(local.latency_s + net_lat, moved)
+
+
+def classical_multinode_latency(
+    sys: SystemModel, raw_bytes: float, n_nodes: int, locality: float = 0.8
+) -> ArchiveCost:
+    """Fig. 6 (classical row): same fragmentation, but remote traffic is RAW
+    (compression happens only at the destination storage CPU)."""
+    per_node = raw_bytes / n_nodes
+    local = classical_archive(sys, per_node)
+    remote_raw = raw_bytes * (1.0 - locality)
+    net_lat = multinode_movement_latency(sys, remote_raw, n_nodes)
+    moved = local.moved_bytes * n_nodes + remote_raw * (1.0 - 1.0 / n_nodes)
+    return ArchiveCost(local.latency_s + net_lat, moved)
+
+
+def csd_ratio_tradeoff(
+    sys: SystemModel,
+    raw_bytes: float,
+    n_ssd: int,
+    n_csd: int,
+    csd_cost: float = 15.0,
+    ssd_cost: float = 1.0,
+):
+    """Fig. 11: speedup and cost-normalized benefit of n_csd CSDs serving
+    n_ssd SSDs.  Compute parallelism scales with CSDs (minus the serial
+    stripe fraction) until the SSD write tier saturates; CSDs cost ~15x an
+    SSD, so the cost-normalized optimum lands at the paper's 8:1 knee."""
+    single = csd_archive(sys, raw_bytes, (1.0,)).latency_s
+    sf = sys.stripe_serial_frac
+    parallel_lat = sf * single + (1.0 - sf) * single / n_csd
+    out = raw_bytes / sys.compress_ratio
+    write_floor = out / (sys.ssd_write_GBps * 1e9 * max(n_ssd, 1))
+    lat = max(parallel_lat, write_floor)
+    base = classical_archive(sys, raw_bytes).latency_s
+    speedup = base / lat
+    cost = n_csd * csd_cost + n_ssd * ssd_cost
+    return speedup, speedup / cost

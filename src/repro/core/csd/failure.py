@@ -1,0 +1,131 @@
+"""Failure management for intermittent edge servers (paper §1, contribution 2).
+
+Three mechanisms, mapped to pod scale:
+
+* **Straggler monitor** — EWMA of per-shard step times; shards slower than
+  ``straggler_factor`` x median are flagged and the placement engine moves
+  streams off them (paper: load imbalance dominates, Table 2).
+* **Shard-loss detection + parity rebuild** — a dead shard's archival data is
+  reconstructed from RAID-5/6 parity (core/archival/raid.py), the TPU
+  analogue of a failed CSD being rebuilt from the redundancy stripe.
+* **Power-loss journaling** — archival blocks commit atomically via a
+  manifest (write body -> fsync -> append manifest record); a restart replays
+  the manifest and discards torn writes.  Used by train/checkpoint.py too.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+__all__ = ["StragglerMonitor", "ShardStatus", "Journal"]
+
+
+class ShardStatus(NamedTuple):
+    speed: List[float]  # EWMA relative speed per shard (1 = median pace)
+    stragglers: List[int]
+    dead: List[int]
+
+
+class StragglerMonitor:
+    """Tracks per-shard step latencies; flags stragglers and dead shards."""
+
+    def __init__(
+        self,
+        n_shards: int,
+        alpha: float = 0.3,
+        straggler_factor: float = 1.5,
+        dead_factor: float = 10.0,
+    ):
+        self.n = n_shards
+        self.alpha = alpha
+        self.straggler_factor = straggler_factor
+        self.dead_factor = dead_factor
+        self.ewma: List[Optional[float]] = [None] * n_shards
+
+    def update(self, step_times: Sequence[Optional[float]]) -> ShardStatus:
+        """step_times[i] = seconds for shard i this step (None = no heartbeat)."""
+        for i, t in enumerate(step_times):
+            if t is None:
+                continue
+            self.ewma[i] = (
+                t if self.ewma[i] is None else self.alpha * t + (1 - self.alpha) * self.ewma[i]
+            )
+        known = sorted(t for t in self.ewma if t is not None)
+        if not known:
+            return ShardStatus([1.0] * self.n, [], [])
+        mid = len(known) // 2
+        med = known[mid] if len(known) % 2 else 0.5 * (known[mid - 1] + known[mid])
+        speed, stragglers, dead = [], [], []
+        for i, t in enumerate(self.ewma):
+            if t is None:
+                speed.append(0.0)
+                dead.append(i)
+            else:
+                rel = med / t
+                speed.append(rel)
+                if t > self.dead_factor * med:
+                    dead.append(i)
+                elif t > self.straggler_factor * med:
+                    stragglers.append(i)
+        return ShardStatus(speed, stragglers, dead)
+
+
+class Journal:
+    """Append-only commit journal with atomic records (power-loss safe).
+
+    Record layout: one JSON object per line, written AFTER its payload file is
+    durably on disk; replay keeps only records whose payload exists and whose
+    length matches — torn payloads are discarded, exactly the paper's
+    "data integrity ... during power disruptions" requirement.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.path = os.path.join(root, "journal.jsonl")
+
+    def commit(self, name: str, payload: bytes, meta: Optional[Dict] = None) -> str:
+        body_path = os.path.join(self.root, name)
+        tmp = body_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, body_path)
+        rec = {
+            "name": name,
+            "bytes": len(payload),
+            "ts": time.time(),
+            "meta": meta or {},
+        }
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        return body_path
+
+    def replay(self) -> List[Dict]:
+        """Valid committed records, in order; torn writes dropped."""
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn journal tail
+                p = os.path.join(self.root, rec["name"])
+                if os.path.exists(p) and os.path.getsize(p) == rec["bytes"]:
+                    out.append(rec)
+        return out
+
+    def read(self, name: str) -> bytes:
+        with open(os.path.join(self.root, name), "rb") as f:
+            return f.read()

@@ -1,0 +1,40 @@
+"""Synthetic token stream for LM training (deterministic, drift-aware).
+
+Markov-ish token sequences whose transition structure shifts every
+``drift_period`` batches — exercises the continuous-learning path for the LM
+architectures the same way the video streams do for the codec.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TokenStreamConfig", "sample_batch"]
+
+
+class TokenStreamConfig(NamedTuple):
+    vocab: int
+    seq_len: int
+    batch: int
+    drift_period: int = 100
+    n_modes: int = 4  # distinct "domains" cycled by drift
+
+
+def sample_batch(cfg: TokenStreamConfig, step: int) -> Dict[str, jnp.ndarray]:
+    """Deterministic batch for ``step``; labels = next-token shift."""
+    mode = (step // cfg.drift_period) % cfg.n_modes
+    key = jax.random.PRNGKey(step * 7919 + mode)
+    k1, k2 = jax.random.split(key)
+    # mode-dependent vocab band + shared band: drift = band migration
+    band = cfg.vocab // (cfg.n_modes + 1)
+    base = jax.random.randint(
+        k1, (cfg.batch, cfg.seq_len), mode * band, (mode + 1) * band
+    )
+    shared = jax.random.randint(k2, (cfg.batch, cfg.seq_len), cfg.n_modes * band, cfg.vocab)
+    pick = jax.random.bernoulli(k2, 0.3, base.shape)
+    tokens = jnp.where(pick, shared, base).astype(jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}

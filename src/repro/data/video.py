@@ -1,0 +1,74 @@
+"""Synthetic video stream generator (continuous-learning workload).
+
+Deterministic, seeded streams of smooth moving-object scenes with occasional
+*distribution drift* (new object classes appear) — the paper's continuous
+learning trigger.  Frames are (H, W, 3) float32 in [0, 1]; each ``VideoStream``
+models one camera with its own rate (frames/s) for the placement engine.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["VideoStream", "make_streams", "render_clip"]
+
+
+class VideoStream(NamedTuple):
+    stream_id: int
+    seed: int
+    height: int
+    width: int
+    fps: float  # relative rate -> placement weight
+    drift_period: int  # frames between new-class appearances
+
+
+def make_streams(n: int, height=64, width=64, base_seed=0) -> List[VideoStream]:
+    return [
+        VideoStream(
+            stream_id=i,
+            seed=base_seed + 1000 * i,
+            height=height,
+            width=width,
+            fps=float(15 * (1 + (i % 4))),  # heterogeneous rates (Table 2)
+            drift_period=64 + 32 * (i % 3),
+        )
+        for i in range(n)
+    ]
+
+
+def render_clip(stream: VideoStream, t0: int, n_frames: int) -> jnp.ndarray:
+    """Render frames [t0, t0 + n_frames) -> (T, H, W, 3).
+
+    Scene: K gaussian blobs orbiting with per-stream phases; after each
+    drift_period a new blob with a distinct color signature appears —
+    the "new class" the exemplar selector should flag.
+    """
+    key = jax.random.PRNGKey(stream.seed)
+    kx, kc = jax.random.split(key)
+    H, W = stream.height, stream.width
+    max_blobs = 8
+    centers0 = jax.random.uniform(kx, (max_blobs, 2), minval=0.2, maxval=0.8)
+    colors = jax.random.uniform(kc, (max_blobs, 3), minval=0.2, maxval=1.0)
+    yy, xx = jnp.mgrid[0:H, 0:W]
+    yy = yy / H
+    xx = xx / W
+
+    ts = t0 + jnp.arange(n_frames)
+    n_active = jnp.minimum(2 + ts // stream.drift_period, max_blobs)  # (T,)
+
+    def frame(t, na):
+        ang = 2 * jnp.pi * (t / 96.0) + jnp.arange(max_blobs)
+        cy = centers0[:, 0] + 0.15 * jnp.sin(ang)
+        cx = centers0[:, 1] + 0.15 * jnp.cos(ang)
+        active = (jnp.arange(max_blobs) < na).astype(jnp.float32)
+        blob = jnp.exp(
+            -(((yy[None] - cy[:, None, None]) ** 2 + (xx[None] - cx[:, None, None]) ** 2))
+            / 0.01
+        ) * active[:, None, None]
+        img = jnp.einsum("khw,kc->hwc", blob, colors)
+        return jnp.clip(img, 0.0, 1.0)
+
+    return jax.vmap(frame)(ts, n_active)

@@ -1,0 +1,70 @@
+"""Per-arch distribution policy: FSDP threshold, optimizer dtype, microbatching.
+
+Derived from HBM budgets (16 GiB / v5e chip, 256 chips/pod):
+
+  * params > 8B  -> FSDP (params/grads sharded over ``data`` too; pure
+    TP-sharded replicas would exceed per-chip HBM).
+  * params > 100B -> bf16 optimizer states (f32 AdamW for 398-400B is 3.2 TB
+    > the pod's 4 TB once params+grads are added).
+  * microbatches sized so saved scan-carry activations stay ~O(1 GiB)/chip
+    (with SP the carry is already L/model_parallel per layer).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.models.config import ModelConfig
+
+__all__ = ["DistPolicy", "policy_for"]
+
+
+class DistPolicy(NamedTuple):
+    fsdp: bool
+    opt_state_dtype: str
+    opt_kind: str  # "adamw" | "adafactor"
+    n_microbatch: int
+    q_chunk: int
+    remat: bool
+    seq_shard: bool  # SP on the residual stream
+    tp: bool = True  # tensor-parallel over `model`; small models (<2B) run
+    # pure-DP over all axes instead — TP-ing a 0.5B model across 16 shards
+    # makes every layer collective-bound (§Perf iteration 3)
+    flash_attn: bool = False  # online-softmax attention (helps the
+    # collective-bound MoE giants; measured neutral/negative on dense/fine-
+    # grained archs at L=4k — see EXPERIMENTS.md §Perf iteration 1)
+    int8_gather: bool = False  # int8 FSDP weight gathers (§Perf iteration 2)
+
+
+def policy_for(cfg: ModelConfig, shape_kind: str = "train") -> DistPolicy:
+    n = cfg.param_count()
+    fsdp = n > 8e9
+    opt_kind = "adafactor" if n > 100e9 else "adamw"
+    opt_dtype = "bfloat16" if n > 100e9 else "float32"
+    # Microbatching multiplies FSDP weight re-gathers (HBM spikes + collective
+    # bytes) while SP already bounds activation carries — so mb stays at 1
+    # except for the dense 100B+ archs whose saved residual carries alone
+    # (88 layers x 100 MB) exceed budget.
+    if n > 100e9 and cfg.moe is None:
+        mb = 2
+    else:
+        mb = 1
+    if shape_kind != "train":
+        mb = 1
+    moe_giant = cfg.moe is not None and n > 100e9
+    # Pure-DP for sub-2B models was measured (§Perf iter 3): collective term
+    # -87%, but the replicated-weight memory traffic raised the net bound
+    # (0.95->1.55s) — so TP stays default; the mechanism remains available.
+    tp = True
+    return DistPolicy(
+        tp=tp,
+        fsdp=fsdp,
+        opt_state_dtype=opt_dtype,
+        opt_kind=opt_kind,
+        n_microbatch=mb,
+        q_chunk=512,
+        remat=True,
+        seq_shard=tp,
+        flash_attn=moe_giant or shape_kind == "prefill",
+        int8_gather=fsdp and n > 100e9,
+    )

@@ -1,0 +1,215 @@
+"""NamedSharding rules: DP / TP / EP / SP / FSDP over the production mesh.
+
+Axis roles (see DESIGN.md §5):
+  * ``data`` (x ``pod``)  — batch DP; FSDP/ZeRO weight+optimizer sharding for
+    the big archs; the *storage-shard* axis for the archival layer; KV-cache
+    batch or sequence sharding for decode shapes.
+  * ``model``             — TP (attention heads / FFN hidden / vocab),
+    EP (MoE experts), SP (residual-stream sequence sharding — this is what
+    bounds scan-carry activation memory for the 88-layer models).
+
+Specs are derived from parameter *path names*, with divisibility guards: an
+axis is only assigned to a dim it divides, so the same rules serve every arch
+and both meshes.  GSPMD/pjit guarantees correctness regardless of the specs;
+these choose the layout.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "data_axes",
+    "param_pspecs",
+    "param_shardings",
+    "make_shard_fn",
+    "batch_pspecs",
+    "cache_pspecs",
+    "tree_shardings",
+]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, spec_entries, shape) -> P:
+    """Drop axes that don't divide their dim (keeps layouts clean/even)."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        if ax is None:
+            out.append(None)
+        elif dim % _axsize(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ----------------------------------------------------------------- params
+def _param_rule(path: str, shape, mesh: Mesh, fsdp: bool):
+    """path: '/'-joined key names; shapes may carry a leading n_super dim."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    fs = "data" if fsdp else None
+    in_moe = "/moe/" in path or path.endswith("moe")
+
+    def pad(*tail):  # fill leading dims (stack dims) with None
+        return [None] * (nd - len(tail)) + list(tail)
+
+    if name == "embed":
+        return _fit(mesh, ["model", fs], shape)
+    if name == "lm_head":
+        return _fit(mesh, [fs, "model"], shape)
+    if name == "frontend_proj":
+        return _fit(mesh, [None, "model"], shape)
+    if name in ("wq", "wk", "wv"):
+        return _fit(mesh, pad(fs, "model"), shape)
+    if name == "wo":
+        return _fit(mesh, pad("model", fs), shape)
+    if name in ("w_in", "w_gate"):
+        if in_moe:  # (S, E, d, f): EP on experts, FSDP on d
+            return _fit(mesh, pad("model", fs, None), shape)
+        return _fit(mesh, pad(fs, "model"), shape)
+    if name == "w_out":
+        if in_moe:  # (S, E, f, d)
+            return _fit(mesh, pad("model", fs, None), shape)
+        return _fit(mesh, pad("model", fs), shape)
+    if name == "router":
+        return P(*([None] * nd))
+    if name == "in_proj":  # (S, d, proj_out)
+        return _fit(mesh, pad(fs, "model"), shape)
+    if name == "out_proj":  # (S, d_in, d)
+        return _fit(mesh, pad("model", fs), shape)
+    if name in ("conv_w",):  # (S, K, ch)
+        return _fit(mesh, pad(None, "model"), shape)
+    if name in ("conv_b", "norm_g", "bq", "bk", "bv"):
+        return _fit(mesh, pad("model"), shape)
+    if name in ("A_log", "dt_bias", "D"):
+        return _fit(mesh, pad("model"), shape)
+    # norms and everything else: replicated
+    return P(*([None] * nd))
+
+
+def param_pspecs(params, mesh: Mesh, fsdp: bool = False, tp: bool = True):
+    def rule(path, leaf):
+        if not tp:  # pure-DP: replicate weights (sub-2B models)
+            return P(*([None] * len(leaf.shape)))
+        keys = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        return _param_rule(keys, leaf.shape, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def tree_shardings(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = False):
+    return tree_shardings(param_pspecs(params, mesh, fsdp), mesh)
+
+
+# ------------------------------------------------------------- activations
+def make_shard_fn(mesh: Mesh, seq_shard: bool = True, tp: bool = True):
+    """Activation constrainer passed into the model as ``shard_fn``."""
+    da = data_axes(mesh) if tp else data_axes(mesh) + ("model",)
+
+    def shard_fn(x, kind: str):
+        if kind == "moe_tokens" and x.ndim == 2:
+            T = x.shape[0]
+            ba = da if T % _axsize(mesh, da) == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba, None))
+            )
+        if kind == "moe_buf" and x.ndim == 3:
+            E, C, _ = x.shape
+            ea = "model" if E % _axsize(mesh, "model") == 0 else None
+            ca = da if C % _axsize(mesh, da) == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ea, ca, None))
+            )
+        if x.ndim != 3:
+            return x
+        B, L, _ = x.shape
+        if kind == "resid":
+            ba = da if B % _axsize(mesh, da) == 0 else None
+            sa = (
+                "model"
+                if seq_shard and L > 1 and L % _axsize(mesh, "model") == 0
+                else None
+            )
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(ba, sa, None)))
+        if kind == "logits":
+            ba = da if B % _axsize(mesh, da) == 0 else None
+            va = "model" if tp else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(ba, None, va))
+            )
+        return x
+
+    shard_fn.mesh = mesh  # lets layers (MoE) opt into shard_map dispatch
+    return shard_fn
+
+
+# ------------------------------------------------------------------ inputs
+def batch_pspecs(mesh: Mesh, tp: bool = True):
+    """tokens/labels (B, L); frontend (B, S, F)."""
+    da = data_axes(mesh) if tp else data_axes(mesh) + ("model",)
+    return {
+        "tokens": P(da, None),
+        "labels": P(da, None),
+        "frontend": P(da, None, None),
+    }
+
+
+# ------------------------------------------------------------------- cache
+def cache_pspecs(cache, mesh: Mesh, batch: int, seq_len: int):
+    """Decode caches: shard batch over data when possible; otherwise (long-
+    context, batch=1) shard the KV sequence dim over every available axis."""
+    da = data_axes(mesh)
+    batch_ok = batch % _axsize(mesh, da) == 0 and batch >= _axsize(mesh, da)
+
+    def rule(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        nd = len(shape)
+        if "kv" in keys or name in ("k", "v"):  # (S_sup, B, S, KV, hd) or (B, S, KV, hd)
+            lead = [None] * (nd - 4)
+            if batch_ok:
+                return _fit(mesh, lead + [da, "model", None, None], shape)
+            return _fit(mesh, lead + [None, da + ("model",), None, None], shape)
+        if "ssm" in keys and name in ("conv",):  # (..., B, K-1, ch)
+            lead = [None] * (nd - 3)
+            return _fit(mesh, lead + [da if batch_ok else None, None, "model"], shape)
+        if "ssm" in keys and name in ("state",):  # (..., B, H, P, N)
+            lead = [None] * (nd - 4)
+            return _fit(
+                mesh, lead + [da if batch_ok else None, "model", None, None], shape
+            )
+        if "cross_kv" in keys:  # (S_sup, B, S_src, KV, hd)
+            lead = [None] * (nd - 4)
+            return _fit(mesh, lead + [da if batch_ok else None, None, None, None], shape)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)

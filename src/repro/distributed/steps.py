@@ -1,0 +1,192 @@
+"""Train / prefill / serve steps — the functions the launcher jits and the
+dry-run lowers for every (arch x shape x mesh) cell.
+
+``train_step``: microbatched fwd+bwd (remat'd scan-over-layers, chunked
+cross-entropy so (B, L, V) logits never materialize) + AdamW.  ``serve_step``:
+one-token decode against preallocated KV/SSM caches.  Sharding enters only
+via ``shard_fn`` and the in/out shardings the caller attaches at jit time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward, output_head
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update
+
+__all__ = ["StepConfig", "loss_fn", "train_step", "prefill_step", "serve_step"]
+
+
+class StepConfig(NamedTuple):
+    remat: bool = True
+    q_chunk: int = 512
+    n_microbatch: int = 1
+    ce_chunk: int = 512
+    aux_weight: float = 0.01
+    opt: AdamWConfig = AdamWConfig(lr=3e-4, grad_clip=1.0)
+    grad_accum_dtype: str = "float32"  # bf16 for the 100B+ archs (policy):
+    # the f32 microbatch accumulator alone is 2 bytes/param of extra HBM
+    int8_gather: bool = False  # int8-compressed FSDP weight gathers (§Perf #2)
+    flash_attn: bool = True  # online-softmax attention (§Perf #1; see policy)
+    unroll: bool = False  # unroll all scans: used by the costing lowering so
+    # HLO cost analysis counts every loop iteration (XLA counts bodies once)
+
+
+def _chunked_ce(hidden, head, labels, chunk: int, unroll: bool = False):
+    """Mean token cross-entropy, scanning over sequence chunks.
+
+    hidden (B, L, d), head (d, V), labels (B, L) -> scalar f32.  Each chunk's
+    logits live only inside the (checkpointed) scan body.
+    """
+    B, L, d = hidden.shape
+    chunk = min(chunk, L)
+    if L % chunk:
+        chunk = L  # fallback: single chunk
+    n = L // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    def body(acc, xs):
+        h, lab = xs
+        logits = (h @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.zeros((), jnp.float32), (hs, ls), unroll=unroll
+    )
+    return tot / (B * L)
+
+
+def loss_fn(params, cfg: ModelConfig, scfg: StepConfig, tokens, labels,
+            frontend=None, shard_fn=lambda x, k: x):
+    hidden, aux = forward(
+        params,
+        cfg,
+        tokens,
+        frontend,
+        q_chunk=scfg.q_chunk,
+        shard_fn=shard_fn,
+        remat=scfg.remat,
+        return_hidden=True,
+        unroll=scfg.unroll,
+        int8_gather=scfg.int8_gather,
+        flash=scfg.flash_attn,
+    )
+    head = output_head(params, cfg)
+    ce = _chunked_ce(hidden, head, labels, scfg.ce_chunk, scfg.unroll)
+    return ce + scfg.aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def train_step(
+    params,
+    opt_state: AdamWState,
+    batch: Dict[str, jax.Array],
+    *,
+    cfg: ModelConfig,
+    scfg: StepConfig,
+    shard_fn=lambda x, k: x,
+):
+    """batch: {'tokens' (B, L), 'labels' (B, L)[, 'frontend']}.
+
+    Microbatching: the global batch is split along B and scanned, averaging
+    gradients — bounds activation memory for the 100B+ archs.
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    frontend = batch.get("frontend")
+    mb = scfg.n_microbatch
+    B = tokens.shape[0]
+    if mb > 1 and B % mb == 0:
+        def one(mtok, mlab, mfe):
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, scfg, mtok, mlab, mfe, shard_fn
+            )
+            return l, m, g
+
+        toks = tokens.reshape(mb, B // mb, -1)
+        labs = labels.reshape(mb, B // mb, -1)
+        fes = (
+            frontend.reshape(mb, B // mb, *frontend.shape[1:])
+            if frontend is not None
+            else None
+        )
+
+        def body(acc, xs):
+            l_acc, g_acc = acc
+            if fes is None:
+                mtok, mlab = xs
+                mfe = None
+            else:
+                mtok, mlab, mfe = xs
+            l, m, g = one(mtok, mlab, mfe)
+            g_acc = jax.tree.map(lambda a, b: (a + b.astype(a.dtype)), g_acc, g)
+            return (l_acc + l, g_acc), m
+
+        acc_dt = (
+            jnp.bfloat16 if scfg.grad_accum_dtype == "bfloat16" else jnp.float32
+        )
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        xs = (toks, labs) if fes is None else (toks, labs, fes)
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_g), xs, unroll=scfg.unroll
+        )
+        loss = loss_sum / mb
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+    else:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, scfg, tokens, labels, frontend, shard_fn
+        )
+    # pin the data-parallel gradient reduction HERE, in the grads' own dtype
+    # (bf16): without the barrier GSPMD defers it past the optimizer's f32
+    # casts and reduces 2x the bytes (measured: all collectives were f32)
+    grads = jax.lax.optimization_barrier(grads)
+    new_params, new_opt = adamw_update(params, grads, opt_state, scfg.opt)
+    metrics = dict(metrics, loss=loss)
+    return new_params, new_opt, metrics
+
+
+def prefill_step(
+    params,
+    tokens,
+    frontend=None,
+    *,
+    cfg: ModelConfig,
+    scfg: StepConfig,
+    shard_fn=lambda x, k: x,
+):
+    """Full-sequence forward (inference prefill); returns last-token logits."""
+    hidden, _ = forward(
+        params,
+        cfg,
+        tokens,
+        frontend,
+        q_chunk=scfg.q_chunk,
+        shard_fn=shard_fn,
+        remat=False,
+        return_hidden=True,
+        unroll=scfg.unroll,
+        flash=scfg.flash_attn,
+    )
+    head = output_head(params, cfg)
+    return hidden[:, -1, :] @ head
+
+
+def serve_step(
+    params,
+    token,
+    cache,
+    pos,
+    *,
+    cfg: ModelConfig,
+    shard_fn=lambda x, k: x,
+    unroll: bool = False,
+):
+    """One decode step: (B, 1) token + caches at seq_len -> next logits."""
+    return decode_step(params, cfg, token, cache, pos, shard_fn=shard_fn, unroll=unroll)

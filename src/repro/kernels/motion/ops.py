@@ -1,0 +1,52 @@
+"""Public jit'd wrappers for block-matching motion estimation."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.motion import ref as _ref
+from repro.kernels.motion.motion import block_motion_pallas
+
+__all__ = ["estimate_motion", "to_luma255", "warp", "predict_frame"]
+
+
+def to_luma255(frame):
+    """(H, W, 3) float [0,1] or (H, W) -> int32 luma in [0, 255]."""
+    if frame.ndim == 3:
+        lum = (
+            0.299 * frame[..., 0] + 0.587 * frame[..., 1] + 0.114 * frame[..., 2]
+        )
+    else:
+        lum = frame
+    if jnp.issubdtype(lum.dtype, jnp.floating):
+        lum = jnp.round(jnp.clip(lum, 0.0, 1.0) * 255.0)
+    return lum.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "radius", "use_kernel"))
+def estimate_motion(cur, prev, *, block: int = 16, radius: int = 8, use_kernel=True):
+    """cur, prev: (H, W[, 3]) frames -> (mv (nby, nbx, 2) int32, sad (nby, nbx) int32)."""
+    cl = to_luma255(cur)
+    pl_ = to_luma255(prev)
+    if not use_kernel:
+        return _ref.block_motion_ref(cl, pl_, block=block, radius=radius)
+    prev_padded = jnp.pad(pl_, ((block, block), (radius, radius)), mode="edge")
+    dy, dx, sad = block_motion_pallas(
+        cl,
+        prev_padded,
+        block=block,
+        radius=radius,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return jnp.stack([dy, dx], axis=-1), sad
+
+
+def warp(prev, mv, block: int = 16):
+    """predict(F_prev, M): works on (H, W) or (H, W, C) float frames."""
+    return _ref.warp_blocks(prev, mv, block)
+
+
+predict_frame = warp

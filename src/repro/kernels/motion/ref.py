@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for block-matching motion estimation + warp (codec C1).
+
+Semantics (Salient Store §3, "Motion Estimation" on DSP slices):
+frames are split into BS x BS blocks; for each block of the *current* frame we
+search the *previous* frame over integer offsets (dy, dx) in [-R, R]^2 and
+pick the offset minimizing the SAD.  ``predict(F_prev, M)`` translates each
+previous-frame block by its motion vector (the paper's macroblock-style
+prediction); the residual is ``F_cur - predict``.
+
+Tie-breaking: the smallest linear offset index wins (scan order), matching the
+kernel exactly so the oracle is bit-identical.  SAD is computed on integer
+luma (int32) so reduction order cannot perturb ties — both ref and kernel are
+exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["block_motion_ref", "warp_blocks", "predict_frame"]
+
+
+def _shift2d(img, dy, dx):
+    """Shift with edge replication: out[y, x] = img[clip(y + dy), clip(x + dx)]."""
+    H, W = img.shape[-2:]
+    ys = jnp.clip(jnp.arange(H) + dy, 0, H - 1)
+    xs = jnp.clip(jnp.arange(W) + dx, 0, W - 1)
+    return img[..., ys, :][..., :, xs]
+
+
+def block_motion_ref(cur, prev, block: int = 16, radius: int = 8):
+    """cur, prev: (H, W) luma. Returns (mv, sad): (nby, nbx, 2) int32, (nby, nbx).
+
+    mv[by, bx] = (dy, dx) into the previous frame minimizing SAD.
+    """
+    H, W = cur.shape
+    assert H % block == 0 and W % block == 0, (H, W, block)
+    nby, nbx = H // block, W // block
+    side = 2 * radius + 1
+
+    cur_b = cur.astype(jnp.int32).reshape(nby, block, nbx, block)
+    best_sad = jnp.full((nby, nbx), jnp.iinfo(jnp.int32).max, jnp.int32)
+    best_o = jnp.zeros((nby, nbx), jnp.int32)
+    for o in range(side * side):
+        dy, dx = o // side - radius, o % side - radius
+        shifted = (
+            _shift2d(prev, dy, dx).astype(jnp.int32).reshape(nby, block, nbx, block)
+        )
+        sad = jnp.abs(cur_b - shifted).sum(axis=(1, 3))
+        take = sad < best_sad  # strict: first (smallest o) wins ties
+        best_sad = jnp.where(take, sad, best_sad)
+        best_o = jnp.where(take, o, best_o)
+    mv = jnp.stack([best_o // side - radius, best_o % side - radius], axis=-1)
+    return mv.astype(jnp.int32), best_sad
+
+
+def warp_blocks(prev, mv, block: int = 16):
+    """predict(F_prev, M): translate each block of prev by its motion vector.
+
+    prev: (H, W) or (H, W, C); mv: (nby, nbx, 2) -> same shape as prev.
+    """
+    chan = prev.ndim == 3
+    img = prev if chan else prev[..., None]
+    H, W, C = img.shape
+    nby, nbx = mv.shape[:2]
+    block_y = jnp.arange(H) // block  # (H,)
+    block_x = jnp.arange(W) // block  # (W,)
+    dy = mv[..., 0][block_y[:, None], block_x[None, :]]  # (H, W)
+    dx = mv[..., 1][block_y[:, None], block_x[None, :]]
+    ys = jnp.clip(jnp.arange(H)[:, None] + dy, 0, H - 1)
+    xs = jnp.clip(jnp.arange(W)[None, :] + dx, 0, W - 1)
+    out = img[ys, xs]  # advanced indexing -> (H, W, C)
+    return out if chan else out[..., 0]
+
+
+def predict_frame(prev, mv, block: int = 16):
+    return warp_blocks(prev, mv, block)

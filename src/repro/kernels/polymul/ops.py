@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for negacyclic polynomial multiplication.
+
+Two entry points:
+
+* ``polymul_fixed(a, vecs, q)`` — one polynomial against many (the R-LWE bulk
+  dataflow: a public/secret key against a batch of ciphertext polynomials).
+  Routed to the Pallas MXU kernel.
+
+* ``polymul(a, b, q)`` — general elementwise-batched product (matrices differ
+  per pair).  Routed to the pure-jnp reference (a per-pair matrix build is the
+  dominant cost either way; XLA fuses it well).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.polymul import ref as _ref
+from repro.kernels.polymul.polymul import DEFAULT_TILE_B, negacyclic_matmul_pallas
+
+__all__ = ["polymul_fixed", "polymul"]
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("q", "use_kernel", "tile_b"))
+def polymul_fixed(
+    a: jax.Array,
+    vecs: jax.Array,
+    q: int,
+    *,
+    use_kernel: bool = True,
+    tile_b: int = DEFAULT_TILE_B,
+) -> jax.Array:
+    """(a * vecs[i]) mod (x^n + 1, q) for every row i.
+
+    a: (n,) int32 in [0, q); vecs: (B, n) int32 in [0, q) -> (B, n).
+    """
+    a = jnp.mod(jnp.asarray(a, jnp.int32), q)
+    vecs = jnp.mod(jnp.asarray(vecs, jnp.int32), q)
+    B, n = vecs.shape
+    if not use_kernel or q >= (1 << 14) or n % 8 != 0:
+        return _ref.negacyclic_matmul_ref(a, vecs, q)
+    nmat = _ref.negacyclic_matrix(a, q)
+    tb = min(tile_b, _round_up(B, 8))
+    pad = (-B) % tb
+    vecs_t = jnp.pad(vecs, ((0, pad), (0, 0))).T  # (n, B + pad)
+    out_t = negacyclic_matmul_pallas(
+        nmat, vecs_t, q, tile_b=tb, interpret=_use_interpret()
+    )
+    return out_t.T[:B]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def polymul(a: jax.Array, b: jax.Array, q: int) -> jax.Array:
+    """General negacyclic product; a, b broadcastable (..., n) -> (..., n)."""
+    return _ref.negacyclic_polymul_ref(a, b, q)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: negacyclic polynomial multiplication on the MXU.
+
+TPU-native re-derivation of the paper's HSPM/SDMM FPGA accelerator
+(Salient Store §4, Fig. 3):
+
+* HSPM streams polynomial ``b`` serially through a 128-lane MAC array while
+  ``a``'s coefficients are broadcast.  On TPU the MAC array is the MXU, so we
+  express the schoolbook product as the structured matmul
+  ``C = N(a) @ B`` with the negacyclic matrix resident in VMEM ("loaded into
+  the systolic array") and a tile of ``B`` columns streamed per grid step.
+
+* SDMM packs *two* modular multiplies per DSP slice using a signed 6-bit
+  sample representation.  The TPU analogue: split every 13/14-bit coefficient
+  into two 7-bit limbs (``x = hi * 2^7 + lo``) so all four partial products
+  are int8 x int8 -> int32 MXU ops, exact in the 32-bit accumulator:
+  ``|sum| <= n * 96 * 127 < 2^22`` for n = 256, q = 12289.
+
+* The paper's approximate modular-reduction unit (one shift + one conditional
+  subtract, constant time) appears here as the recombination step: each
+  partial matmul is reduced once, then
+  ``c = ((2^14 mod q) * t_hh + 2^7 * t_mid + t_ll) mod q``
+  which keeps every intermediate below ``q * 4224 < 2^26`` — a single final
+  reduction, no wide arithmetic, constant time.
+
+Requirements: ``q < 2^14`` (the paper's 13-bit samples satisfy this) and the
+ring dimension ``n`` a multiple of 8 (MXU sublane); n = 256 is two 128-wide
+systolic passes, exactly the paper's 128-MAC geometry doubled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["negacyclic_matmul_pallas", "DEFAULT_TILE_B"]
+
+DEFAULT_TILE_B = 256
+_LIMB_BITS = 7
+_LIMB_MASK = (1 << _LIMB_BITS) - 1
+
+
+def _polymul_kernel(nmat_ref, b_ref, out_ref, *, q: int):
+    """One grid step: (n, n) negacyclic matrix x (n, TILE_B) columns."""
+    nmat = nmat_ref[...]  # int32, centered entries |.| <= q/2
+    b = b_ref[...]  # int32 in [0, q)
+
+    # --- SDMM analogue: two 7-bit limbs per int8 lane -----------------
+    sign = jnp.where(nmat < 0, -1, 1).astype(jnp.int32)
+    mag = jnp.abs(nmat)
+    a_hi = (sign * (mag >> _LIMB_BITS)).astype(jnp.int8)  # |.| <= q/2^8 < 96
+    a_lo = (sign * (mag & _LIMB_MASK)).astype(jnp.int8)  # |.| <= 127
+    b_hi = (b >> _LIMB_BITS).astype(jnp.int8)  # < q/2^7 < 128
+    b_lo = (b & _LIMB_MASK).astype(jnp.int8)
+
+    dot = functools.partial(
+        jax.lax.dot, precision=None, preferred_element_type=jnp.int32
+    )
+    # --- HSPM analogue: systolic passes over the MXU -------------------
+    p_hh = dot(a_hi, b_hi)
+    p_mid = dot(a_hi, b_lo) + dot(a_lo, b_hi)
+    p_ll = dot(a_lo, b_lo)
+
+    # --- approximate-MR analogue: per-partial single reduction ---------
+    t_hh = jnp.mod(p_hh, q)
+    t_mid = jnp.mod(p_mid, q)
+    t_ll = jnp.mod(p_ll, q)
+    two14 = (1 << (2 * _LIMB_BITS)) % q  # e.g. 4095 for q = 12289
+    c = jnp.mod(two14 * t_hh + (1 << _LIMB_BITS) * t_mid + t_ll, q)
+    out_ref[...] = c.astype(jnp.int32)
+
+
+def negacyclic_matmul_pallas(
+    nmat: jax.Array,
+    vecs_t: jax.Array,
+    q: int,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = (N(a) @ B) mod q on the MXU.
+
+    nmat:   (n, n) int32 negacyclic matrix, centered entries (|.| <= q/2).
+    vecs_t: (n, B) int32 columns in [0, q), B a multiple of ``tile_b``
+            (callers pad; see ops.py).
+    Returns (n, B) int32 in [0, q).
+    """
+    if q >= (1 << 14):
+        raise ValueError(f"int8 limb path requires q < 2^14, got q={q}")
+    n, n2 = nmat.shape
+    if n != n2:
+        raise ValueError(f"nmat must be square, got {nmat.shape}")
+    nb, B = vecs_t.shape
+    if nb != n:
+        raise ValueError(f"vecs_t rows {nb} != ring dim {n}")
+    if B % tile_b != 0:
+        raise ValueError(f"B={B} not a multiple of tile_b={tile_b}")
+    if n % 8 != 0:
+        raise ValueError(f"ring dim n={n} must be a multiple of 8")
+
+    grid = (B // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_polymul_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # matrix resident in VMEM
+            pl.BlockSpec((n, tile_b), lambda i: (0, i)),  # stream column tiles
+        ],
+        out_specs=pl.BlockSpec((n, tile_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, B), jnp.int32),
+        interpret=interpret,
+    )(nmat, vecs_t)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for negacyclic polynomial multiplication in Z_q[x]/(x^n + 1).
+
+This is the reference semantics for the HSPM/SDMM hardware of the paper
+(Salient Store §4, Fig. 3): schoolbook polynomial multiplication with
+modular reduction.  The negacyclic product is
+
+    c_k = sum_{i+j = k} a_i b_j  -  sum_{i+j = k+n} a_i b_j   (mod q)
+
+which is exactly the mat-vec ``c = N(a) @ b`` with the negacyclic-circulant
+matrix ``N(a)[k, j] = a_{k-j}`` for ``k >= j`` and ``-a_{n+k-j}`` otherwise.
+
+All arithmetic here is exact in int32: operands are first mapped to the
+centered representation ``|x| <= q/2`` and the contraction is accumulated in
+chunks with a modular reduction between chunks, so no partial sum ever
+exceeds ``chunk * (q/2)^2 < 2^31`` for the q used by the paper (13-bit).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "negacyclic_matrix",
+    "negacyclic_polymul_ref",
+    "negacyclic_matmul_ref",
+    "center",
+]
+
+
+def center(x, q: int):
+    """Map coefficients from [0, q) to the centered representation (-q/2, q/2]."""
+    x = jnp.mod(jnp.asarray(x, jnp.int32), q)
+    return jnp.where(x > q // 2, x - q, x)
+
+
+def negacyclic_matrix(a, q: int):
+    """Build N(a) with entries in the centered representation.
+
+    a: (..., n) int32 in [0, q)  ->  (..., n, n) int32, |entries| <= q/2.
+    ``c = N(a) @ b (mod q)`` is the negacyclic product ``a * b``.
+    """
+    a = center(a, q)
+    n = a.shape[-1]
+    k = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    idx = jnp.mod(k - j, n)
+    sign = jnp.where(k >= j, 1, -1).astype(jnp.int32)
+    return jnp.take(a, idx, axis=-1) * sign
+
+
+def _safe_chunk(q: int, chunk: int, n: int) -> int:
+    """Largest chunk <= requested with chunk * (q/2 + 1)^2 + q < 2^31 (exact)."""
+    bound = (2**31 - q - 1) // ((q // 2 + 1) ** 2)
+    return max(1, min(chunk, bound, n))
+
+
+def _chunked_mod_matvec(mat, vec, q: int, chunk: int):
+    """Exact (mat @ vec) mod q with int32-only arithmetic.
+
+    mat: (..., n, n) centered entries; vec: (..., n) centered entries.
+    The contraction dim is split into chunks with a mod-q between chunks so
+    partial sums stay below 2^31 (chunk * (q/2)^2 bound, chunk auto-shrunk
+    for large q).
+    """
+    n = mat.shape[-1]
+    chunk = _safe_chunk(q, chunk, n)
+    acc = jnp.zeros(mat.shape[:-1], jnp.int32)
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        part = jnp.einsum(
+            "...kj,...j->...k", mat[..., lo:hi], vec[..., lo:hi]
+        )
+        acc = jnp.mod(acc + part, q)
+    return acc.astype(jnp.int32)
+
+
+def negacyclic_polymul_ref(a, b, q: int, *, chunk: int = 32):
+    """Negacyclic product a*b mod (x^n+1, q). a, b: (..., n) -> (..., n)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    mat = negacyclic_matrix(a, q)
+    vec = center(b, q)
+    return _chunked_mod_matvec(mat, vec, q, chunk)
+
+
+def negacyclic_matmul_ref(a, vecs, q: int, *, chunk: int = 32):
+    """Fixed-a bulk product: a (n,), vecs (B, n) -> (B, n), all mod q.
+
+    This is the R-LWE bulk dataflow (one public key / secret key against many
+    ciphertext polynomials) and matches the Pallas kernel's contract.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    vecs = jnp.asarray(vecs, jnp.int32)
+    mat = negacyclic_matrix(a, q)  # (n, n)
+    vc = center(vecs, q)  # (B, n)
+    n = mat.shape[-1]
+    ch = _safe_chunk(q, chunk, n)
+    acc = jnp.zeros((vc.shape[0], n), jnp.int32)
+    for lo in range(0, n, ch):
+        hi = min(lo + ch, n)
+        part = jnp.einsum("kj,bj->bk", mat[:, lo:hi], vc[:, lo:hi])
+        acc = jnp.mod(acc + part, q)
+    return acc.astype(jnp.int32)

@@ -1,0 +1,43 @@
+"""Public jit'd wrappers for blockwise int8 quantization."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ref as _ref
+from repro.kernels.quantize.quantize import dequantize_pallas, quantize_pallas
+
+__all__ = ["quantize_blockwise", "dequantize_blockwise"]
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def quantize_blockwise(x, block: int = 128, use_kernel: bool = True):
+    """x: (..., N) float -> (int8 same shape, f32 scales (..., N/block))."""
+    *lead, n = x.shape
+    flat = x.reshape(-1, n)
+    R = flat.shape[0]
+    if not use_kernel or n % block or R % 8:
+        q, s = _ref.quantize_ref(flat, block)
+    else:
+        q, s = quantize_pallas(flat, block, interpret=_use_interpret())
+    return q.reshape(*lead, n), s.reshape(*lead, n // block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "dtype", "use_kernel"))
+def dequantize_blockwise(q, scales, block: int = 128, dtype=jnp.float32,
+                         use_kernel: bool = True):
+    *lead, n = q.shape
+    flat_q = q.reshape(-1, n)
+    flat_s = scales.reshape(-1, n // block)
+    if not use_kernel or n % block or flat_q.shape[0] % 8:
+        out = _ref.dequantize_ref(flat_q, flat_s, block, dtype)
+    else:
+        out = dequantize_pallas(flat_q, flat_s, block, dtype, interpret=_use_interpret())
+    return out.reshape(*lead, n)

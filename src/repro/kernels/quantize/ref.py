@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for fused blockwise symmetric int8 quantization.
+
+Semantics shared by the codec bitstream, the gradient compressor and the
+int8 KV-cache: rows are quantized in blocks of ``block`` elements with one
+f32 scale per block (absmax/127), values rounded-to-nearest-even and clipped
+to [-127, 127].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["quantize_ref", "dequantize_ref"]
+
+
+def quantize_ref(x, block: int = 128):
+    """x: (..., N) float, N % block == 0 ->
+    (q (..., N) int8, scales (..., N/block) float32)."""
+    *lead, n = x.shape
+    assert n % block == 0, (n, block)
+    xb = x.astype(jnp.float32).reshape(*lead, n // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, n), scale
+
+
+def dequantize_ref(q, scales, block: int = 128, dtype=jnp.float32):
+    *lead, n = q.shape
+    qb = q.reshape(*lead, n // block, block).astype(jnp.float32)
+    return (qb * scales[..., None]).reshape(*lead, n).astype(dtype)

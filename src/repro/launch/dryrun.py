@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * build ShapeDtypeStruct stand-ins (launch/specs.py) — zero allocation;
+  * jit the train/prefill/serve step with the production NamedShardings;
+  * ``.lower().compile()`` on the 16x16 single-pod mesh AND the 2x16x16
+    multi-pod mesh;
+  * print ``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs/bytes);
+  * parse collective bytes from the compiled HLO;
+  * append one JSON record per cell to --out (incremental, resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out results/dryrun] [--skip-done]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+
+
+def _json_default(o):
+    return str(o)
+
+
+def costing_flops(arch: str, shape: str) -> dict:
+    """Global (unpartitioned) FLOPs/bytes from an *unrolled* lowering.
+
+    XLA's cost analysis counts while/scan bodies once; unrolling every scan
+    (layers, CE chunks, microbatches) makes HLO_FLOPs exact.  q_chunk=0
+    removes the attention chunking scan (same FLOPs, no loop).  No compile,
+    no mesh, no allocation — pure abstract tracing.
+    """
+    import functools
+
+    from repro.distributed.steps import prefill_step, serve_step, train_step
+    from repro.launch.specs import cell_specs
+
+    spec = cell_specs(arch, shape)
+    cfg, sp = spec.cfg, spec.shape
+    scfg = spec.step_cfg._replace(unroll=True, q_chunk=0)
+    if sp.kind == "train":
+        step = functools.partial(train_step, cfg=cfg, scfg=scfg)
+        low = jax.jit(step).lower(spec.params, spec.opt_state, spec.inputs)
+    elif sp.kind == "prefill":
+        step = functools.partial(prefill_step, cfg=cfg, scfg=scfg)
+        args = [spec.inputs["tokens"]]
+        if "frontend" in spec.inputs:
+            args.append(spec.inputs["frontend"])
+        low = jax.jit(step).lower(spec.params, *args)
+    else:
+        step = functools.partial(serve_step, cfg=cfg, unroll=True)
+        low = jax.jit(step).lower(
+            spec.params, spec.inputs["token"], spec.cache, spec.inputs["pos"]
+        )
+    ca = low.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    return {
+        "flops_total": float(ca.get("flops", 0.0)),
+        "bytes_total": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    from repro.distributed.sharding import (
+        batch_pspecs,
+        cache_pspecs,
+        data_axes,
+        make_shard_fn,
+        param_pspecs,
+        tree_shardings,
+    )
+    from repro.distributed.steps import prefill_step, serve_step, train_step
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import cell_specs
+    from repro.roofline.analysis import (
+        collective_bytes,
+        collective_bytes_weighted,
+        roofline_terms,
+    )
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    spec = cell_specs(arch, shape)
+    cfg, sp, pol, scfg = spec.cfg, spec.shape, spec.policy, spec.step_cfg
+    shard_fn = make_shard_fn(mesh, pol.seq_shard, pol.tp)
+    p_sh = tree_shardings(param_pspecs(spec.params, mesh, pol.fsdp, pol.tp), mesh)
+    bsp = batch_pspecs(mesh, pol.tp)
+    da = data_axes(mesh)
+
+    t0 = time.time()
+    with mesh:
+        if sp.kind == "train":
+            o_sh = tree_shardings(
+                param_pspecs(spec.opt_state, mesh, pol.fsdp, pol.tp), mesh
+            )
+            batch = dict(spec.inputs)
+            b_sh = {
+                k: NamedSharding(mesh, bsp["frontend" if k == "frontend" else k])
+                for k in batch
+            }
+            step = functools.partial(
+                train_step, cfg=cfg, scfg=scfg, shard_fn=shard_fn
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),  # params/opt update in place
+            )
+            lowered = jitted.lower(spec.params, spec.opt_state, batch)
+        elif sp.kind == "prefill":
+            step = functools.partial(
+                prefill_step, cfg=cfg, scfg=scfg, shard_fn=shard_fn
+            )
+            args = [spec.inputs["tokens"]]
+            in_sh = [NamedSharding(mesh, bsp["tokens"])]
+            if "frontend" in spec.inputs:
+                args.append(spec.inputs["frontend"])
+                in_sh.append(NamedSharding(mesh, bsp["frontend"]))
+            jitted = jax.jit(
+                step, in_shardings=(p_sh, *in_sh), out_shardings=None
+            )
+            lowered = jitted.lower(spec.params, *args)
+        else:  # decode
+            c_sh = tree_shardings(
+                cache_pspecs(spec.cache, mesh, sp.global_batch, sp.seq_len), mesh
+            )
+            tok_axes = da if sp.global_batch % mesh.shape[da[0]] == 0 and sp.global_batch >= n_dev // mesh.shape["model"] else None
+            tok_sh = NamedSharding(mesh, P(tok_axes, None))
+            step = functools.partial(serve_step, cfg=cfg, shard_fn=shard_fn)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, tok_sh, c_sh, None),
+                out_shardings=(None, c_sh),
+            )
+            lowered = jitted.lower(
+                spec.params, spec.inputs["token"], spec.cache, spec.inputs["pos"]
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"--- memory_analysis [{arch} x {shape} x {'multi' if multi_pod else 'single'}]")
+    print(mem)
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    print(f"--- cost_analysis flops={cost.get('flops', 0):.3e} bytes={cost.get('bytes accessed', 0):.3e}")
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)  # flat (loop bodies once) — for reference
+    coll_weighted = collective_bytes_weighted(hlo)  # trip-count-corrected
+
+    # exact global FLOPs/bytes from the unrolled costing lowering
+    try:
+        exact = costing_flops(arch, shape)
+    except Exception as e:  # noqa: BLE001 — fall back to compiled estimate
+        print(f"costing lowering failed ({e!r}); falling back to compiled cost")
+        exact = {
+            "flops_total": float(cost.get("flops", 0.0)) * n_dev,
+            "bytes_total": float(cost.get("bytes accessed", 0.0)) * n_dev,
+        }
+    # memory bytes: compiled (fused, SPMD-partitioned) per-device bytes,
+    # corrected for loops-counted-once by the exact/compiled FLOPs ratio —
+    # costing-lowering bytes are unfused and overestimate ~50x.
+    compiled_flops = float(cost.get("flops", 0.0))
+    loop_ratio = (
+        exact["flops_total"] / n_dev / compiled_flops if compiled_flops > 0 else 1.0
+    )
+    loop_ratio = max(loop_ratio, 1.0)
+    cost_corrected = {
+        "flops": exact["flops_total"] / n_dev,
+        "bytes accessed": float(cost.get("bytes accessed", 0.0)) * loop_ratio,
+    }
+    terms = roofline_terms(
+        cost_corrected, hlo, n_dev, {"weighted": int(coll_weighted)}
+    )
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev,
+        "kind": sp.kind,
+        "policy": pol._asdict(),
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_total_exact": exact["flops_total"],
+        "bytes_total_exact": exact["bytes_total"],
+        "flops_per_device": cost_corrected["flops"],
+        "bytes_per_device": cost_corrected["bytes accessed"],
+        "compiled_flops_per_device_loopsonce": cost.get("flops", 0.0),
+        "collective_bytes_per_device": coll,
+        "collective_bytes_per_device_weighted": coll_weighted,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "fraction": terms.roofline_fraction(),
+        },
+        "fits_hbm_16g": bool(
+            (getattr(mem, "argument_size_in_bytes", 0)
+             + getattr(mem, "temp_size_in_bytes", 0)) < 16 * 1024**3
+        ),
+        "memory_analysis": {
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1, default=_json_default)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.shapes import all_cells
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, runnable in all_cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            fname = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_done and os.path.exists(fname):
+                print(f"[done] {arch} x {shape} x {mesh_name}")
+                continue
+            if not runnable:
+                os.makedirs(args.out, exist_ok=True)
+                with open(fname, "w") as f:
+                    json.dump(
+                        {
+                            "arch": arch, "shape": shape, "mesh": mesh_name,
+                            "status": "skipped",
+                            "reason": "long_500k requires sub-quadratic mixer "
+                                      "(full-attention arch) — see DESIGN.md",
+                        },
+                        f, indent=1,
+                    )
+                n_skip += 1
+                print(f"[skip] {arch} x {shape} ({mesh_name}): full-attention arch")
+                continue
+            print(f"[cell] {arch} x {shape} x {mesh_name} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi, args.out)
+                n_ok += 1
+                r = rec["roofline"]
+                print(
+                    f"[ ok ] {arch} x {shape} x {mesh_name}: "
+                    f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                    f"dominant={r['dominant']} fraction={r['fraction']:.3f}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                os.makedirs(args.out, exist_ok=True)
+                with open(fname, "w") as f:
+                    json.dump(
+                        {
+                            "arch": arch, "shape": shape, "mesh": mesh_name,
+                            "status": "fail", "error": repr(e),
+                            "traceback": traceback.format_exc()[-4000:],
+                        },
+                        f, indent=1,
+                    )
+                print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e!r}", flush=True)
+    print(f"dry-run complete: ok={n_ok} fail={n_fail} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

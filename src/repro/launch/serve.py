@@ -1,0 +1,43 @@
+"""Serving launcher: batched greedy decoding with the slot engine (smoke scale).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m --requests 3
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.models.registry import get_smoke_config
+    from repro.models.transformer import init_model
+    from repro.serving.engine import Request, ServeConfig, ServingEngine
+
+    cfg = get_smoke_config(args.arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    frontend = None
+    if cfg.encoder is not None or cfg.n_frontend_tokens:
+        n = cfg.encoder.seq_len if cfg.encoder else cfg.n_frontend_tokens
+        frontend = jax.random.normal(
+            jax.random.PRNGKey(1), (4, n, cfg.frontend_dim or cfg.d_model)
+        )
+    eng = ServingEngine(params, cfg, ServeConfig(max_batch=4, max_len=64), frontend)
+    for r in range(args.requests):
+        prompt = [1 + r, 2 + r, 3 + r]
+        eng.submit(Request(rid=r, prompt=prompt, max_new=args.max_new))
+    out = eng.run_to_completion()
+    for rid, toks in sorted(out.items()):
+        print(f"request {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

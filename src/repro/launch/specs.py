@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — no allocation.
+
+``input_specs(arch, shape)`` returns the exact argument pytrees the dry-run
+lowers against: model inputs (tokens/labels/frontend or token+caches), and
+``cell_specs`` adds params/optimizer trees via ``jax.eval_shape`` so even the
+398-400B configs cost zero host memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable_shapes
+from repro.distributed.policy import DistPolicy, policy_for
+from repro.models.config import ModelConfig
+from repro.models.registry import get_config
+from repro.models.transformer import init_cache, init_model
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.distributed.steps import StepConfig
+
+__all__ = ["input_specs", "cell_specs", "CellSpec"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _frontend_sds(cfg: ModelConfig, batch: int) -> Optional[SDS]:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.encoder is not None:
+        return SDS((batch, cfg.encoder.seq_len, cfg.frontend_dim or cfg.d_model), dt)
+    if cfg.n_frontend_tokens:
+        return SDS((batch, cfg.n_frontend_tokens, cfg.frontend_dim or cfg.d_model), dt)
+    return None
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one cell (weak-type-correct,
+    shardable, no device allocation)."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    sp: ShapeSpec = SHAPES[shape]
+    B, L = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        out = {
+            "tokens": SDS((B, L), jnp.int32),
+            "labels": SDS((B, L), jnp.int32),
+        }
+        fe = _frontend_sds(cfg, B)
+        if fe is not None:
+            out["frontend"] = fe
+        return out
+    if sp.kind == "prefill":
+        out = {"tokens": SDS((B, L), jnp.int32)}
+        fe = _frontend_sds(cfg, B)
+        if fe is not None:
+            out["frontend"] = fe
+        return out
+    # decode: one new token against a cache of seq_len
+    out = {
+        "token": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    fe = _frontend_sds(cfg, B)
+    if fe is not None:
+        out["frontend"] = fe
+    return out
+
+
+class CellSpec(NamedTuple):
+    cfg: ModelConfig
+    shape: ShapeSpec
+    policy: DistPolicy
+    step_cfg: StepConfig
+    params: Any  # SDS pytree
+    opt_state: Any  # SDS pytree (train only)
+    cache: Any  # SDS pytree (decode only)
+    inputs: Dict[str, Any]
+
+
+def cell_specs(arch: str, shape: str) -> CellSpec:
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    if shape not in applicable_shapes(cfg):
+        raise ValueError(f"cell ({arch}, {shape}) is skipped (sub-quadratic only)")
+    pol = policy_for(cfg, sp.kind)
+    scfg = StepConfig(
+        remat=pol.remat,
+        q_chunk=pol.q_chunk,
+        n_microbatch=pol.n_microbatch,
+        opt=AdamWConfig(
+            lr=3e-4,
+            grad_clip=1.0,
+            state_dtype=pol.opt_state_dtype,
+            kind=pol.opt_kind,
+        ),
+        grad_accum_dtype=pol.opt_state_dtype,  # bf16 accum iff bf16 states
+        int8_gather=pol.int8_gather,
+        flash_attn=pol.flash_attn,
+    )
+    params = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    opt_state = None
+    cache = None
+    inputs = input_specs(arch, shape)
+    if sp.kind == "train":
+        opt_state = jax.eval_shape(functools.partial(adamw_init, cfg=scfg.opt), params)
+    if sp.kind == "decode":
+        fe = inputs.get("frontend")
+        cache = jax.eval_shape(
+            lambda p, f: init_cache(p, cfg, sp.global_batch, sp.seq_len, f),
+            params,
+            fe,
+        ) if fe is not None else jax.eval_shape(
+            lambda p: init_cache(p, cfg, sp.global_batch, sp.seq_len), params
+        )
+    return CellSpec(cfg, sp, pol, scfg, params, opt_state, cache, inputs)

@@ -1,0 +1,75 @@
+"""Training launcher.
+
+Two modes:
+  * ``--mode smoke``  — run real training steps on CPU with the reduced
+    family-preserving config (validates the full runtime path end-to-end);
+  * ``--mode dryrun`` — delegate to launch/dryrun.py semantics for the full
+    config on the production mesh (lower+compile only).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --steps 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="smoke", choices=["smoke", "dryrun"])
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--grad-compress", type=int, default=0,
+                    help="layered int8 gradient-compression layers (0=off)")
+    ap.add_argument("--workdir", default="results/train")
+    args = ap.parse_args()
+
+    if args.mode == "dryrun":
+        from repro.launch import dryrun
+
+        rec = dryrun.run_cell(args.arch, "train_4k", False, args.workdir)
+        print(rec["roofline"])
+        return
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.tokens import TokenStreamConfig, sample_batch
+    from repro.distributed.steps import StepConfig, train_step
+    from repro.models.registry import get_smoke_config
+    from repro.models.transformer import init_model
+    from repro.train.checkpoint import save_checkpoint
+    from repro.train.grad_compress import GradCompressConfig
+    from repro.train.optimizer import adamw_init
+
+    cfg = get_smoke_config(args.arch)
+    scfg = StepConfig(remat=False, q_chunk=0, n_microbatch=1)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw_init(params, scfg.opt)
+    ts_cfg = TokenStreamConfig(cfg.vocab, args.seq, args.batch)
+    step_fn = jax.jit(functools.partial(train_step, cfg=cfg, scfg=scfg))
+
+    for step in range(args.steps):
+        batch = sample_batch(ts_cfg, step)
+        if cfg.encoder is not None or cfg.n_frontend_tokens:
+            n = cfg.encoder.seq_len if cfg.encoder else cfg.n_frontend_tokens
+            batch["frontend"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, n, cfg.frontend_dim or cfg.d_model)
+            )
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        print(
+            f"step {step}: loss={float(metrics['loss']):.4f} "
+            f"ce={float(metrics['ce']):.4f} ({time.time() - t0:.2f}s)"
+        )
+    save_checkpoint(args.workdir, args.steps, {"params": params})
+    print(f"checkpoint saved to {args.workdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Model configuration schema for the architecture zoo.
+
+One unified ``ModelConfig`` covers all ten assigned families: dense/GQA
+transformers, MoE (shared + routed, top-k), SSM (Mamba2/SSD), hybrids
+(layer_pattern strings), encoder-decoder (whisper), and cross-attention VLMs.
+Layers are grouped into a repeating *period* (``layer_pattern`` x MoE
+interleave) so the forward pass scans over stacked parameter pytrees — this
+keeps HLO size O(period) instead of O(n_layers), which is what makes 88-layer
+x 512-device dry-runs compile quickly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+__all__ = ["MoECfg", "SSMCfg", "EncoderCfg", "ModelConfig", "BlockKind"]
+
+
+class MoECfg(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # always-on shared experts (DeepSeek-MoE style)
+    capacity_factor: float = 1.25
+    every: int = 1  # MoE FFN on layers with (idx % every == every - 1)
+    router_jitter: float = 0.0
+
+
+class SSMCfg(NamedTuple):
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256  # SSD chunk length
+
+
+class EncoderCfg(NamedTuple):
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    seq_len: int  # frontend tokens (whisper: 1500 audio frames)
+
+
+class ModelConfig(NamedTuple):
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    act: str = "silu_gated"  # silu_gated | squared_relu | gelu_gated | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    layer_pattern: str = "A"  # string over {A: attention, M: mamba}, tiled
+    cross_attn_every: int = 0  # VLM: every k-th layer gains cross-attention
+    encoder: Optional[EncoderCfg] = None  # enc-dec (whisper)
+    n_frontend_tokens: int = 0  # image tokens (VLM) — encoder covers audio
+    frontend_dim: int = 0  # stub embedding dim (0 -> d_model)
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    max_seq_len: int = 32768  # RoPE table default cap
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def period(self) -> int:
+        p = len(self.layer_pattern)
+        if self.moe is not None:
+            p = _lcm(p, self.moe.every)
+        if self.cross_attn_every:
+            p = _lcm(p, self.cross_attn_every)
+        return p
+
+    @property
+    def n_super(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    def block_kinds(self) -> Tuple["BlockKind", ...]:
+        """The per-position block spec within one period."""
+        kinds = []
+        for j in range(self.period):
+            mixer = self.layer_pattern[j % len(self.layer_pattern)]
+            is_moe = self.moe is not None and (j % self.moe.every == self.moe.every - 1)
+            has_cross = bool(
+                self.cross_attn_every
+                and (j % self.cross_attn_every == self.cross_attn_every - 1)
+            )
+            kinds.append(BlockKind(mixer=mixer, moe=is_moe, cross=has_cross))
+        return tuple(kinds)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.qkv_bias:
+            attn += hd * (self.n_heads + 2 * self.n_kv_heads)
+        ff_mults = {"silu_gated": 3, "gelu_gated": 3, "squared_relu": 2, "gelu": 2}
+        dense_ffn = ff_mults[self.act] * d * self.d_ff
+        total = 0
+        for k in self.block_kinds():
+            if k.mixer == "A":
+                total += attn + 2 * d  # + norms
+            else:
+                s = self.ssm or SSMCfg()
+                di = s.expand * d
+                nheads = di // s.head_dim
+                total += (
+                    d * (2 * di + 2 * s.d_state + nheads)  # in_proj (z,x,B,C,dt)
+                    + s.d_conv * (di + 2 * s.d_state)
+                    + di * d
+                    + nheads * 2
+                    + 2 * d
+                )
+            if k.cross:
+                total += attn + d
+            if k.moe:
+                m = self.moe
+                e = ff_mults[self.act] * d * m.d_ff_expert
+                total += m.n_experts * e + m.n_shared * e + d * m.n_experts
+            else:
+                total += dense_ffn
+        total *= self.n_super
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        total += d  # final norm
+        if self.encoder is not None:
+            enc_attn = d * hd * (self.encoder.n_heads + 2 * self.encoder.n_kv_heads)
+            enc_attn += self.encoder.n_heads * hd * d
+            total += self.encoder.n_layers * (enc_attn + dense_ffn + 2 * d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        ff_mults = {"silu_gated": 3, "gelu_gated": 3, "squared_relu": 2, "gelu": 2}
+        e = ff_mults[self.act] * self.d_model * m.d_ff_expert
+        n_moe_layers = sum(k.moe for k in self.block_kinds()) * self.n_super
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * e
+        return int(full - inactive)
+
+
+class BlockKind(NamedTuple):
+    mixer: str  # "A" attention | "M" mamba
+    moe: bool
+    cross: bool
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)

@@ -1,0 +1,339 @@
+"""GQA attention: init, full/chunked causal forward, cross-attention, decode.
+
+Conventions: activations (B, L, d); q heads H, kv heads KV, group G = H // KV;
+softmax always in float32.  The chunked path scans over query chunks with the
+keys resident (memory O(chunk * S) instead of O(L * S)) — required for the
+32k-prefill shapes, and remat-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope, rope_angles
+
+__all__ = ["init_attention", "attention_forward", "attention_decode", "AttnTemps"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, qkv_bias=False,
+                   dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    so = 1.0 / math.sqrt(n_heads * head_dim)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model)) * so).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, xk, n_heads, n_kv_heads, head_dim):
+    B, L, _ = x.shape
+    S = xk.shape[1]
+    q = x @ p["wq"]
+    k = xk @ p["wk"]
+    v = xk @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, L, n_kv_heads, n_heads // n_kv_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B, Lq, KV, G, D), k/v (B, S, KV, D), mask broadcastable to
+    (B, KV, G, Lq, S) or None -> (B, Lq, KV, G, D)."""
+    scores = jnp.einsum("blkgd,bskd->bkgls", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgls,bskd->blkgd", w, v)
+
+
+def _flash_fwd_inner(q, k, v, causal, scale, q_chunk, k_chunk):
+    """Returns (out (B, L, KV, G, D) f32, lse (B, KV, G, L) f32)."""
+    B, L, KV, G, D = q.shape
+    S = k.shape[1]
+    nq, nk = L // q_chunk, S // k_chunk
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, KV, G, D), 1, 0)
+
+    def per_q(args):
+        qi_idx, qi = args
+        q_pos = qi_idx * q_chunk + jnp.arange(q_chunk)
+
+        def per_k(carry, kj_idx):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, kj_idx * k_chunk, k_chunk, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, kj_idx * k_chunk, k_chunk, 1)
+            s = jnp.einsum("blkgd,bskd->bkgls", qi, kj).astype(jnp.float32) * scale
+            if causal:
+                k_pos = kj_idx * k_chunk + jnp.arange(k_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgls,bskd->bkgld", p.astype(v.dtype), vj).astype(
+                jnp.float32
+            )
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_k, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse  # (B, KV, G, Cq, D), (B, KV, G, Cq)
+
+    _, (outs, lses) = jax.lax.scan(
+        lambda c, x: (c, per_q(x)), None, (jnp.arange(nq), qc)
+    )
+    out = jnp.moveaxis(jnp.moveaxis(outs, 0, 3).reshape(B, KV, G, L, D), 3, 1)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, L)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention_core(q, k, v, causal, scale, q_chunk, k_chunk):
+    out, _ = _flash_fwd_inner(q, k, v, causal, scale, q_chunk, k_chunk)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, scale, q_chunk, k_chunk):
+    out, lse = _flash_fwd_inner(q, k, v, causal, scale, q_chunk, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, scale, q_chunk, k_chunk, res, do):
+    """FlashAttention-2-style backward: recompute p per (q, kv) chunk pair
+    from the saved logsumexp — only (out, lse) were kept from the forward."""
+    q, k, v, out, lse = res
+    B, L, KV, G, D = q.shape
+    S = k.shape[1]
+    nq, nk = L // q_chunk, S // k_chunk
+    delta = (do.astype(jnp.float32) * out).sum(-1)  # (B, L, KV, G)
+    delta = jnp.moveaxis(delta, 1, 3)  # (B, KV, G, L)
+
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, KV, G, D), 1, 0)
+    doc = jnp.moveaxis(do.reshape(B, nq, q_chunk, KV, G, D), 1, 0)
+
+    def per_q(carry, args):
+        dk, dv = carry
+        qi_idx, qi, doi = args
+        q_pos = qi_idx * q_chunk + jnp.arange(q_chunk)
+        lsei = jax.lax.dynamic_slice_in_dim(lse, qi_idx * q_chunk, q_chunk, 3)
+        deltai = jax.lax.dynamic_slice_in_dim(delta, qi_idx * q_chunk, q_chunk, 3)
+
+        def per_k(inner, kj_idx):
+            dqi, dk, dv = inner
+            kj = jax.lax.dynamic_slice_in_dim(k, kj_idx * k_chunk, k_chunk, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, kj_idx * k_chunk, k_chunk, 1)
+            s = jnp.einsum("blkgd,bskd->bkgls", qi, kj).astype(jnp.float32) * scale
+            if causal:
+                k_pos = kj_idx * k_chunk + jnp.arange(k_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])  # (B, KV, G, Cq, Ck)
+            dvj = jnp.einsum("bkgls,blkgd->bskd", p.astype(do.dtype), doi)
+            dp = jnp.einsum("blkgd,bskd->bkgls", doi, vj).astype(jnp.float32)
+            ds = p * (dp - deltai[..., None]) * scale
+            dqi = dqi + jnp.einsum("bkgls,bskd->blkgd", ds.astype(q.dtype), kj)
+            dkj = jnp.einsum("bkgls,blkgd->bskd", ds.astype(q.dtype), qi)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk,
+                jax.lax.dynamic_slice_in_dim(dk, kj_idx * k_chunk, k_chunk, 1)
+                + dkj.astype(dk.dtype),
+                kj_idx * k_chunk,
+                1,
+            )
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv,
+                jax.lax.dynamic_slice_in_dim(dv, kj_idx * k_chunk, k_chunk, 1)
+                + dvj.astype(dv.dtype),
+                kj_idx * k_chunk,
+                1,
+            )
+            return (dqi, dk, dv), None
+
+        dqi0 = jnp.zeros_like(qi, jnp.float32)
+        (dqi, dk, dv), _ = jax.lax.scan(per_k, (dqi0, dk, dv), jnp.arange(nk))
+        return (dk, dv), dqi
+
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(per_q, (dk0, dv0), (jnp.arange(nq), qc, doc))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, L, KV, G, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_attention(q, k, v, *, causal: bool, scale: float, q_chunk: int,
+                     k_chunk: int = 1024):
+    """Online-softmax (flash-style) attention with a custom VJP.
+
+    q (B, L, KV, G, D); k/v (B, S, KV, D).  The (L, S) score matrix is never
+    materialized in either direction: forward saves only (out, lse); backward
+    recomputes the probabilities chunk-by-chunk (FlashAttention-2 dataflow) —
+    §Perf change #1 for the memory-bound train/prefill cells.
+    """
+    B, L, KV, G, D = q.shape
+    S = k.shape[1]
+    q_chunk = min(q_chunk, L)
+    k_chunk = min(k_chunk, S)
+    if L % q_chunk or S % k_chunk:
+        q_chunk, k_chunk = L, S  # ragged fallback: single chunk
+    out = _flash_attention_core(q, k, v, causal, scale, q_chunk, k_chunk)
+    return out.astype(v.dtype)
+
+
+def attention_forward(
+    p,
+    x,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    rope_theta: Optional[float] = 1e4,
+    kv_source: Optional[jax.Array] = None,
+    q_chunk: int = 0,
+    positions: Optional[jax.Array] = None,
+    flash: bool = True,
+):
+    """Self- or cross-attention over full sequences.
+
+    kv_source: if given, cross-attention (no causal mask, no rope on kv source
+    positions beyond its own indexing).  q_chunk > 0 enables the chunked scan.
+    """
+    B, L, _ = x.shape
+    xk = x if kv_source is None else kv_source
+    q, k, v = _project_qkv(p, x, xk, n_heads, n_kv_heads, head_dim)
+    S = k.shape[1]
+    if rope_theta is not None and kv_source is None:
+        pos = positions if positions is not None else jnp.arange(L)
+        cos, sin = rope_angles(pos, head_dim, rope_theta)
+        qf = q.reshape(B, L, n_heads, head_dim)
+        qf = apply_rope(qf, cos, sin)
+        q = qf.reshape(B, L, n_kv_heads, n_heads // n_kv_heads, head_dim)
+        k = apply_rope(k, cos, sin)
+    scale = 1.0 / math.sqrt(head_dim)
+
+    if q_chunk and L > q_chunk and L % q_chunk == 0 and flash:
+        out = _flash_attention(
+            q, k, v, causal=causal and kv_source is None, scale=scale,
+            q_chunk=q_chunk,
+        ).reshape(B, L, n_heads * head_dim)
+    elif q_chunk and L > q_chunk and L % q_chunk == 0:
+        # chunked full-softmax: scores materialize per q-chunk only
+        n_chunks = L // q_chunk
+        qc = q.reshape(B, n_chunks, q_chunk, n_kv_heads, -1, head_dim)
+        qc = jnp.moveaxis(qc, 1, 0)
+
+        def body(carry, args):
+            ci, qi = args
+            if causal and kv_source is None:
+                rows = ci * q_chunk + jnp.arange(q_chunk)
+                mask = (rows[:, None] >= jnp.arange(S)[None, :])[None, None, None]
+            else:
+                mask = None
+            return carry, _sdpa(qi, k, v, mask, scale)
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, L, n_heads * head_dim)
+    else:
+        mask = None
+        if causal and kv_source is None:
+            mask = (jnp.arange(L)[:, None] >= jnp.arange(S)[None, :])[
+                None, None, None
+            ]
+        out = _sdpa(q, k, v, mask, scale).reshape(B, L, n_heads * head_dim)
+    return out @ p["wo"]
+
+
+class AttnTemps(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, D)
+    v: jax.Array
+
+
+def init_kv_cache(batch, max_len, n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    z = jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype)
+    return AttnTemps(z, jnp.copy(z))
+
+
+def attention_decode(
+    p,
+    x,
+    cache: AttnTemps,
+    pos,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 1e4,
+):
+    """One-token decode: x (B, 1, d), cache (B, S_max, KV, D), pos scalar int.
+
+    Returns (out (B, 1, d), new_cache).  Masking: keys at index > pos are
+    excluded (cache beyond the current position may be uninitialized).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, x, n_heads, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        posv = jnp.full((1,), pos)
+        cos, sin = rope_angles(posv, head_dim, rope_theta)
+        qf = q.reshape(B, 1, n_heads, head_dim)
+        qf = apply_rope(qf, cos, sin)
+        q = qf.reshape(B, 1, n_kv_heads, n_heads // n_kv_heads, head_dim)
+        k_new = apply_rope(k_new, cos, sin)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0))
+    S = k.shape[1]
+    mask = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(head_dim))
+    out = out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
+    return out, AttnTemps(k, v)
+
+
+def cross_attention_decode(p, x, k, v, *, n_heads, n_kv_heads, head_dim):
+    """Decode-time cross-attention against precomputed (static) K/V."""
+    B = x.shape[0]
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(B, 1, n_kv_heads, n_heads // n_kv_heads, head_dim)
+    out = _sdpa(q, k, v, None, 1.0 / math.sqrt(head_dim))
+    return out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
+
+
+def project_cross_kv(p, kv_source, *, n_kv_heads, head_dim):
+    """Precompute cross-attention K/V once per request."""
+    B, S, _ = kv_source.shape
+    k = kv_source @ p["wk"]
+    v = kv_source @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return (
+        k.reshape(B, S, n_kv_heads, head_dim),
+        v.reshape(B, S, n_kv_heads, head_dim),
+    )

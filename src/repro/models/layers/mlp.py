@@ -1,0 +1,44 @@
+"""FFN variants: gated SiLU/GELU (llama-style), squared-ReLU (nemotron), GELU."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp_forward", "ffn_weight_shapes"]
+
+
+def ffn_weight_shapes(act: str):
+    """Number of projection matrices for the activation type."""
+    return 3 if act in ("silu_gated", "gelu_gated") else 2
+
+
+def init_mlp(key, d_model, d_ff, act="silu_gated", dtype=jnp.bfloat16):
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    n = ffn_weight_shapes(act)
+    ks = jax.random.split(key, n)
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if n == 3:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_forward(p, x, act="silu_gated"):
+    h = x @ p["w_in"]
+    if act == "silu_gated":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif act == "gelu_gated":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["w_out"]

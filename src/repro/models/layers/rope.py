@@ -1,0 +1,30 @@
+"""Rotary position embeddings (half-rotation convention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_angles", "apply_rope"]
+
+
+def rope_angles(positions, head_dim: int, theta: float = 1e4):
+    """positions: (...,) int -> (cos, sin) each (..., head_dim/2) float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, L, H, D); cos/sin: (L, D/2) or (B, L, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (L, half) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, L, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

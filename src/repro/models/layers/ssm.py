@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked train/prefill + decode.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the recurrence is computed as a
+masked attention-like quadratic form (MXU-friendly), across chunks a short
+scan propagates the (H, P, N) state — O(L) total with matmul-dominated
+compute, exactly the property that makes the ``long_500k`` cell feasible.
+
+Decode maintains (conv window, SSM state) per layer: O(1) per token.
+Single B/C group (G=1); conv over the concatenated [x, B, C] channels as in
+the reference implementation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.nn import rms_norm
+from repro.models.config import SSMCfg
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_cache", "SSMCache"]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, d_in + 2N) rolling window
+    state: jax.Array  # (B, H, P, N) fp32
+
+
+def _dims(d_model: int, cfg: SSMCfg):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    return d_in, H, cfg.head_dim, cfg.d_state
+
+
+def init_ssm(key, d_model: int, cfg: SSMCfg, dtype=jnp.bfloat16):
+    d_in, H, P, N = _dims(d_model, cfg)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (H,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, proj_out)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, d_in + 2 * N)) * 0.2).astype(
+            dtype
+        ),
+        "conv_b": jnp.zeros((d_in + 2 * N,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (H,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[4], (d_in, d_model)) * s / math.sqrt(2)).astype(
+            dtype
+        ),
+    }
+
+
+def _split_proj(proj, d_in, N, H):
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : 2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv: xbc (B, L, ch), w (K, ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        pad,
+        w[:, None, :].astype(xbc.dtype),  # (K, 1, ch) HWIO-like for 1D
+        (1,),
+        "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return jax.nn.silu(y + b.astype(y.dtype))
+
+
+def _segsum_decay(dA_c):
+    """dA_c: (B, nc, H, Q) -> within-chunk decay matrix exp(cs_i - cs_j), i>=j."""
+    cs = jnp.cumsum(dA_c, axis=-1)  # (B, nc, H, Q)
+    diff = cs[..., :, None] - cs[..., None, :]  # (B, nc, H, Q, Q)
+    Q = dA_c.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0), cs
+
+
+def ssm_forward(p, x, cfg: SSMCfg, d_model: int):
+    """x: (B, L, d_model) -> (B, L, d_model).  L must divide by cfg.chunk
+    (or be smaller than it)."""
+    B, L, _ = x.shape
+    d_in, H, P, N = _dims(d_model, cfg)
+    Q = min(cfg.chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, d_in, N, H)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in].reshape(B, L, H, P)
+    Bm = xbc[..., d_in : d_in + N]  # (B, L, N)
+    Cm = xbc[..., d_in + N :]  # (B, L, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    dA = dt * A  # (B, L, H)
+
+    # chunk
+    xc = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H).transpose(0, 1, 3, 2)  # (B, nc, H, Q)
+    dAc = dA.reshape(B, nc, Q, H).transpose(0, 1, 3, 2)
+
+    Lmat, cs = _segsum_decay(dAc)  # (B, nc, H, Q, Q), (B, nc, H, Q)
+    att = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B, nc, Q, Q)
+    full = att[:, :, None] * Lmat * dtc[:, :, :, None, :]  # (B, nc, H, Q, Q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", full, xc)
+
+    decay_end = jnp.exp(cs[..., -1:] - cs)  # (B, nc, H, Q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_end * dtc, xc)
+    chunk_decay = jnp.exp(cs[..., -1])  # (B, nc, H)
+
+    def scan_body(s, inp):
+        st_c, dec_c = inp
+        out = s
+        s = s * dec_c[..., None, None] + st_c
+        return s, out
+
+    _, s_prev = jax.lax.scan(
+        scan_body,
+        jnp.zeros((B, H, P, N), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N): state at chunk start
+
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, s_prev, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_g"])
+    return y @ p["out_proj"]
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMCfg, dtype=jnp.bfloat16):
+    d_in, H, P, N = _dims(d_model, cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, d_in + 2 * N), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_decode(p, x, cache: SSMCache, cfg: SSMCfg, d_model: int):
+    """One-token decode: x (B, 1, d_model) -> (y (B, 1, d_model), new cache)."""
+    B = x.shape[0]
+    d_in, H, P, N = _dims(d_model, cfg)
+    proj = x[:, 0] @ p["in_proj"]  # (B, proj_out)
+    z, xbc, dt_raw = _split_proj(proj, d_in, N, H)
+
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, K, ch)
+    conv = (window * p["conv_w"].astype(window.dtype)[None]).sum(1) + p[
+        "conv_b"
+    ].astype(window.dtype)
+    conv = jax.nn.silu(conv)
+    new_conv = window[:, 1:]
+
+    xs = conv[..., :d_in].reshape(B, H, P).astype(jnp.float32)
+    Bv = conv[..., d_in : d_in + N].astype(jnp.float32)  # (B, N)
+    Cv = conv[..., d_in + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B, H)
+    state = cache.state * dA[..., None, None] + (dt[..., None] * xs)[
+        ..., None
+    ] * Bv[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, None, :])
+    y = rms_norm(y, p["norm_g"])
+    return y @ p["out_proj"], SSMCache(new_conv, state)

@@ -1,0 +1,77 @@
+"""Architecture registry: name -> ModelConfig (full + reduced smoke variant)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import EncoderCfg, ModelConfig, MoECfg, SSMCfg
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "reduce_config"]
+
+ARCH_IDS: List[str] = [
+    "llama4_maverick_400b_a17b",
+    "deepseek_moe_16b",
+    "mistral_large_123b",
+    "qwen2_0_5b",
+    "internlm2_1_8b",
+    "nemotron_4_15b",
+    "whisper_large_v3",
+    "mamba2_370m",
+    "jamba_1_5_large_398b",
+    "llama_3_2_vision_11b",
+]
+
+_ALIASES = {name.replace("_", "-"): name for name in ARCH_IDS}
+
+
+def _module(arch: str):
+    arch = _ALIASES.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return reduce_config(get_config(arch))
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving reduction: same period structure / block kinds /
+    routing topology, tiny widths — used by the per-arch CPU smoke tests."""
+    moe = None
+    if cfg.moe is not None:
+        moe = cfg.moe._replace(
+            n_experts=4,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64,
+            n_shared=min(cfg.moe.n_shared, 1),
+            capacity_factor=8.0,  # no drops: keeps decode/forward parity exact
+        )
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = cfg.ssm._replace(d_state=16, head_dim=8, chunk=8)
+    encoder = None
+    if cfg.encoder is not None:
+        encoder = cfg.encoder._replace(n_layers=2, n_heads=4, n_kv_heads=2, seq_len=12)
+    n_layers = cfg.period if cfg.period > 1 else 2
+    return cfg._replace(
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        moe=moe,
+        ssm=ssm,
+        encoder=encoder,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 12) if cfg.n_frontend_tokens else 0,
+        frontend_dim=32 if cfg.frontend_dim else 0,
+        dtype="float32",
+        max_seq_len=128,
+    )

@@ -1,0 +1,477 @@
+"""Unified model covering all ten assigned architectures.
+
+One ``ModelConfig`` drives: dense GQA transformers, MoE layers (shared +
+routed top-k), Mamba2/SSD mixers, hybrid layer patterns (Jamba), an optional
+encoder stack with decoder cross-attention (Whisper), and interleaved
+cross-attention to stub image embeddings (Llama-3.2-Vision).
+
+Layers are stacked into ``n_super`` repetitions of a ``period``-long block
+pattern and executed with ``lax.scan`` — HLO size stays O(period), which is
+what lets 88-layer x 512-device dry-runs lower in seconds.  Activation
+sharding hints are injected via a caller-supplied ``shard_fn`` so the model
+stays distribution-agnostic (distributed/sharding.py supplies the real one).
+
+Decode paths (``init_cache`` + ``decode_step``) maintain per-layer KV caches,
+SSM states and precomputed cross-attention K/V; one token per call.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.nn import rms_norm
+from repro.models.config import BlockKind, ModelConfig
+from repro.models.layers.attention import (
+    AttnTemps,
+    attention_decode,
+    attention_forward,
+    cross_attention_decode,
+    init_attention,
+    init_kv_cache,
+    project_cross_kv,
+)
+from repro.models.layers.mlp import init_mlp, mlp_forward
+from repro.models.layers.moe import init_moe, moe_forward
+from repro.models.layers.ssm import SSMCache, init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+__all__ = ["init_model", "forward", "init_cache", "decode_step", "model_dtype"]
+
+ShardFn = Callable[[jax.Array, str], jax.Array]
+_no_shard: ShardFn = lambda x, kind: x
+
+
+def model_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ===================================================================== init
+def _init_block(key, cfg: ModelConfig, kind: BlockKind, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": jnp.ones((d,), dtype), "norm2": jnp.ones((d,), dtype)}
+    if kind.mixer == "A":
+        p["attn"] = init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dtype
+        )
+    else:
+        p["ssm"] = init_ssm(ks[0], d, cfg.ssm, dtype)
+    if kind.cross:
+        p["cross_norm"] = jnp.ones((d,), dtype)
+        p["cross"] = init_attention(
+            ks[1], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dtype
+        )
+    if kind.moe:
+        p["moe"] = init_moe(ks[2], d, cfg.moe, cfg.act, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(ks[2], d, cfg.d_ff, cfg.act, dtype)
+    else:
+        del p["norm2"]  # pure-mixer block (Mamba architecture: no FFN)
+    return p
+
+
+def _init_encoder_block(key, cfg: ModelConfig, dtype):
+    enc = cfg.encoder
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "norm1": jnp.ones((d,), dtype),
+        "norm2": jnp.ones((d,), dtype),
+        "attn": init_attention(ks[0], d, enc.n_heads, enc.n_kv_heads, cfg.hd, False, dtype),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = model_dtype(cfg)
+    kinds = cfg.block_kinds()
+    k_embed, k_blocks, k_enc, k_head, k_fp = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02).astype(
+            dtype
+        ),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * 0.02
+        ).astype(dtype)
+
+    block_keys = jax.random.split(k_blocks, cfg.period)
+    blocks = []
+    for j, kind in enumerate(kinds):
+        per_super = jax.random.split(block_keys[j], cfg.n_super)
+        blocks.append(
+            jax.vmap(lambda k: _init_block(k, cfg, kind, dtype))(per_super)
+        )
+    params["blocks"] = tuple(blocks)
+
+    if cfg.encoder is not None:
+        enc_keys = jax.random.split(k_enc, cfg.encoder.n_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_encoder_block(k, cfg, dtype))(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    if cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+        params["frontend_proj"] = (
+            jax.random.normal(k_fp, (cfg.frontend_dim, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    return params
+
+
+# ================================================================== forward
+def _make_weight_gather(shard_fn: ShardFn, enabled: bool):
+    """int8-compressed FSDP weight gathers (§Perf change #2).
+
+    FSDP-sharded weights are re-gathered over the ``data`` axis every layer
+    (and again in remat recompute) — the dominant collective for the 100B+
+    archs.  Quantizing the local shard to int8 with per-output-channel scales
+    *before* the gather halves the bytes on the wire; a straight-through
+    estimator keeps gradients flowing to the bf16 master weights.  This is
+    the paper's compress-before-the-link thesis applied to weights.
+    """
+    mesh = getattr(shard_fn, "mesh", None)
+    if not enabled or mesh is None or "data" not in mesh.shape:
+        return lambda w, kind: w
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def _spec(ndim: int, kind: str) -> P:
+        # gathered spec: keep TP/EP ("model") placement, drop the data axis
+        if kind == "col":  # (..., d, f): f model-sharded
+            return P(*([None] * (ndim - 1) + ["model"]))
+        if kind == "row":  # (..., f, d): f model-sharded
+            return P(*([None] * (ndim - 2) + ["model", None]))
+        # "moe": (E, ..., ...): experts model-sharded, rest gathered
+        return P(*(["model"] + [None] * (ndim - 1)))
+
+    def _impl(w, kind):
+        spec = _spec(w.ndim, kind)
+        scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+        scale = jnp.maximum(scale, 1e-8) / 127.0
+        w8 = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(
+            jnp.int8
+        )
+        # the gather over `data` happens HERE, on the int8 tensor (2x fewer
+        # bytes on the wire than the bf16 FSDP gather it replaces); the
+        # optimization barrier stops the partitioner from sinking the dequant
+        # convert below the gather (which would re-widen the wire bytes)
+        w8 = jax.lax.with_sharding_constraint(w8, NamedSharding(mesh, spec))
+        w8 = jax.lax.optimization_barrier(w8)
+        scale = jax.lax.with_sharding_constraint(
+            scale, NamedSharding(mesh, _spec(scale.ndim, kind))
+        )
+        return (w8.astype(jnp.float32) * scale).astype(w.dtype)
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+    def roundtrip(w, kind):
+        return _impl(w, kind)
+
+    def _fwd(w, kind):
+        return _impl(w, kind), None
+
+    def _bwd(kind, _, g):
+        return (g,)  # identity grad: the partitioner reduce-scatters g into
+        # w's FSDP sharding; quantization noise is forward-only (QAT-style)
+
+    roundtrip.defvjp(_fwd, _bwd)
+
+    def wg(w, kind: str):
+        if w.ndim < 2:
+            return w
+        return roundtrip(w, kind)
+
+    return wg
+
+
+_NO_WG = lambda w, kind: w
+
+
+def _apply_block(
+    bp, cfg: ModelConfig, kind: BlockKind, x, cross_src, q_chunk, shard_fn: ShardFn,
+    inner_remat: bool = False,
+    wg=_NO_WG,
+    flash: bool = True,
+):
+    """inner_remat: checkpoint each sub-block (mixer / cross / FFN) separately
+    so the backward peak is the LARGEST sub-block's transients, not their sum
+    — this is what bounds per-device HBM for the 100B+ archs at mb=1."""
+    ck = jax.checkpoint if inner_remat else (lambda f: f)
+    aux = jnp.zeros((), jnp.float32)
+
+    def mixer(x, p):
+        h = rms_norm(x, p["norm1"])
+        if kind.mixer == "A":
+            ap = dict(
+                p["attn"],
+                wq=wg(p["attn"]["wq"], "col"),
+                wk=wg(p["attn"]["wk"], "col"),
+                wv=wg(p["attn"]["wv"], "col"),
+                wo=wg(p["attn"]["wo"], "row"),
+            )
+            h = attention_forward(
+                ap,
+                h,
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.hd,
+                causal=True,
+                rope_theta=cfg.rope_theta,
+                q_chunk=q_chunk,
+                flash=flash,
+            )
+        else:
+            h = ssm_forward(p["ssm"], h, cfg.ssm, cfg.d_model)
+        return shard_fn(x + h, "resid")
+
+    x = ck(mixer)(x, bp)
+    if kind.cross:
+
+        def cross(x, p):
+            h = rms_norm(x, p["cross_norm"])
+            h = attention_forward(
+                p["cross"],
+                h,
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.hd,
+                causal=False,
+                rope_theta=None,
+                kv_source=cross_src,
+            )
+            return shard_fn(x + h, "resid")
+
+        x = ck(cross)(x, bp)
+    if kind.moe:
+
+        def ffn(x, p):
+            h = rms_norm(x, p["norm2"])
+            h, aux = moe_forward(
+                p["moe"], h, cfg.moe, cfg.act, shard_fn,
+                wg=wg if wg is not _NO_WG else None,
+            )
+            return shard_fn(x + h, "resid"), aux
+
+        x, aux = ck(ffn)(x, bp)
+    elif "mlp" in bp:
+
+        def ffn(x, p):
+            h = rms_norm(x, p["norm2"])
+            mp = {k: wg(v, "row" if k == "w_out" else "col")
+                  for k, v in p["mlp"].items()}
+            h = mlp_forward(mp, h, cfg.act)
+            return shard_fn(x + h, "resid")
+
+        x = ck(ffn)(x, bp)
+    return x, aux
+
+
+def _encode(params, cfg: ModelConfig, frontend, q_chunk, shard_fn, unroll=False):
+    """Whisper-style encoder over stub frame embeddings (B, S, d)."""
+    enc = cfg.encoder
+    x = frontend
+    if "frontend_proj" in params:
+        x = x @ params["frontend_proj"]
+    # sinusoidal positions
+    S, d = x.shape[1], x.shape[2]
+    pos = jnp.arange(S)[:, None] / (
+        1e4 ** (jnp.arange(0, d, 2)[None, :] / d)
+    )
+    pe = jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)[:, :d]
+    x = x + pe[None].astype(x.dtype)
+
+    def body(carry, bp):
+        h = rms_norm(carry, bp["norm1"])
+        h = attention_forward(
+            bp["attn"],
+            h,
+            n_heads=enc.n_heads,
+            n_kv_heads=enc.n_kv_heads,
+            head_dim=cfg.hd,
+            causal=False,
+            rope_theta=None,
+            q_chunk=q_chunk,
+        )
+        carry = carry + h
+        h = rms_norm(carry, bp["norm2"])
+        carry = carry + mlp_forward(bp["mlp"], h, cfg.act)
+        return shard_fn(carry, "resid"), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"], unroll=unroll)
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens,
+    frontend: Optional[jax.Array] = None,
+    *,
+    q_chunk: int = 512,
+    shard_fn: ShardFn = _no_shard,
+    remat: bool = False,
+    return_hidden: bool = False,
+    unroll: bool = False,
+    int8_gather: bool = False,
+    flash: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, L) int32 -> (logits (B, L, V), aux_loss scalar).
+
+    frontend: encoder frames (enc-dec) or image patch embeddings (VLM).
+    return_hidden: skip the output head, return final hidden states — the
+    trainer computes cross-entropy in sequence chunks against the (tied)
+    head so the (B, L, V) logits tensor is never materialized.
+    """
+    dtype = model_dtype(cfg)
+    x = params["embed"][tokens].astype(dtype)
+    x = shard_fn(x, "resid")
+
+    cross_src = None
+    if cfg.encoder is not None:
+        assert frontend is not None, "enc-dec model needs frontend frames"
+        cross_src = _encode(
+            params, cfg, frontend.astype(dtype), q_chunk, shard_fn, unroll
+        )
+    elif cfg.n_frontend_tokens:
+        assert frontend is not None, "VLM needs image patch embeddings"
+        cross_src = frontend.astype(dtype)
+        if "frontend_proj" in params:
+            cross_src = cross_src @ params["frontend_proj"]
+
+    kinds = cfg.block_kinds()
+    wg = _make_weight_gather(shard_fn, int8_gather) if int8_gather else _NO_WG
+
+    def superblock(carry, stacked):
+        x, aux = carry
+        for j, kind in enumerate(kinds):
+            x, a = _apply_block(
+                stacked[j], cfg, kind, x, cross_src, q_chunk, shard_fn,
+                inner_remat=False,  # adds weight re-gathers without reducing
+                # the measured peak; outer per-super remat is the sweet spot
+                wg=wg,
+                flash=flash,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(superblock) if remat else superblock
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"], unroll=unroll
+    )
+
+    x = rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, aux
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard_fn(x @ head, "logits")
+    return logits, aux
+
+
+def output_head(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# =================================================================== decode
+def init_cache(
+    params, cfg: ModelConfig, batch: int, max_len: int, frontend=None
+) -> Dict[str, Any]:
+    """Preallocate KV/SSM caches; precompute cross K/V from the frontend."""
+    dtype = model_dtype(cfg)
+    kinds = cfg.block_kinds()
+    cross_src = None
+    if cfg.encoder is not None:
+        cross_src = _encode(params, cfg, frontend.astype(dtype), 0, _no_shard)
+    elif cfg.n_frontend_tokens and frontend is not None:
+        cross_src = frontend.astype(dtype)
+        if "frontend_proj" in params:
+            cross_src = cross_src @ params["frontend_proj"]
+
+    blocks = []
+    for j, kind in enumerate(kinds):
+        entry: Dict[str, Any] = {}
+        if kind.mixer == "A":
+            entry["kv"] = jax.vmap(
+                lambda _: init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+            )(jnp.arange(cfg.n_super))
+        else:
+            entry["ssm"] = jax.vmap(
+                lambda _: init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)
+            )(jnp.arange(cfg.n_super))
+        if kind.cross:
+            entry["cross_kv"] = jax.vmap(
+                lambda bp: project_cross_kv(
+                    bp, cross_src, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd
+                )
+            )(params["blocks"][j]["cross"])
+        blocks.append(entry)
+    return {"blocks": tuple(blocks)}
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    token,
+    cache,
+    pos,
+    *,
+    shard_fn: ShardFn = _no_shard,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token (B, 1) int32, pos scalar int32 -> (logits (B, V), new cache)."""
+    dtype = model_dtype(cfg)
+    x = params["embed"][token].astype(dtype)
+    kinds = cfg.block_kinds()
+
+    def superblock(x, scanned):
+        stacked, cached = scanned
+        new_cache = {}
+        for j, kind in enumerate(kinds):
+            bp, cj = stacked[j], cached[j]
+            nc: Dict[str, Any] = {}
+            h = rms_norm(x, bp["norm1"])
+            if kind.mixer == "A":
+                h, kv = attention_decode(
+                    bp["attn"],
+                    h,
+                    AttnTemps(*cj["kv"]),
+                    pos,
+                    n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta,
+                )
+                nc["kv"] = kv
+            else:
+                h, st = ssm_decode(bp["ssm"], h, SSMCache(*cj["ssm"]), cfg.ssm, cfg.d_model)
+                nc["ssm"] = st
+            x = x + h
+            if kind.cross:
+                h = rms_norm(x, bp["cross_norm"])
+                ck, cv = cj["cross_kv"]
+                h = cross_attention_decode(
+                    bp["cross"], h, ck, cv,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                )
+                x = x + h
+                nc["cross_kv"] = cj["cross_kv"]
+            if kind.moe:
+                h = rms_norm(x, bp["norm2"])
+                h, _ = moe_forward(bp["moe"], h, cfg.moe, cfg.act, shard_fn)
+                x = x + h
+            elif "mlp" in bp:
+                h = rms_norm(x, bp["norm2"])
+                h = mlp_forward(bp["mlp"], h, cfg.act)
+                x = x + h
+            x = shard_fn(x, "resid")
+            new_cache[j] = nc
+        return x, tuple(new_cache[j] for j in range(len(kinds)))
+
+    x, new_blocks = jax.lax.scan(
+        superblock, x, (params["blocks"], cache["blocks"]), unroll=unroll
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard_fn((x[:, 0] @ head), "logits")
+    return logits, {"blocks": new_blocks}

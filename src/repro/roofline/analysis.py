@@ -1,0 +1,265 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs_total        / (chips * PEAK_FLOPS_BF16)
+    memory     = HLO_bytes_total        / (chips * HBM_BW)
+    collective = collective_bytes_total / (chips * ICI_BW_PER_LINK)
+
+``cost_analysis`` supplies per-device FLOPs/bytes (the compiled program is
+the per-partition module); collective bytes are parsed from the compiled HLO
+text by summing the *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, NamedTuple, Optional
+
+from repro.roofline import hw
+
+__all__ = [
+    "collective_bytes",
+    "collective_bytes_weighted",
+    "roofline_terms",
+    "RooflineTerms",
+    "dominant_term",
+]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _parse_collective_line(stripped: str):
+    """Returns (kind, operand_bytes) or None.
+
+    Compiled-HLO operands are printed without shapes, so sizes come from the
+    RESULT shape(s) (between ``=`` and the op name) converted to operand
+    semantics with the replica-group size ``gs``:
+      all-gather operand = result/gs; reduce-scatter operand = result*gs;
+      all-reduce / all-to-all / collective-permute operand = result.
+    """
+    for kind in _COLLECTIVES:
+        for marker in (f" {kind}(", f" {kind}-start("):
+            idx = stripped.find(marker)
+            if idx < 0:
+                continue
+            eq = stripped.find(" = ")
+            if eq < 0 or eq > idx:
+                continue
+            result_str = stripped[eq + 3 : idx]
+            rbytes = 0
+            for m in _SHAPE_RE.finditer(result_str):
+                rbytes += _shape_bytes(m.group(1), m.group(2))
+            gm = _GROUPS_RE.search(stripped)
+            gs = int(gm.group(2)) if gm else 1
+            if kind == "all-gather":
+                ob = rbytes // max(gs, 1)
+            elif kind == "reduce-scatter":
+                ob = rbytes * max(gs, 1)
+            else:
+                ob = rbytes
+            return kind, ob
+    return None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective op kind from (compiled) HLO text.
+
+    Flat count: loop bodies tallied once — see ``collective_bytes_weighted``
+    for the trip-count-corrected total."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        hit = _parse_collective_line(line.strip())
+        if hit:
+            totals[hit[0]] += hit[1]
+    return totals
+
+
+# -------------------------------------------------------- loop-aware count
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+_WHILE_COND_BODY = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_WHILE_INIT = re.compile(r"\bwhile\(%([\w\.\-]+)\)")
+_CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"%([\w\.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
+_INST_NAME_RE = re.compile(r"^%([\w\.\-]+)\s*=")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _line_collective_bytes(stripped: str) -> int:
+    hit = _parse_collective_line(stripped)
+    return hit[1] if hit else 0
+
+
+def collective_bytes_weighted(hlo_text: str) -> float:
+    """Loop-aware collective operand bytes: while-loop bodies are weighted by
+    their trip counts (XLA's textual HLO nests collectives inside scan/while
+    bodies, which a flat count would tally once).
+
+    Trip-count recovery: the loop bound is an s32[] constant either compared
+    directly in the condition computation or threaded through the while init
+    tuple; we take the max plausible constant (bounds are the largest counter
+    constants in play).  Unresolvable loops fall back to multiplier 1.
+    """
+    # --- split into computations -------------------------------------
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        if not raw.startswith(" "):
+            m = _COMP_HDR.match(raw.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if raw.lstrip().startswith("ENTRY"):
+                    entry = cur
+                continue
+            cur = None
+        elif cur is not None:
+            comps[cur].append(raw.strip())
+
+    consts: Dict[str, int] = {}
+    tuples: Dict[str, list] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            cm = _CONST_RE.match(ln)
+            if cm:
+                consts[cm.group(1)] = int(cm.group(2))
+            if " tuple(" in ln:
+                nm = _INST_NAME_RE.match(ln)
+                if nm:
+                    args = ln[ln.find(" tuple(") + 7 :]
+                    args = args[: args.rfind(")")] if ")" in args else args
+                    tuples[nm.group(1)] = _OPERAND_NAME_RE.findall(args)
+
+    def trip_count(init_name: str, cond_name: str) -> int:
+        # 1) constant compared inside the condition
+        cand = []
+        for ln in comps.get(cond_name, []):
+            cm = _CONST_RE.match(ln)
+            if cm:
+                cand.append(int(cm.group(2)))
+        if cand:
+            return max(cand)
+        # 2) s32 constants threaded through the init tuple
+        ops = tuples.get(init_name, [])
+        vals = [consts[o] for o in ops if o in consts]
+        vals = [v for v in vals if v > 0]
+        if vals:
+            return max(vals)
+        return 1
+
+    memo: Dict[str, float] = {}
+
+    def total(comp: str) -> float:
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = 0.0  # cycle guard
+        acc = 0.0
+        for ln in comps.get(comp, []):
+            acc += _line_collective_bytes(ln)
+            if " while(" in ln:
+                cb = _WHILE_COND_BODY.search(ln)
+                im = _WHILE_INIT.search(ln)
+                if cb:
+                    cond, body = cb.groups()
+                    t = trip_count(im.group(1) if im else "", cond)
+                    acc += t * (total(body) + total(cond))
+                    continue
+            cm = _CALL_RE.search(ln)
+            if cm and cm.group(1) in comps:
+                acc += total(cm.group(1))
+            bm = _BRANCH_RE.search(ln)
+            if bm:
+                for b in _OPERAND_NAME_RE.findall(bm.group(1)):
+                    if b in comps:
+                        acc += total(b)
+        memo[comp] = acc
+        return acc
+
+    if entry is None:
+        return float(sum(collective_bytes(hlo_text).values()))
+    return total(entry)
+
+
+class RooflineTerms(NamedTuple):
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    device_flops: float
+    device_bytes: float
+    collective_bytes_dev: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        vals = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """compute_term / bound — 1.0 means perfectly compute-bound (at the
+        FLOPs roofline); lower means memory or collectives dominate."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    hlo_text: str,
+    n_devices: int,
+    coll_bytes: Optional[Dict[str, int]] = None,
+) -> RooflineTerms:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    if coll_bytes is None:
+        coll_bytes = collective_bytes(hlo_text)
+    cb_dev = float(sum(coll_bytes.values()))
+    return RooflineTerms(
+        compute_s=flops_dev * n_devices / (n_devices * hw.PEAK_FLOPS_BF16),
+        memory_s=bytes_dev * n_devices / (n_devices * hw.HBM_BW),
+        collective_s=cb_dev * n_devices / (n_devices * hw.ICI_BW_PER_LINK),
+        device_flops=flops_dev,
+        device_bytes=bytes_dev,
+        collective_bytes_dev=cb_dev,
+        n_devices=n_devices,
+    )
+
+
+def dominant_term(t: RooflineTerms) -> str:
+    return t.dominant

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for the roofline analysis (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s per link
+
+CHIP_HBM_BYTES = 16 * 1024**3  # 16 GiB / v5e chip

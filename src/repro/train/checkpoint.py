@@ -1,0 +1,217 @@
+"""Fault-tolerant checkpointing through the Salient Store archival pipeline.
+
+Checkpoints are archival data: each save is chunked into S logical storage
+shards, zstd-compressed, optionally sealed (R-LWE KEM + ChaCha20) and
+RAID-6-parity-coded, then committed through the power-loss-safe ``Journal``
+(write payload -> fsync -> manifest record).  Restore tolerates:
+
+  * torn writes (journal replay drops them),
+  * up to two missing/corrupt shards per checkpoint (parity rebuild),
+  * a different mesh on restart (elastic: arrays are saved unsharded-logical
+    and resharded by the caller's NamedShardings at load).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import zstandard as zstd
+
+from repro.core.archival import raid
+from repro.core.crypto import rlwe
+from repro.core.crypto.chacha import xor_stream
+from repro.core.csd.failure import Journal
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointError"]
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+def _serialize_tree(tree) -> bytes:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    buf = io.BytesIO()
+    np.savez(
+        buf,
+        __treedef__=np.frombuffer(str(treedef).encode(), dtype=np.uint8),
+        **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)},
+    )
+    return buf.getvalue()
+
+
+def _deserialize_leaves(blob: bytes) -> List[np.ndarray]:
+    buf = io.BytesIO(blob)
+    with np.load(buf) as z:
+        n = sum(1 for k in z.files if k.startswith("leaf_"))
+        return [z[f"leaf_{i}"] for i in range(n)]
+
+
+def save_checkpoint(
+    root: str,
+    step: int,
+    state: Any,
+    *,
+    n_shards: int = 4,
+    parity: str = "raid6",
+    seal_key: Optional[rlwe.PublicKey] = None,
+    rng: Optional[jax.Array] = None,
+    zstd_level: int = 3,
+) -> Dict:
+    """state: arbitrary pytree (params/opt/extra). Returns the manifest."""
+    j = Journal(root)
+    raw = _serialize_tree(state)
+    comp = zstd.ZstdCompressor(level=zstd_level).compress(raw)
+
+    meta: Dict[str, Any] = {
+        "step": int(step),
+        "n_shards": n_shards,
+        "parity": parity,
+        "raw_len": len(raw),
+        "comp_len": len(comp),
+        "sealed": bool(seal_key is not None),
+    }
+    payload = comp
+    if seal_key is not None:
+        if rng is None:
+            rng = jax.random.PRNGKey(step)
+        pad = (-len(payload)) % 4
+        words = jnp.asarray(
+            np.frombuffer(payload + b"\0" * pad, dtype="<u4").copy()
+        )
+        from repro.core.crypto.hybrid import seal
+
+        blk = seal(seal_key, words, rng)
+        meta["kem_c1"] = np.asarray(blk.kem_c1).tolist()
+        meta["kem_c2"] = np.asarray(blk.kem_c2).tolist()
+        meta["nonce"] = np.asarray(blk.nonce).tolist()
+        payload = np.asarray(blk.body).astype("<u4").tobytes()[: len(payload) + pad]
+
+    # shard + parity
+    shard_len = (len(payload) + n_shards - 1) // n_shards
+    padded = payload + b"\0" * (shard_len * n_shards - len(payload))
+    shards = [
+        padded[i * shard_len : (i + 1) * shard_len] for i in range(n_shards)
+    ]
+    meta["payload_len"] = len(payload)
+    meta["shard_len"] = shard_len
+
+    names = []
+    for i, s in enumerate(shards):
+        name = f"ckpt_{step:08d}_shard{i}.bin"
+        j.commit(name, s, {"step": step, "shard": i})
+        names.append(name)
+    if parity != "none":
+        arr = jnp.asarray(
+            np.stack([np.frombuffer(s, np.uint8) for s in shards])
+        )
+        if parity == "raid5":
+            p = raid.raid5_encode(arr)
+            j.commit(f"ckpt_{step:08d}_parity_p.bin", bytes(np.asarray(p)), {"step": step})
+        else:
+            p, q = raid.raid6_encode(arr)
+            j.commit(f"ckpt_{step:08d}_parity_p.bin", bytes(np.asarray(p)), {"step": step})
+            j.commit(f"ckpt_{step:08d}_parity_q.bin", bytes(np.asarray(q)), {"step": step})
+    meta["shards"] = names
+    j.commit(f"ckpt_{step:08d}_manifest.json", json.dumps(meta).encode(), {"step": step})
+    return meta
+
+
+def latest_step(root: str) -> Optional[int]:
+    j = Journal(root)
+    steps = [
+        r["meta"]["step"]
+        for r in j.replay()
+        if r["name"].endswith("_manifest.json") and "step" in r.get("meta", {})
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    root: str,
+    template: Any,
+    step: Optional[int] = None,
+    *,
+    secret: Optional[jax.Array] = None,
+    shardings: Any = None,
+) -> Tuple[int, Any]:
+    """Restore into the structure of ``template``; reshard with ``shardings``
+    (a matching pytree of NamedSharding) if given — elastic restarts pass the
+    NEW mesh's shardings here."""
+    j = Journal(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise CheckpointError(f"no checkpoint in {root}")
+    meta = json.loads(j.read(f"ckpt_{step:08d}_manifest.json"))
+
+    shards: List[Optional[bytes]] = []
+    missing: List[int] = []
+    for i, name in enumerate(meta["shards"]):
+        path = os.path.join(root, name)
+        if os.path.exists(path) and os.path.getsize(path) == meta["shard_len"]:
+            shards.append(j.read(name))
+        else:
+            shards.append(None)
+            missing.append(i)
+    if missing:
+        if meta["parity"] == "none":
+            raise CheckpointError(f"shards {missing} lost and no parity")
+        rows = [
+            None if s is None else jnp.asarray(np.frombuffer(s, np.uint8))
+            for s in shards
+        ]
+        p = jnp.asarray(
+            np.frombuffer(j.read(f"ckpt_{step:08d}_parity_p.bin"), np.uint8)
+        )
+        q = None
+        if meta["parity"] == "raid6":
+            q = jnp.asarray(
+                np.frombuffer(j.read(f"ckpt_{step:08d}_parity_q.bin"), np.uint8)
+            )
+        if meta["parity"] == "raid5":
+            assert len(missing) == 1, "RAID-5 covers one erasure"
+            rows[missing[0]] = raid.raid5_reconstruct(rows, p, missing[0])
+        else:
+            rows = raid.raid6_reconstruct(rows, p, q, missing)
+        shards = [bytes(np.asarray(r)) for r in rows]
+
+    payload = b"".join(shards)[: meta["payload_len"]]
+    if meta["sealed"]:
+        if secret is None:
+            raise CheckpointError("checkpoint is sealed; need the R-LWE secret")
+        from repro.core.crypto.hybrid import SealedBlock, unseal
+
+        words = jnp.asarray(np.frombuffer(payload, dtype="<u4").copy())
+        blk = SealedBlock(
+            jnp.asarray(meta["kem_c1"], jnp.int32),
+            jnp.asarray(meta["kem_c2"], jnp.int32),
+            jnp.asarray(meta["nonce"], jnp.uint32),
+            words,
+            int(words.size),
+        )
+        plain = unseal(secret, blk)
+        payload = np.asarray(plain).astype("<u4").tobytes()[: meta["comp_len"]]
+    else:
+        payload = payload[: meta["comp_len"]]
+
+    raw = zstd.ZstdDecompressor().decompress(payload, max_output_size=meta["raw_len"])
+    leaves = _deserialize_leaves(raw)
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(leaves) != len(t_leaves):
+        raise CheckpointError(
+            f"leaf count mismatch: ckpt {len(leaves)} vs template {len(t_leaves)}"
+        )
+    arrays = [jnp.asarray(l).astype(t.dtype) for l, t in zip(leaves, t_leaves)]
+    if shardings is not None:
+        s_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh")
+        )
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, s_leaves)]
+    return step, jax.tree_util.tree_unflatten(treedef, arrays)

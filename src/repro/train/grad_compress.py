@@ -1,0 +1,78 @@
+"""Gradient compression via the paper's layered quantization codec.
+
+Beyond-paper application of Salient Store's core idea ("compress before the
+expensive link") to distributed training: before the cross-pod gradient
+reduction, each gradient tensor is quantized into K progressive int8 layers
+(layer k encodes the residual of layers < k at a finer scale) with
+error-feedback accumulation, so the DCN hop moves K bytes/param instead of 4.
+
+The compression is bit-exactly simulated at the math level (quantize ->
+dequantize) and the wire bytes are reported; on real multi-pod hardware the
+int8 payloads feed ``jax.lax.psum`` over the ``pod`` axis directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GradCompressConfig", "GradCompressState", "init_state", "compress_tree"]
+
+
+class GradCompressConfig(NamedTuple):
+    n_layers: int = 2  # progressive int8 layers (1 = plain int8)
+    error_feedback: bool = True
+
+
+class GradCompressState(NamedTuple):
+    residual: Any  # pytree like grads: error-feedback carry
+
+
+def init_state(grads_template) -> GradCompressState:
+    return GradCompressState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+    )
+
+
+def _quantize_layered(g, n_layers: int):
+    """g (f32) -> (reconstruction, wire_bytes).  Each layer: int8 at a scale
+    1/127 of the current residual's max — progressive refinement exactly like
+    the video codec's quality layers."""
+    recon = jnp.zeros_like(g)
+    resid = g
+    for _ in range(n_layers):
+        scale = jnp.maximum(jnp.max(jnp.abs(resid)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(resid / scale), -127, 127)
+        layer = q * scale
+        recon = recon + layer
+        resid = resid - layer
+    wire_bytes = g.size * n_layers  # int8 per layer (+ negligible scales)
+    return recon, wire_bytes
+
+
+def compress_tree(
+    grads, state: GradCompressState, cfg: GradCompressConfig
+) -> Tuple[Any, GradCompressState, jax.Array, jax.Array]:
+    """Returns (decompressed grads, new state, wire_bytes, raw_bytes)."""
+    wire = 0
+    raw = 0
+
+    def one(g, r):
+        nonlocal wire, raw
+        gf = g.astype(jnp.float32)
+        if cfg.error_feedback:
+            gf = gf + r
+        recon, wb = _quantize_layered(gf, cfg.n_layers)
+        wire += wb
+        raw += g.size * 4
+        new_r = (gf - recon) if cfg.error_feedback else jnp.zeros_like(gf)
+        return recon.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_grads = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_grads, GradCompressState(new_resid), jnp.asarray(wire), jnp.asarray(raw)

@@ -1,0 +1,224 @@
+"""Continuous-learning trainer with the Salient Store archival loop.
+
+Per step (Fig. 1's dual-stream dataflow):
+  1. ingest a clip batch per stream (placement engine decides which storage
+     shard owns each stream — Table 2 load balancing);
+  2. run the frozen backbone ONCE: its features feed both exemplar selection
+     (k-means++ novelty -> train-or-archive) and the codec (compute reuse);
+  3. novel samples -> codec training step (Alg. 2);
+  4. known samples -> archive: layered-codec encode -> hybrid seal ->
+     RAID parity across shards -> journal commit;
+  5. heartbeat the straggler monitor; rebalance placement when flagged;
+  6. periodic checkpoint (itself compressed+sealed+parity, train/checkpoint).
+
+Everything is pure JAX + the core modules; the same loop drives the LM path
+through ``lm_train_step`` (distributed/steps.py) with codec-based gradient
+compression as an option.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.archival.exemplar import select_exemplars
+from repro.core.archival.pipeline import ArchiveConfig, archive_gop, stripe_parity
+from repro.core.codec.feature_extractor import extract_features
+from repro.core.codec.layered_codec import CodecConfig, init_codec, psnr
+from repro.core.codec.training import (
+    CodecTrainConfig,
+    codec_train_step,
+    init_codec_trainer,
+)
+from repro.core.crypto import rlwe
+from repro.core.csd.failure import Journal, StragglerMonitor
+from repro.core.csd.placement import Placement, balance_streams, rebalance
+from repro.data.video import VideoStream, render_clip
+from repro.train.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+__all__ = ["SalientTrainer", "TrainerConfig", "StepReport"]
+
+
+class TrainerConfig(NamedTuple):
+    codec: CodecConfig = CodecConfig(n_layers=2, latent_ch=4, feat_ch=16, mv_cond_ch=4)
+    archive: Optional[ArchiveConfig] = None  # derived from codec if None
+    n_shards: int = 4
+    clip_len: int = 3
+    exemplar_k: int = 4
+    n_train_exemplars: int = 2
+    checkpoint_every: int = 5
+    parity: str = "raid6"
+
+
+class StepReport(NamedTuple):
+    step: int
+    codec_loss: float
+    psnr: float
+    archived_streams: int
+    archive_bytes: int
+    novel_selected: int
+    rebalanced: bool
+
+
+class SalientTrainer:
+    def __init__(
+        self,
+        streams: List[VideoStream],
+        workdir: str,
+        cfg: TrainerConfig = TrainerConfig(),
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.streams = streams
+        self.workdir = workdir
+        key = jax.random.PRNGKey(seed)
+        kc, kk = jax.random.split(key)
+        self.codec_params = init_codec(kc, cfg.codec)
+        self.train_cfg = CodecTrainConfig(codec=cfg.codec)
+        self.trainable, self.frozen, self.opt_state = init_codec_trainer(
+            self.codec_params, self.train_cfg
+        )
+        self.pub, self.secret = rlwe.keygen(kk)
+        self.archive_cfg = cfg.archive or ArchiveConfig(
+            codec=cfg.codec, parity=cfg.parity
+        )
+        self.placement: Placement = balance_streams(
+            [s.fps for s in streams], cfg.n_shards
+        )
+        self.monitor = StragglerMonitor(cfg.n_shards)
+        self.journal = Journal(workdir)
+        self.step = 0
+        self.known_centroids = None
+        self._maybe_restore()
+
+    # ------------------------------------------------------------- state
+    def _params(self):
+        return dict(self.frozen, **self.trainable)
+
+    def _maybe_restore(self):
+        st = latest_step(self.workdir)
+        if st is None:
+            return
+        template = {
+            "trainable": self.trainable,
+            "opt": self.opt_state,
+            "step": jnp.zeros((), jnp.int32),
+        }
+        _, state = load_checkpoint(self.workdir, template, st)
+        self.trainable = state["trainable"]
+        self.opt_state = state["opt"]
+        self.step = int(state["step"])
+
+    def checkpoint(self):
+        save_checkpoint(
+            self.workdir,
+            self.step,
+            {
+                "trainable": self.trainable,
+                "opt": self.opt_state,
+                "step": jnp.asarray(self.step, jnp.int32),
+            },
+            n_shards=self.cfg.n_shards,
+            parity=self.cfg.parity,
+        )
+
+    # -------------------------------------------------------------- step
+    def run_step(self, shard_times: Optional[List[float]] = None) -> StepReport:
+        cfg = self.cfg
+        step_key = jax.random.PRNGKey(self.step * 977 + 13)
+        params = self._params()
+
+        # 1. ingest one clip per stream
+        clips = {
+            s.stream_id: render_clip(s, self.step * cfg.clip_len, cfg.clip_len)
+            for s in self.streams
+        }
+
+        # 2. shared backbone features -> exemplar selection (per stream,
+        #    pooled over space/time)
+        feats = []
+        for sid, clip in clips.items():
+            f = extract_features(params["extractor"], clip)  # (T, h, w, C)
+            feats.append(f.mean(axis=(0, 1, 2)))
+        fmat = jnp.stack(feats)  # (n_streams, C)
+        split = select_exemplars(
+            step_key,
+            fmat,
+            k=min(cfg.exemplar_k, fmat.shape[0]),
+            n_train=min(cfg.n_train_exemplars, fmat.shape[0]),
+            known_centroids=self.known_centroids,
+        )
+        self.known_centroids = split.centroids
+        train_ids = [int(i) for i in np.asarray(split.train_idx)]
+        archive_ids = [int(i) for i in np.asarray(split.archive_idx)]
+
+        # 3. codec training on the novel clips (Alg. 2)
+        train_clips = jnp.stack(
+            [clips[self.streams[i].stream_id] for i in train_ids], axis=1
+        )  # (T, B, H, W, 3)
+        self.trainable, self.opt_state, metrics = codec_train_step(
+            self.trainable, self.frozen, self.opt_state, self.train_cfg, train_clips
+        )
+
+        # 4. archive the known clips, one block per owning shard, with parity
+        params = self._params()
+        blocks, shard_of = [], []
+        total_bytes = 0
+        recon_psnrs = []
+        for i in archive_ids:
+            sid = self.streams[i].stream_id
+            frames = clips[sid][:, None]  # (T, 1, H, W, 3)
+            blk, recons = archive_gop(
+                params, self.pub, frames, jax.random.fold_in(step_key, sid),
+                self.archive_cfg,
+            )
+            blocks.append(blk)
+            shard_of.append(self.placement.assignment[i])
+            total_bytes += int(blk.sealed.body.size) * 4
+            recon_psnrs.append(float(psnr(recons, frames)))
+        if blocks:
+            parity = stripe_parity(blocks, self.cfg.parity)
+            rec_name = f"archive_{self.step:08d}"
+            body = b"".join(
+                np.asarray(b.sealed.body).astype("<u4").tobytes() for b in blocks
+            )
+            self.journal.commit(
+                rec_name + ".bin",
+                body,
+                {
+                    "step": self.step,
+                    "shards": shard_of,
+                    "parity": self.cfg.parity,
+                },
+            )
+
+        # 5. straggler handling
+        rebalanced = False
+        if shard_times is not None:
+            status = self.monitor.update(shard_times)
+            if status.stragglers or status.dead:
+                self.placement = rebalance(
+                    self.placement,
+                    [s.fps for s in self.streams],
+                    status.speed,
+                )
+                rebalanced = True
+
+        # 6. checkpoint
+        self.step += 1
+        if self.step % cfg.checkpoint_every == 0:
+            self.checkpoint()
+
+        return StepReport(
+            step=self.step,
+            codec_loss=float(metrics["loss"]),
+            psnr=float(np.mean(recon_psnrs)) if recon_psnrs else float("nan"),
+            archived_streams=len(blocks),
+            archive_bytes=total_bytes,
+            novel_selected=len(train_ids),
+            rebalanced=rebalanced,
+        )

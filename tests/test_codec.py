@@ -1,0 +1,209 @@
+"""Codec tests: motion kernel vs oracle, layered AE, GOP roundtrip, training."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codec.autoencoder import (
+    decode_layers,
+    dequantize_code,
+    encode_layers,
+    init_layered_ae,
+    quantize_code,
+)
+from repro.core.codec.feature_extractor import extract_features, init_feature_extractor
+from repro.core.codec.layered_codec import (
+    CodecConfig,
+    decode_gop,
+    encode_gop,
+    init_codec,
+    psnr,
+    serialize_bitstream,
+)
+from repro.core.codec.reference_codecs import dct_matrix, h264_like, hevc_like
+from repro.core.codec.training import (
+    CodecTrainConfig,
+    codec_train_step,
+    init_codec_trainer,
+)
+from repro.kernels.motion.ref import block_motion_ref, warp_blocks
+from repro.kernels.motion.ops import estimate_motion, warp
+
+H, W = 64, 64
+CFG = CodecConfig(n_layers=3, latent_ch=4, feat_ch=16, mv_cond_ch=4)
+
+
+def _frames(key, t=3, b=1, h=H, w=W):
+    """Smooth-ish synthetic video: drifting blobs."""
+    ks = jax.random.split(key, 4)
+    yy, xx = jnp.mgrid[0:h, 0:w]
+    cx = jax.random.uniform(ks[0], (t, b, 1, 1), minval=10, maxval=w - 10)
+    cy = jax.random.uniform(ks[1], (t, b, 1, 1), minval=10, maxval=h - 10)
+    drift = jnp.arange(t)[:, None, None, None] * 2.0
+    base = jnp.exp(
+        -(((xx - cx - drift) ** 2 + (yy - cy) ** 2)) / 200.0
+    )  # (t, b, h, w)
+    rgb = jnp.stack([base, base * 0.5 + 0.2, 1.0 - base], axis=-1)
+    noise = 0.02 * jax.random.normal(ks[2], rgb.shape)
+    return jnp.clip(rgb + noise, 0.0, 1.0)
+
+
+# ------------------------------------------------------------- motion kernel
+@pytest.mark.parametrize("block,radius", [(8, 4), (16, 8), (16, 4), (32, 8)])
+def test_motion_kernel_matches_ref(block, radius):
+    rng = np.random.default_rng(block * 100 + radius)
+    h, w = 4 * block, 6 * block
+    cur = jnp.asarray(rng.integers(0, 256, (h, w)), jnp.int32)
+    prev = jnp.asarray(rng.integers(0, 256, (h, w)), jnp.int32)
+    mv_r, sad_r = block_motion_ref(cur, prev, block, radius)
+    mv_k, sad_k = estimate_motion(cur, prev, block=block, radius=radius)
+    np.testing.assert_array_equal(np.asarray(mv_k), np.asarray(mv_r))
+    np.testing.assert_array_equal(np.asarray(sad_k), np.asarray(sad_r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dy=st.integers(-8, 8),
+    dx=st.integers(-8, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_motion_recovers_global_shift(dy, dx, seed):
+    rng = np.random.default_rng(seed)
+    h, w = 64, 64
+    prev = rng.integers(0, 256, (h, w)).astype(np.int32)
+    ys = np.clip(np.arange(h) + dy, 0, h - 1)
+    xs = np.clip(np.arange(w) + dx, 0, w - 1)
+    cur = prev[ys][:, xs]
+    mv, sad = estimate_motion(jnp.asarray(cur), jnp.asarray(prev), block=16, radius=8)
+    inner = np.asarray(mv)[1:-1, 1:-1].reshape(-1, 2)
+    assert (inner == [dy, dx]).all(), (dy, dx, np.unique(inner, axis=0))
+    assert np.asarray(sad)[1:-1, 1:-1].max() == 0
+
+
+def test_warp_inverts_known_shift():
+    rng = np.random.default_rng(0)
+    prev = jnp.asarray(rng.random((64, 64, 3)), jnp.float32)
+    mv = jnp.full((4, 4, 2), 3, jnp.int32)
+    out = warp(prev, mv, 16)
+    # interior pixels shifted by (3, 3)
+    np.testing.assert_allclose(
+        np.asarray(out)[:-3, :-3], np.asarray(prev)[3:, 3:], rtol=0, atol=0
+    )
+
+
+# ------------------------------------------------------------- extractor/AE
+def test_feature_extractor_shape_and_finite():
+    params = init_feature_extractor(jax.random.PRNGKey(0), out_ch=16)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, H, W, 3))
+    f = extract_features(params, x)
+    assert f.shape == (2, H // 8, W // 8, 16)
+    assert np.isfinite(np.asarray(f)).all()
+
+
+def test_quantize_roundtrip_and_range():
+    z = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 8)) * 3
+    ls = jnp.zeros((8,))
+    zq = quantize_code(z, ls)
+    assert np.abs(np.asarray(zq)).max() <= 127
+    deq = dequantize_code(zq, ls)
+    assert np.abs(np.asarray(deq - z)).max() <= 0.5 + 1e-6  # scale=1 rounding
+
+
+def test_layered_ae_progressive_quality():
+    """More layers must not decrease reconstruction quality (trained or not,
+    each extra layer explains the remaining error)."""
+    key = jax.random.PRNGKey(0)
+    ae = init_layered_ae(key, feat_ch=8, latent_ch=4, n_layers=4, stride=8)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 8))
+    target = jax.random.uniform(jax.random.PRNGKey(2), (1, 64, 64, 3))
+    errs = []
+    for k in range(1, 5):
+        codes, recon = encode_layers(ae, feats, target, n_layers=k)
+        assert len(codes) == k
+        errs.append(float(jnp.mean((recon - target) ** 2)))
+    # progressive refinement: error non-increasing in K (allow tiny fp slack)
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a * 1.05, errs
+
+
+def test_decode_matches_encode_side_recon():
+    ae = init_layered_ae(jax.random.PRNGKey(3), feat_ch=8, latent_ch=4, n_layers=2)
+    feats = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 8, 8))
+    target = jax.random.uniform(jax.random.PRNGKey(5), (1, 64, 64, 3))
+    codes, recon = encode_layers(ae, feats, target)
+    recon2 = decode_layers(ae, codes)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(recon2), atol=1e-5)
+
+
+# ------------------------------------------------------------- full codec
+def test_gop_encode_decode_consistency():
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    frames = _frames(jax.random.PRNGKey(1), t=3)
+    codes, recons = encode_gop(params, CFG, frames)
+    assert recons.shape == frames.shape
+    assert np.isfinite(np.asarray(recons)).all()
+    dec = decode_gop(params, CFG, codes)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(recons), atol=1e-5)
+    assert codes[0].mv is None and codes[1].mv is not None
+
+
+def test_bitstream_serialization_compresses():
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    frames = _frames(jax.random.PRNGKey(1), t=3)
+    codes, _ = encode_gop(params, CFG, frames)
+    blob, raw = serialize_bitstream(codes)
+    assert 0 < len(blob) < raw
+    # codes must be far smaller than raw pixels
+    assert raw < frames.size * 4
+
+
+def test_codec_training_reduces_loss():
+    cfg = CodecTrainConfig(codec=CFG)
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    trainable, frozen, opt_state = init_codec_trainer(params, cfg)
+    clips = _frames(jax.random.PRNGKey(1), t=2)
+    first = None
+    ext0 = jax.tree.leaves(frozen)[0].copy()
+    for i in range(8):
+        trainable, opt_state, metrics = codec_train_step(
+            trainable, frozen, opt_state, cfg, clips
+        )
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first
+    # extractor frozen (Alg. 2)
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(frozen)[0]), np.asarray(ext0))
+
+
+# ------------------------------------------------------------- ref codecs
+def test_dct_matrix_orthonormal():
+    for n in (8, 16):
+        d = np.asarray(dct_matrix(n))
+        np.testing.assert_allclose(d @ d.T, np.eye(n), atol=1e-5)
+
+
+@pytest.mark.parametrize("codec_fn", [h264_like, hevc_like])
+def test_classical_codec_roundtrip(codec_fn):
+    codec = codec_fn()
+    frames = _frames(jax.random.PRNGKey(2), t=3)[:, 0]  # (T, H, W, 3)
+    coded, recons = codec.encode_gop(frames, qp=1.0)
+    assert recons.shape == frames.shape
+    p = float(psnr(recons, frames))
+    assert p > 25.0, p  # near-lossless at qp=1 on smooth content
+    blob = codec.bitstream_bytes(coded)
+    assert len(blob) < frames.size * 4
+
+
+def test_hevc_like_beats_h264_like_rd():
+    """Qualitative RD ordering the paper reports (Fig. 8)."""
+    frames = _frames(jax.random.PRNGKey(3), t=2)[:, 0]
+    h264 = h264_like()
+    hevc = hevc_like()
+    c1, r1 = h264.encode_gop(frames, qp=2.0)
+    c2, r2 = hevc.encode_gop(frames, qp=2.0)
+    p1, p2 = float(psnr(r1, frames)), float(psnr(r2, frames))
+    b1, b2 = len(h264.bitstream_bytes(c1)), len(hevc.bitstream_bytes(c2))
+    # hevc_like should be no worse on at least one axis at equal qp
+    assert (p2 >= p1 - 0.5) or (b2 <= b1)

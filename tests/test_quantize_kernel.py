@@ -1,0 +1,64 @@
+"""Quantize kernel: shape/dtype sweeps + allclose vs the pure-jnp oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quantize.ops import dequantize_blockwise, quantize_blockwise
+from repro.kernels.quantize.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 512), (8, 1024), (32, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("block", [64, 128])
+def test_kernel_matches_ref_shapes_dtypes(shape, dtype, block):
+    if shape[1] % block:
+        pytest.skip("block must divide N")
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 5).astype(dtype)
+    qk, sk = quantize_pallas(x, block)
+    qr, sr = quantize_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    dk = dequantize_pallas(qk, sk, block)
+    dr = dequantize_ref(qr, sr, block)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_roundtrip_error_bound(seed, scale):
+    """|x - deq(q(x))| <= scale_block / 2 elementwise (half-ULP of int8)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 256)) * scale
+    q, s = quantize_blockwise(x, block=128)
+    back = dequantize_blockwise(q, s, block=128)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.repeat(np.asarray(s), 128, axis=-1) * 0.5 + 1e-9
+    assert (err <= bound).all()
+
+
+def test_wrapper_handles_leading_dims_and_ragged():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 256))
+    q, s = quantize_blockwise(x, block=128)
+    assert q.shape == x.shape and s.shape == (3, 4, 2)
+    back = dequantize_blockwise(q, s, block=128)
+    assert back.shape == x.shape
+    # ragged rows fall back to ref path transparently
+    y = jax.random.normal(jax.random.PRNGKey(2), (5, 96))
+    q2, s2 = quantize_blockwise(y, block=96)
+    back2 = dequantize_blockwise(q2, s2, block=96)
+    assert (np.abs(np.asarray(back2 - y)) <= np.repeat(np.asarray(s2), 96, -1) * 0.5 + 1e-9).all()
+
+
+def test_quantize_preserves_zeros_and_signs():
+    x = jnp.asarray([[0.0, -1.0, 1.0, 127.0] * 32])
+    x = jnp.tile(x, (8, 1))
+    q, s = quantize_blockwise(x, block=128)
+    qn = np.asarray(q)
+    assert (qn[:, 0] == 0).all()
+    assert (qn[:, 1] < 0).all() and (qn[:, 2] > 0).all()
