@@ -60,6 +60,66 @@ def motion_kernel() -> List[Row]:
     ]
 
 
+def _count_pallas_launches(fn, *args) -> int:
+    """Number of pallas_call primitives in fn's jaxpr (incl. sub-jaxprs)."""
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    inner = v.jaxpr if hasattr(v.jaxpr, "eqns") else v
+                    n += walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def seal_datapath() -> List[Row]:
+    """Fused seal (pack+ChaCha20+XOR+RAID P/Q, one launch) vs staged jnp."""
+    from repro.kernels.seal import datapath_traffic, seal_stripe
+    from repro.kernels.seal import ops as sops
+    from repro.kernels.seal import ref as sref
+
+    rng = np.random.default_rng(2)
+    S, lens = 4, [16 * 512 - 37, 16 * 512, 15 * 512 + 5, 16 * 512 - 1]
+    payloads = [jnp.asarray(rng.integers(-128, 128, n), jnp.int8) for n in lens]
+    keys = jnp.asarray(rng.integers(0, 2**32, (S, 8), dtype=np.uint32))
+    nonces = jnp.asarray(rng.integers(0, 2**32, (S, 3), dtype=np.uint32))
+
+    us_k = timeit(lambda: seal_stripe(payloads, keys, nonces))
+    us_r = timeit(lambda: seal_stripe(payloads, keys, nonces, use_pallas=False))
+    fused = seal_stripe(payloads, keys, nonces)
+    staged = seal_stripe(payloads, keys, nonces, use_pallas=False)
+    ok = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in ((fused.sealed, staged.sealed), (fused.p, staged.p),
+                     (fused.q, staged.q))
+    )
+
+    codes, n_words, _ = sops._stack_padded(
+        [p.reshape(-1).astype(jnp.int8) for p in payloads]
+    )
+    meta = sops._meta_arrays(keys, nonces, n_words)
+    launches = _count_pallas_launches(
+        lambda c, k, n, v, q: sops._seal_core(
+            c, k, n, v, q, parity="raid6", use_pallas=True, interpret=True
+        ),
+        codes, *meta,
+    )
+    t = datapath_traffic(S, fused.pad_words, "raid6")
+    gop_kib = fused.pad_words * 4 / 1024
+    return [
+        ("kernel/seal_fused_4shard", us_k,
+         f"exact={ok} launches={launches} hbm_bytes={t['fused_bytes']}"
+         f" ({gop_kib:.0f}KiB/shard)"),
+        ("kernel/seal_staged_ref", us_r,
+         f"passes={sref.N_STAGED_PASSES} hbm_bytes={t['staged_bytes']}"
+         f" traffic_reduction={t['reduction']:.1f}x"),
+    ]
+
+
 def quantize_kernel() -> List[Row]:
     from repro.kernels.quantize.ops import dequantize_blockwise, quantize_blockwise
     from repro.kernels.quantize.ref import quantize_ref

@@ -28,6 +28,7 @@ def main() -> None:
         ("kernels/polymul", kernels_bench.polymul_kernel),
         ("kernels/motion", kernels_bench.motion_kernel),
         ("kernels/quantize", kernels_bench.quantize_kernel),
+        ("kernels/seal", kernels_bench.seal_datapath),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,23 +1,23 @@
 """Quickstart: the Salient Store archival pipeline in ~60 lines.
 
     compress (layered neural codec, motion-vector latent)
-      -> encrypt (R-LWE KEM + ChaCha20)
-        -> erasure-code (RAID-6 across storage shards)
-          -> lose two shards -> rebuild -> decrypt -> decode.
+      -> encrypt + erasure-code in ONE fused kernel pass
+         (pack + ChaCha20 + XOR-seal + RAID-6 P/Q, repro.kernels.seal)
+        -> lose two shards -> rebuild -> decrypt -> decode.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.archival.pipeline import (
     ArchiveConfig,
-    archive_gop,
+    StripeArchive,
+    archive_stripe,
     recover_stripe,
-    restore_gop,
-    stripe_parity,
+    restore_stripe,
+    stripe_manifests,
 )
 from repro.core.codec.layered_codec import CodecConfig, init_codec, psnr
 from repro.core.crypto import rlwe
@@ -32,39 +32,40 @@ def main():
     pub, secret = rlwe.keygen(jax.random.PRNGKey(1))
     print("== Salient Store quickstart ==")
 
-    # four camera streams -> four storage shards (one GOP each)
-    blocks = []
+    # four camera streams -> four storage shards, archived as ONE stripe:
+    # a single fused kernel launch packs, seals, and parity-codes all four
+    frames_list = []
     for sid in range(4):
         stream = VideoStream(sid, 1000 * sid, 32, 32, 30.0, 64)
-        frames = render_clip(stream, 0, 3)[:, None]  # (T, 1, H, W, 3)
-        blk, recons = archive_gop(
-            codec_params, pub, frames, jax.random.PRNGKey(10 + sid), cfg
-        )
-        blocks.append(blk)
+        frames_list.append(render_clip(stream, 0, 3)[:, None])  # (T, 1, H, W, 3)
+
+    stripe, recons = archive_stripe(
+        codec_params, pub, frames_list, jax.random.PRNGKey(10), cfg
+    )
+    for sid, (frames, blk, rec) in enumerate(
+        zip(frames_list, stripe.blocks, recons)
+    ):
         print(
             f"stream {sid}: {frames.size * 4:6d} raw bytes -> "
             f"{blk.sealed.body.size * 4:5d} sealed bytes, "
-            f"codec psnr {float(psnr(recons, frames)):.1f} dB (untrained AE)"
+            f"codec psnr {float(psnr(rec, frames)):.1f} dB (untrained AE)"
         )
-
-    parity = stripe_parity(blocks, "raid6")
-    print("RAID-6 parity computed over the stripe")
+    print("RAID-6 parity computed in the same kernel pass")
 
     # simulate losing two storage shards (paper: intermittent power / pulled disk)
-    manifests = [
-        {"kem_c1": b.sealed.kem_c1, "kem_c2": b.sealed.kem_c2,
-         "nonce": b.sealed.nonce, "manifest": b.manifest}
-        for b in blocks
-    ]
-    lens = [int(b.sealed.body.shape[0]) for b in blocks]
-    holes = [None if i in (1, 3) else blocks[i] for i in range(4)]
+    manifests = stripe_manifests(stripe)
+    lens = [int(b.sealed.body.shape[0]) for b in stripe.blocks]
+    holes = [None if i in (1, 3) else stripe.blocks[i] for i in range(4)]
     print("shards 1 and 3 LOST -> rebuilding from parity ...")
-    rebuilt = recover_stripe(holes, parity, [1, 3], manifests, lens)
+    rebuilt = recover_stripe(holes, stripe.parity, [1, 3], manifests, lens)
 
+    # fused unseal also re-verifies parity against the stored P/Q
+    a = restore_stripe(
+        codec_params, secret, StripeArchive(rebuilt, stripe.parity), cfg
+    )
+    b = restore_stripe(codec_params, secret, stripe, cfg)
     for i in (1, 3):
-        a = restore_gop(codec_params, secret, rebuilt[i], cfg)
-        b = restore_gop(codec_params, secret, blocks[i], cfg)
-        assert np.allclose(np.asarray(a), np.asarray(b)), "rebuild mismatch!"
+        assert np.allclose(np.asarray(a[i]), np.asarray(b[i])), "rebuild mismatch!"
     print("rebuilt shards decrypt + decode identically. done.")
 
 

@@ -1,0 +1,42 @@
+"""Byte-level entropy stage: zstd when available, stdlib zlib fallback.
+
+``zstandard`` is an optional dependency (the paper's own entropy coder); on
+hosts without it the archival/checkpoint paths degrade to zlib rather than
+failing at import.  Within one host the choice is deterministic, so blobs
+written by ``compress`` always round-trip through ``decompress``.
+"""
+
+from __future__ import annotations
+
+__all__ = ["HAVE_ZSTD", "CODEC_NAME", "compress", "decompress"]
+
+try:
+    import zstandard as _zstd
+
+    HAVE_ZSTD = True
+    CODEC_NAME = "zstd"
+
+    def compress(data: bytes, level: int = 3) -> bytes:
+        return _zstd.ZstdCompressor(level=level).compress(data)
+
+    def decompress(blob: bytes, max_output_size: int = 0) -> bytes:
+        return _zstd.ZstdDecompressor().decompress(
+            blob, max_output_size=max_output_size
+        )
+
+except ModuleNotFoundError:
+    import zlib as _zlib
+
+    HAVE_ZSTD = False
+    CODEC_NAME = "zlib"
+
+    def compress(data: bytes, level: int = 3) -> bytes:
+        # zstd levels go to 22; clamp into zlib's 0..9 range
+        return _zlib.compress(data, min(level, 9))
+
+    def decompress(blob: bytes, max_output_size: int = 0) -> bytes:
+        if max_output_size:
+            out = _zlib.decompressobj().decompress(blob, max_output_size)
+        else:
+            out = _zlib.decompress(blob)
+        return out

@@ -8,6 +8,16 @@ Device path (runs where the data shard lives — the CSD analogue):
 
 Only steps that must see raw bytes (zstd entropy stage, disk I/O) run host
 side, on *sealed, compressed* data — the paper's data-movement thesis.
+
+Two granularities:
+
+* ``archive_stripe`` / ``restore_stripe`` — the batched hot path.  All S
+  shards of a stripe are packed, ChaCha-sealed, and parity-coded in ONE
+  fused Pallas launch (``repro.kernels.seal``); only the tiny per-shard KEM
+  runs outside the kernel.  ``use_pallas=False`` dispatches the staged jnp
+  reference instead (bit-identical outputs).
+* ``archive_gop`` / ``restore_gop`` + ``stripe_parity`` — the per-block
+  reference path, kept as the dispatch/compat layer and for single-GOP use.
 """
 
 from __future__ import annotations
@@ -26,15 +36,25 @@ from repro.core.codec.layered_codec import (
     encode_gop,
 )
 from repro.core.crypto import rlwe
-from repro.core.crypto.hybrid import SealedBlock, seal, unseal
+from repro.core.crypto.hybrid import (
+    SealedBlock,
+    encapsulate_session,
+    seal,
+    unseal,
+)
+from repro.kernels.seal import ops as seal_ops
 
 __all__ = [
     "ArchiveConfig",
     "ArchivedBlock",
+    "StripeArchive",
     "pack_i8_to_u32",
     "unpack_u32_to_i8",
     "archive_gop",
     "restore_gop",
+    "archive_stripe",
+    "restore_stripe",
+    "stripe_manifests",
     "stripe_parity",
     "recover_stripe",
 ]
@@ -50,6 +70,13 @@ class ArchiveConfig(NamedTuple):
 class ArchivedBlock(NamedTuple):
     sealed: SealedBlock
     manifest: Dict  # shapes/lengths to invert packing (host-side metadata)
+
+
+class StripeArchive(NamedTuple):
+    """One parity stripe: S archived shards + their P/Q parity."""
+
+    blocks: List[ArchivedBlock]
+    parity: Optional[Dict]  # {"p": u8, "q"?: u8, "pad_to": words} or None
 
 
 def pack_i8_to_u32(x: jax.Array) -> jax.Array:
@@ -133,6 +160,150 @@ def restore_gop(
     flat = unpack_u32_to_i8(words, block.manifest["n_i8"])
     frame_codes = _unflatten_codes(flat, block.manifest)
     return decode_gop(codec_params, cfg.codec, frame_codes)
+
+
+# ------------------------------------------------------------ batched stripe
+def _u32_rows_to_u8(rows: jax.Array) -> jax.Array:
+    """(R, 128) uint32 parity tile -> flat uint8 (R*512,)."""
+    return jax.lax.bitcast_convert_type(rows, jnp.uint8).reshape(-1)
+
+
+def archive_stripe(
+    codec_params,
+    pub: rlwe.PublicKey,
+    frames_list: List[jax.Array],
+    key: jax.Array,
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+) -> Tuple[StripeArchive, List[jax.Array]]:
+    """Archive S GOPs as one parity stripe with a single fused seal launch.
+
+    frames_list: S clips, each (T, B, H, W, 3) — one per storage shard.
+    Per-shard session keys are KEM-encapsulated host-side (tiny); the bulk
+    pack + ChaCha20 + XOR + RAID parity run in one kernel pass over the
+    stripe (``use_pallas=False`` runs the staged jnp reference instead,
+    producing bit-identical bodies and parity).
+    """
+    flats, manifests, recons = [], [], []
+    for frames in frames_list:
+        frame_codes, rec = encode_gop(
+            codec_params, cfg.codec, frames, n_layers=cfg.n_layers
+        )
+        flat, manifest = _flatten_codes(frame_codes)
+        flats.append(flat)
+        manifests.append(dict(manifest, frames_shape=tuple(frames.shape)))
+        recons.append(rec)
+
+    mats = [
+        encapsulate_session(pub, jax.random.fold_in(key, s), cfg.rlwe)
+        for s in range(len(flats))
+    ]
+    stripe = seal_ops.seal_stripe(
+        flats,
+        jnp.stack([m.session for m in mats]),
+        jnp.stack([m.nonce for m in mats]),
+        parity=cfg.parity,
+        use_pallas=use_pallas,
+    )
+    blocks = [
+        ArchivedBlock(
+            SealedBlock(
+                m.kem_c1, m.kem_c2, m.nonce, stripe.body(s), stripe.n_words[s]
+            ),
+            manifests[s],
+        )
+        for s, m in enumerate(mats)
+    ]
+    parity = None
+    if cfg.parity != "none":
+        parity = {"p": _u32_rows_to_u8(stripe.p), "pad_to": stripe.pad_words}
+        if stripe.q is not None:
+            parity["q"] = _u32_rows_to_u8(stripe.q)
+    return StripeArchive(blocks, parity), recons
+
+
+def restore_stripe(
+    codec_params,
+    s: jax.Array,
+    stripe: StripeArchive,
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+    verify_parity: bool = True,
+) -> List[jax.Array]:
+    """Decode every shard of a stripe with a single fused unseal launch.
+
+    The kernel recomputes P/Q from the sealed bodies as stored; with
+    ``verify_parity`` the recomputation must match the parity written at
+    seal time (stripe integrity check) or a ``ValueError`` is raised.
+    """
+    sessions, nonces = [], []
+    for b in stripe.blocks:
+        sessions.append(
+            rlwe.kem_decapsulate(
+                s, rlwe.Ciphertext(b.sealed.kem_c1, b.sealed.kem_c2), cfg.rlwe
+            )
+        )
+        nonces.append(b.sealed.nonce)
+
+    n_words = tuple(int(b.sealed.body.shape[0]) for b in stripe.blocks)
+    n_i8 = tuple(b.manifest["n_i8"] for b in stripe.blocks)
+    R = seal_ops.pad_rows_for(max(n_words))
+    sealed = jnp.stack(
+        [
+            jnp.pad(b.sealed.body, (0, R * 128 - n)).reshape(R, 128)
+            for b, n in zip(stripe.blocks, n_words)
+        ]
+    )
+    packed = seal_ops.SealedStripe(sealed, None, None, n_words, n_i8)
+    # recompute parity in the mode the stripe was actually sealed with (the
+    # stored parity dict is ground truth), not whatever the caller's cfg
+    # says — otherwise verify_parity could silently compare nothing
+    if stripe.parity is None:
+        parity_mode = "none"
+    else:
+        parity_mode = "raid6" if "q" in stripe.parity else "raid5"
+    flats, p2, q2 = seal_ops.unseal_stripe(
+        packed,
+        jnp.stack(sessions),
+        jnp.stack(nonces),
+        parity=parity_mode,
+        use_pallas=use_pallas,
+    )
+    if verify_parity and stripe.parity is not None:
+        for name, got in (("p", p2), ("q", q2)):
+            want = stripe.parity.get(name)
+            if want is None or got is None:
+                continue
+            got_u8 = np.asarray(_u32_rows_to_u8(got))
+            want_u8 = np.asarray(want)
+            n = min(got_u8.size, want_u8.size)
+            if not (
+                np.array_equal(got_u8[:n], want_u8[:n])
+                and not got_u8[n:].any()
+                and not want_u8[n:].any()
+            ):
+                raise ValueError(f"stripe parity mismatch on {name.upper()}")
+
+    out = []
+    for i, b in enumerate(stripe.blocks):
+        frame_codes = _unflatten_codes(flats[i][: n_i8[i]], b.manifest)
+        out.append(decode_gop(codec_params, cfg.codec, frame_codes))
+    return out
+
+
+def stripe_manifests(stripe: StripeArchive) -> List[Dict]:
+    """Replicated-metadata records in the format ``recover_stripe`` expects."""
+    return [
+        {
+            "kem_c1": b.sealed.kem_c1,
+            "kem_c2": b.sealed.kem_c2,
+            "nonce": b.sealed.nonce,
+            "manifest": b.manifest,
+        }
+        for b in stripe.blocks
+    ]
 
 
 # --------------------------------------------------------------- parity tier

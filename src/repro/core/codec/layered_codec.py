@@ -158,7 +158,8 @@ def serialize_bitstream(frame_codes, level: int = 9):
     benchmarks are computed from real compressed sizes, not proxies.
     """
     import numpy as np
-    import zstandard as zstd
+
+    from repro.common import compress as entropy
 
     parts = []
     for fc in frame_codes:
@@ -167,5 +168,5 @@ def serialize_bitstream(frame_codes, level: int = 9):
         if fc.mv is not None:
             parts.append(np.asarray(fc.mv).astype(np.int8).tobytes())
     raw = b"".join(parts)
-    blob = zstd.ZstdCompressor(level=level).compress(raw)
+    blob = entropy.compress(raw, level=level)
     return blob, len(raw)

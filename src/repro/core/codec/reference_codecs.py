@@ -121,7 +121,7 @@ class ClassicalCodec:
         return CodedGop(coeffs, mvs), jnp.stack(recons)
 
     def bitstream_bytes(self, coded: CodedGop, level: int = 9):
-        import zstandard as zstd
+        from repro.common import compress as entropy
 
         parts = []
         for yq in coded.coeffs:
@@ -130,7 +130,7 @@ class ClassicalCodec:
             if mv is not None:
                 parts.append(np.asarray(mv).astype(np.int8).tobytes())
         raw = b"".join(parts)
-        return zstd.ZstdCompressor(level=level).compress(raw)
+        return entropy.compress(raw, level=level)
 
 
 def h264_like() -> ClassicalCodec:

@@ -6,18 +6,36 @@ cipher under the KEM (encrypting terabytes coefficient-by-coefficient with
 R-LWE would inflate data ~80x, defeating the data-movement goal).  ChaCha20
 is pure 32-bit add/rotate/xor — fully vectorizable on the TPU VPU, one lane
 per 64-byte block, so the whole keystream is a single fused elementwise graph.
+
+The round function is exposed in a *kernel-callable* form
+(``chacha_rounds_planes``): the 16 state words live as 16 separate arrays of
+identical shape ("planes"), so the whole permutation is scatter/gather-free
+elementwise arithmetic — exactly what a Pallas VPU kernel can consume (see
+``repro.kernels.seal``).  The host-side ``chacha20_block`` is a thin layout
+wrapper over the same core, so kernel and reference share one dataflow.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["chacha20_block", "keystream", "xor_stream", "encrypt_u32", "decrypt_u32"]
+__all__ = [
+    "CONSTANTS",
+    "chacha_rounds_planes",
+    "chacha20_block",
+    "keystream",
+    "xor_stream",
+    "encrypt_u32",
+    "decrypt_u32",
+    "bucket_n_words",
+]
 
-_CONSTANTS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)  # "expand 32-byte k"
+CONSTANTS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)  # "expand 32-byte k"
+_CONSTANTS = CONSTANTS  # backward-compat alias
 
 _COLUMN_IX = ((0, 4, 8, 12), (1, 5, 9, 13), (2, 6, 10, 14), (3, 7, 11, 15))
 _DIAG_IX = ((0, 5, 10, 15), (1, 6, 11, 12), (2, 7, 8, 13), (3, 4, 9, 14))
@@ -27,8 +45,8 @@ def _rotl(x, r: int):
     return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
 
 
-def _quarter(x, ia, ib, ic, id_):
-    a, b, c, d = x[..., ia], x[..., ib], x[..., ic], x[..., id_]
+def _quarter_planes(x: List[jax.Array], ia: int, ib: int, ic: int, id_: int) -> None:
+    a, b, c, d = x[ia], x[ib], x[ic], x[id_]
     a = a + b
     d = _rotl(d ^ a, 16)
     c = c + d
@@ -37,28 +55,41 @@ def _quarter(x, ia, ib, ic, id_):
     d = _rotl(d ^ a, 8)
     c = c + d
     b = _rotl(b ^ c, 7)
-    return x.at[..., ia].set(a).at[..., ib].set(b).at[..., ic].set(c).at[..., id_].set(d)
+    x[ia], x[ib], x[ic], x[id_] = a, b, c, d
 
 
-def _double_round(x):
-    for ix in _COLUMN_IX:
-        x = _quarter(x, *ix)
-    for ix in _DIAG_IX:
-        x = _quarter(x, *ix)
-    return x
+def chacha_rounds_planes(state: Sequence[jax.Array]) -> List[jax.Array]:
+    """20 ChaCha rounds + feed-forward on 16 uint32 planes of equal shape.
+
+    Pure add/rotate/xor on whole planes — no scatter, no gather, no lane
+    shuffles — so it is directly callable from inside a Pallas kernel body
+    where the planes are VMEM-resident tiles of block counters.
+    """
+    def _double_round(_, planes):
+        x = list(planes)
+        for ix in _COLUMN_IX:
+            _quarter_planes(x, *ix)
+        for ix in _DIAG_IX:
+            _quarter_planes(x, *ix)
+        return tuple(x)
+
+    x = jax.lax.fori_loop(0, 10, _double_round, tuple(state))
+    return [xi + si for xi, si in zip(x, state)]
 
 
 def chacha20_block(key: jax.Array, counter: jax.Array, nonce: jax.Array) -> jax.Array:
     """key (8,) u32, counter scalar-or-(B,) u32, nonce (3,) u32 -> (..., 16) u32."""
     counter = jnp.atleast_1d(jnp.asarray(counter, jnp.uint32))
     B = counter.shape[0]
-    const = jnp.tile(jnp.array(_CONSTANTS, jnp.uint32), (B, 1))
-    keyw = jnp.tile(key.astype(jnp.uint32), (B, 1))
-    noncew = jnp.tile(nonce.astype(jnp.uint32), (B, 1))
-    state = jnp.concatenate([const, keyw, counter[:, None], noncew], axis=-1)
-    x = state
-    x = jax.lax.fori_loop(0, 10, lambda _, s: _double_round(s), x)
-    return x + state
+    key = key.astype(jnp.uint32)
+    nonce = nonce.astype(jnp.uint32)
+    state = (
+        [jnp.full((B,), c, jnp.uint32) for c in CONSTANTS]
+        + [jnp.broadcast_to(key[i], (B,)) for i in range(8)]
+        + [counter]
+        + [jnp.broadcast_to(nonce[i], (B,)) for i in range(3)]
+    )
+    return jnp.stack(chacha_rounds_planes(state), axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("n_words",))
@@ -72,11 +103,31 @@ def keystream(
     return ks.reshape(-1)[:n_words]
 
 
+def bucket_n_words(n: int) -> int:
+    """Smallest power of two >= max(n, 16).
+
+    ``keystream`` specializes on ``n_words`` (a static argname), so every
+    distinct body length would trigger a fresh jit trace.  Bucketing lengths
+    to powers of two bounds the number of traces at log2(max_len) across
+    arbitrarily mixed GOP sizes (pad to the bucket, slice back after XOR).
+    """
+    return max(16, 1 << (int(n) - 1).bit_length())
+
+
 def xor_stream(key, nonce, data_u32: jax.Array, counter0: int = 0) -> jax.Array:
-    """XOR a flat uint32 array with the keystream (encrypt == decrypt)."""
+    """XOR a flat uint32 array with the keystream (encrypt == decrypt).
+
+    Keystream length is bucketed to the next power of two so mixed-size
+    payloads (e.g. variable GOPs in ``hybrid.seal``/``unseal``) share one
+    compiled trace per bucket instead of one per distinct length.
+    """
     flat = data_u32.reshape(-1).astype(jnp.uint32)
-    ks = keystream(key, nonce, flat.shape[0], counter0)
-    return (flat ^ ks).reshape(data_u32.shape)
+    n = flat.shape[0]
+    nb = bucket_n_words(n)
+    if nb != n:
+        flat = jnp.pad(flat, (0, nb - n))
+    ks = keystream(key, nonce, nb, counter0)
+    return (flat ^ ks)[:n].reshape(data_u32.shape)
 
 
 encrypt_u32 = xor_stream

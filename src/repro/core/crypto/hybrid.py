@@ -18,7 +18,15 @@ import jax.numpy as jnp
 from repro.core.crypto import rlwe
 from repro.core.crypto.chacha import xor_stream
 
-__all__ = ["SealedBlock", "seal", "unseal", "bytes_to_u32", "u32_to_bytes"]
+__all__ = [
+    "SealedBlock",
+    "SessionMaterial",
+    "encapsulate_session",
+    "seal",
+    "unseal",
+    "bytes_to_u32",
+    "u32_to_bytes",
+]
 
 
 class SealedBlock(NamedTuple):
@@ -44,6 +52,34 @@ def u32_to_bytes(words: jax.Array, n_bytes: int) -> bytes:
     return np.asarray(words).astype("<u4").tobytes()[:n_bytes]
 
 
+class SessionMaterial(NamedTuple):
+    """One shard's bulk-encryption material: KEM ciphertext + symmetric key."""
+
+    kem_c1: jax.Array  # (1, n) int32
+    kem_c2: jax.Array  # (1, n) int32
+    session: jax.Array  # (8,) uint32 ChaCha key (never stored)
+    nonce: jax.Array  # (3,) uint32
+
+
+def encapsulate_session(
+    pub: rlwe.PublicKey,
+    key: jax.Array,
+    params: rlwe.RLWEParams = rlwe.RLWEParams(),
+) -> SessionMaterial:
+    """Fresh session key + nonce under the lattice KEM.
+
+    Split out of ``seal`` so batched paths (the fused stripe kernel in
+    ``repro.kernels.seal``) can run the tiny per-shard KEM host-side and hand
+    all S session keys to one kernel launch for the bulk bytes.
+    """
+    k_kem, k_nonce = jax.random.split(key)
+    ct, session = rlwe.kem_encapsulate(pub, k_kem, params)
+    nonce = jax.random.randint(
+        k_nonce, (3,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    ).astype(jnp.uint32)
+    return SessionMaterial(ct.c1, ct.c2, session, nonce)
+
+
 def seal(
     pub: rlwe.PublicKey,
     payload_u32: jax.Array,
@@ -51,13 +87,9 @@ def seal(
     params: rlwe.RLWEParams = rlwe.RLWEParams(),
 ) -> SealedBlock:
     """Encrypt a uint32 payload under a fresh encapsulated session key."""
-    k_kem, k_nonce = jax.random.split(key)
-    ct, session = rlwe.kem_encapsulate(pub, k_kem, params)
-    nonce = jax.random.randint(
-        k_nonce, (3,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
-    ).astype(jnp.uint32)
-    body = xor_stream(session, nonce, payload_u32)
-    return SealedBlock(ct.c1, ct.c2, nonce, body, int(payload_u32.size))
+    sm = encapsulate_session(pub, key, params)
+    body = xor_stream(sm.session, sm.nonce, payload_u32)
+    return SealedBlock(sm.kem_c1, sm.kem_c2, sm.nonce, body, int(payload_u32.size))
 
 
 def unseal(

@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages for the paper's compute hot-spots.
+
+Each kernel lives in its own package as ``<name>.py`` (the Pallas kernel),
+``ref.py`` (a pure-jnp oracle the kernel must match bit-for-bit), and
+``ops.py`` (jit'd public wrappers handling padding and dispatch).
+
+Kernels: ``polymul`` (R-LWE negacyclic matmul, MXU), ``motion`` (block
+matching, VPU), ``quantize`` (blockwise int8, VPU), ``seal`` (fused archival
+pack + ChaCha20 + XOR-seal + RAID parity, VPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["use_interpret"]
+
+
+def use_interpret(interpret: Optional[bool] = None) -> bool:
+    """Pallas ``interpret=`` autodetect shared by every kernel ``ops`` module.
+
+    Off-TPU backends (CPU/GPU hosts, CI) run kernels through the Pallas
+    interpreter; on TPU the same call sites lower to real Mosaic kernels.
+    Pass an explicit bool to override (tests / debugging).
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import use_interpret as _use_interpret
 from repro.kernels.motion import ref as _ref
 from repro.kernels.motion.motion import block_motion_pallas
 
@@ -39,7 +40,7 @@ def estimate_motion(cur, prev, *, block: int = 16, radius: int = 8, use_kernel=T
         prev_padded,
         block=block,
         radius=radius,
-        interpret=jax.default_backend() != "tpu",
+        interpret=_use_interpret(),
     )
     return jnp.stack([dy, dx], axis=-1), sad
 

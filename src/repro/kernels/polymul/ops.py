@@ -18,14 +18,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import use_interpret as _use_interpret
 from repro.kernels.polymul import ref as _ref
 from repro.kernels.polymul.polymul import DEFAULT_TILE_B, negacyclic_matmul_pallas
 
 __all__ = ["polymul_fixed", "polymul"]
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("q", "use_kernel", "tile_b"))

@@ -7,14 +7,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import use_interpret as _use_interpret
 from repro.kernels.quantize import ref as _ref
 from repro.kernels.quantize.quantize import dequantize_pallas, quantize_pallas
 
 __all__ = ["quantize_blockwise", "dequantize_blockwise"]
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("block", "use_kernel"))

@@ -27,7 +27,10 @@ def _quant_kernel(x_ref, q_ref, s_ref, *, block: int):
     x = x_ref[...].astype(jnp.float32)  # (rows, N)
     rows, n = x.shape
     xb = x.reshape(rows, n // block, block)
-    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    # reciprocal multiply, matching ref.quantize_ref (see comment there)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) * jnp.float32(
+        1.0 / 127.0
+    )
     q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
     q_ref[...] = q.reshape(rows, n).astype(jnp.int8)
     s_ref[...] = scale.astype(jnp.float32)

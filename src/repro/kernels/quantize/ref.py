@@ -19,8 +19,13 @@ def quantize_ref(x, block: int = 128):
     *lead, n = x.shape
     assert n % block == 0, (n, block)
     xb = x.astype(jnp.float32).reshape(*lead, n // block, block)
-    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
+    # explicit reciprocal multiply: XLA rewrites /127.0 to *(1/127) under
+    # jit but not in eager mode, so a literal division would make the eager
+    # oracle differ from the jitted kernel by 1 ULP (enough to flip a
+    # round-half case).  The multiply is the same op in both modes.
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) * jnp.float32(
+        1.0 / 127.0
+    )
     q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
     return q.reshape(*lead, n), scale
 

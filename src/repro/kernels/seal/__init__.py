@@ -1,0 +1,35 @@
+"""Fused CSD seal datapath: one Pallas pass for pack + ChaCha20 + XOR + parity.
+
+Salient Store's Fig. 1 runs the archival flow *on the storage device* so the
+host link only ever carries compressed, sealed bytes.  This package is the
+TPU analogue of that CSD flow — each stage of the paper's device-side
+pipeline maps onto one step of a single VMEM-resident kernel pass:
+
+======================  =======================================================
+Paper Fig. 1 CSD stage  Kernel stage (one grid step, one VMEM tile)
+======================  =======================================================
+"compress" output       int8 codec codes stream in from HBM (read #1, the
+                        only read of the payload)
+bitstream packing       (a) int8 x4 -> uint32 lane pack (shift/or, VPU)
+"encrypt"               (b) ChaCha20 keystream generated *in kernel* from the
+                        per-shard session key (RFC 8439 double rounds on
+                        uint32 planes — pure add/rotate/xor VPU work), then
+                        (c) XOR-seal of the packed payload
+"RAID" parity           (d) RAID-5 P (XOR) and RAID-6 Q (GF(256) multiply by
+                        g^shard via SWAR shift/xor, no tables) accumulated
+                        across the stripe's S shards in the revisited parity
+                        output block
+======================  =======================================================
+
+HBM traffic per stripe tile is exactly read-int8 + write-uint32(+parity);
+the staged jnp path (``ref.py``) makes ~6 separate HBM round-trips for the
+same math.  ``ref.py`` is the bit-exact oracle, ``ops.py`` the padding /
+dispatch layer (``use_pallas`` flag, interpret autodetect off-TPU).
+"""
+
+from repro.kernels.seal.ops import (  # noqa: F401
+    SealedStripe,
+    datapath_traffic,
+    seal_stripe,
+    unseal_stripe,
+)

@@ -1,0 +1,119 @@
+"""Staged pure-jnp oracle for the fused seal datapath (bit-exact target).
+
+This is the pre-fusion pipeline kept as the reference and the
+``use_pallas=False`` fallback: each stage is a separate device op over the
+full stripe, i.e. a separate HBM round-trip on a real accelerator.  The
+stage list below is what ``benchmarks/kernels_bench.py`` counts against the
+fused kernel's single launch.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.archival import raid
+from repro.core.crypto.chacha import chacha20_block
+
+__all__ = ["STAGED_PASSES", "N_STAGED_PASSES", "seal_stripe_ref", "unseal_stripe_ref"]
+
+# One entry per full-payload HBM round-trip in the staged pipeline.
+STAGED_PASSES = (
+    "pack int8->u32 (read i8, write u32)",
+    "ChaCha20 keystream (write u32)",
+    "XOR-seal (read payload + keystream, write u32)",
+    "valid-length mask (read + write u32)",
+    "u32->u8 bitcast for GF math (read + write)",
+    "RAID P/Q accumulation over S shards (S reads per parity)",
+)
+N_STAGED_PASSES = len(STAGED_PASSES)
+
+
+def _pack_rows(codes: jnp.ndarray) -> jnp.ndarray:
+    """(S, R, 512) int8 -> (S, R, 128) uint32, little-endian lanes."""
+    S, R, C = codes.shape
+    b = (codes.astype(jnp.int32) & 0xFF).astype(jnp.uint32).reshape(S, R, C // 4, 4)
+    sh = jnp.arange(4, dtype=jnp.uint32) * 8
+    return (b << sh).sum(-1, dtype=jnp.uint32)
+
+
+def _unpack_rows(words: jnp.ndarray) -> jnp.ndarray:
+    """(S, R, 128) uint32 -> (S, R, 512) int8 (two's complement)."""
+    S, R, L = words.shape
+    sh = jnp.arange(4, dtype=jnp.uint32) * 8
+    v = ((words[..., None] >> sh) & jnp.uint32(0xFF)).astype(jnp.int32)
+    signed = v - ((v & 0x80) << 1)
+    return signed.reshape(S, R, 4 * L).astype(jnp.int8)
+
+
+def _keystream_rows(keys, nonces, R: int) -> jnp.ndarray:
+    """Per-shard ChaCha20 keystream shaped (S, R, 128), counter0 = 0."""
+    n_blocks = R * 128 // 16
+    counters = jnp.arange(n_blocks, dtype=jnp.uint32)
+    rows = [
+        chacha20_block(keys[s], counters, nonces[s]).reshape(R, 128)
+        for s in range(keys.shape[0])
+    ]
+    return jnp.stack(rows)
+
+
+def _mask_valid(words, n_valid) -> jnp.ndarray:
+    S, R, L = words.shape
+    widx = jnp.arange(R * L, dtype=jnp.int32).reshape(1, R, L)
+    return jnp.where(widx < n_valid.reshape(S, 1, 1), words, jnp.uint32(0))
+
+
+def _rows_u8(words: jnp.ndarray) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(
+        words.shape[0], -1
+    )
+
+
+def _u8_rows_to_u32(rows: jnp.ndarray, R: int) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.bitcast_convert_type(
+        rows.reshape(-1, 4), jnp.uint32
+    ).reshape(R, 128)
+
+
+def _parity(words, q_coef, parity: str):
+    if parity == "none":
+        return None, None
+    data = _rows_u8(words)  # (S, R*512) uint8
+    R = words.shape[1]
+    p = _u8_rows_to_u32(raid.raid5_encode(data), R)
+    if parity == "raid5":
+        return p, None
+    q = jnp.zeros_like(data[0])
+    for s in range(data.shape[0]):
+        q = q ^ raid.gf_mul(q_coef[s, 0].astype(jnp.uint8), data[s])
+    return p, _u8_rows_to_u32(q, R)
+
+
+def seal_stripe_ref(
+    codes, keys, nonces, n_valid, q_coef, *, parity: str = "raid6"
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    """Staged seal: same signature/outputs as ``seal_stripe_pallas``."""
+    R = codes.shape[1]
+    packed = _pack_rows(codes)                      # pass 1
+    ks = _keystream_rows(keys, nonces, R)           # pass 2
+    sealed = packed ^ ks                            # pass 3
+    sealed = _mask_valid(sealed, n_valid)           # pass 4
+    p, q = _parity(sealed, q_coef, parity)          # passes 5-6
+    return sealed, p, q
+
+
+def unseal_stripe_ref(
+    sealed, keys, nonces, n_valid, q_coef, *, parity: str = "raid6"
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    """Staged decode twin: same outputs as ``unseal_stripe_pallas``."""
+    R = sealed.shape[1]
+    ks = _keystream_rows(keys, nonces, R)
+    words = _mask_valid(sealed ^ ks, n_valid)
+    codes = _unpack_rows(words)
+    p, q = _parity(sealed, q_coef, parity)
+    return codes, p, q

@@ -21,8 +21,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard as zstd
 
+from repro.common import compress as entropy
 from repro.core.archival import raid
 from repro.core.crypto import rlwe
 from repro.core.crypto.chacha import xor_stream
@@ -67,7 +67,7 @@ def save_checkpoint(
     """state: arbitrary pytree (params/opt/extra). Returns the manifest."""
     j = Journal(root)
     raw = _serialize_tree(state)
-    comp = zstd.ZstdCompressor(level=zstd_level).compress(raw)
+    comp = entropy.compress(raw, level=zstd_level)
 
     meta: Dict[str, Any] = {
         "step": int(step),
@@ -76,6 +76,7 @@ def save_checkpoint(
         "raw_len": len(raw),
         "comp_len": len(comp),
         "sealed": bool(seal_key is not None),
+        "codec": entropy.CODEC_NAME,  # zstd or the zlib fallback
     }
     payload = comp
     if seal_key is not None:
@@ -201,7 +202,14 @@ def load_checkpoint(
     else:
         payload = payload[: meta["comp_len"]]
 
-    raw = zstd.ZstdDecompressor().decompress(payload, max_output_size=meta["raw_len"])
+    ckpt_codec = meta.get("codec", "zstd")
+    if ckpt_codec != entropy.CODEC_NAME:
+        raise CheckpointError(
+            f"checkpoint was written with {ckpt_codec!r} but this host's "
+            f"entropy codec is {entropy.CODEC_NAME!r} "
+            f"(install zstandard to read zstd checkpoints)"
+        )
+    raw = entropy.decompress(payload, max_output_size=meta["raw_len"])
     leaves = _deserialize_leaves(raw)
     t_leaves, treedef = jax.tree_util.tree_flatten(template)
     if len(leaves) != len(t_leaves):

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.archival.exemplar import select_exemplars
-from repro.core.archival.pipeline import ArchiveConfig, archive_gop, stripe_parity
+from repro.core.archival.pipeline import ArchiveConfig, archive_stripe
 from repro.core.codec.feature_extractor import extract_features
 from repro.core.codec.layered_codec import CodecConfig, init_codec, psnr
 from repro.core.codec.training import (
@@ -164,24 +164,26 @@ class SalientTrainer:
             self.trainable, self.frozen, self.opt_state, self.train_cfg, train_clips
         )
 
-        # 4. archive the known clips, one block per owning shard, with parity
+        # 4. archive the known clips as ONE parity stripe: all shards are
+        # packed + sealed + parity-coded in a single fused kernel launch
         params = self._params()
         blocks, shard_of = [], []
         total_bytes = 0
         recon_psnrs = []
-        for i in archive_ids:
-            sid = self.streams[i].stream_id
-            frames = clips[sid][:, None]  # (T, 1, H, W, 3)
-            blk, recons = archive_gop(
-                params, self.pub, frames, jax.random.fold_in(step_key, sid),
-                self.archive_cfg,
+        if archive_ids:
+            frames_list = [
+                clips[self.streams[i].stream_id][:, None] for i in archive_ids
+            ]  # each (T, 1, H, W, 3)
+            shard_of = [self.placement.assignment[i] for i in archive_ids]
+            stripe, recons_list = archive_stripe(
+                params, self.pub, frames_list,
+                jax.random.fold_in(step_key, self.step), self.archive_cfg,
             )
-            blocks.append(blk)
-            shard_of.append(self.placement.assignment[i])
-            total_bytes += int(blk.sealed.body.size) * 4
-            recon_psnrs.append(float(psnr(recons, frames)))
+            blocks = stripe.blocks
+            for frames, recons, blk in zip(frames_list, recons_list, blocks):
+                total_bytes += int(blk.sealed.body.size) * 4
+                recon_psnrs.append(float(psnr(recons, frames)))
         if blocks:
-            parity = stripe_parity(blocks, self.cfg.parity)
             rec_name = f"archive_{self.step:08d}"
             body = b"".join(
                 np.asarray(b.sealed.body).astype("<u4").tobytes() for b in blocks
@@ -192,9 +194,25 @@ class SalientTrainer:
                 {
                     "step": self.step,
                     "shards": shard_of,
-                    "parity": self.cfg.parity,
+                    "parity": self.archive_cfg.parity,
+                    "body_words": [int(b.sealed.body.size) for b in blocks],
                 },
             )
+            if stripe.parity is not None:
+                # persist P/Q so shard loss in the .bin is actually recoverable
+                p_u8 = np.asarray(stripe.parity["p"])
+                q_u8 = stripe.parity.get("q")
+                self.journal.commit(
+                    rec_name + ".parity.bin",
+                    p_u8.tobytes()
+                    + (np.asarray(q_u8).tobytes() if q_u8 is not None else b""),
+                    {
+                        "step": self.step,
+                        "pad_to": int(stripe.parity["pad_to"]),
+                        "p_len": int(p_u8.size),
+                        "has_q": q_u8 is not None,
+                    },
+                )
 
         # 5. straggler handling
         rebalanced = False

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.polymul import ref as pref
 from repro.kernels.polymul.ops import polymul, polymul_fixed
@@ -193,6 +193,42 @@ def test_chacha_involution_and_determinism():
     # different nonce -> different stream
     enc2 = xor_stream(key, jnp.asarray([9, 9, 9], jnp.uint32), data)
     assert not np.array_equal(np.asarray(enc), np.asarray(enc2))
+
+
+def test_keystream_single_trace_across_mixed_sizes():
+    """xor_stream buckets lengths to powers of two: one jit trace serves a
+    whole bucket of mixed GOP sizes instead of retracing per length."""
+    if not hasattr(keystream, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    key = jnp.arange(8, dtype=jnp.uint32)
+    nonce = jnp.ones(3, jnp.uint32)
+    keystream._clear_cache()
+    outs = {}
+    for n in (513, 700, 901, 1024):  # all land in the 1024-word bucket
+        data = jnp.arange(n, dtype=jnp.uint32)
+        enc = xor_stream(key, nonce, data)
+        np.testing.assert_array_equal(
+            np.asarray(xor_stream(key, nonce, enc)), np.asarray(data)
+        )
+        outs[n] = enc
+    assert keystream._cache_size() == 1
+    # bucketing must not change the stream: same prefix for every length
+    np.testing.assert_array_equal(
+        np.asarray(outs[513]), np.asarray(outs[1024][:513])
+    )
+
+
+def test_hybrid_seal_mixed_gop_sizes_share_one_trace():
+    if not hasattr(keystream, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    pub, s = rlwe.keygen(jax.random.PRNGKey(11))
+    keystream._clear_cache()
+    for i, n_words in enumerate((525, 725, 925, 1024)):  # 1024-word bucket
+        words = jnp.arange(n_words, dtype=jnp.uint32)
+        block = seal(pub, words, jax.random.PRNGKey(20 + i))
+        got = unseal(s, block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(words))
+    assert keystream._cache_size() == 1
 
 
 def test_chacha_keystream_counter_continuity():
