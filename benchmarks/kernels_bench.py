@@ -8,13 +8,28 @@ verification against the oracle.
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, timeit
+
+# Machine-readable mirror of the kernel rows; ``benchmarks/run.py`` dumps it
+# to BENCH_kernels.json at the repo root so the perf trajectory (GB/s, launch
+# counts, device counts) is diffable across PRs.
+JSON_METRICS: Dict[str, dict] = {}
+
+
+def record_json(name: str, **kv) -> None:
+    JSON_METRICS[name] = kv
+
+
+def _gbps(n_bytes: int, us: float) -> float:
+    """Bytes processed per wall-clock GB/s (interpret-mode on CPU: trend
+    metric, not the TPU perf claim)."""
+    return n_bytes / us / 1e3 if us > 0 else float("nan")
 
 
 def polymul_kernel() -> List[Row]:
@@ -33,6 +48,11 @@ def polymul_kernel() -> List[Row]:
         )
     )
     flops = 2 * n * n * B * 4  # 4 int8 limb matmuls
+    bytes_io = 4 * (n + B * n + B * n)  # int32 in/out
+    record_json(
+        "polymul", us_per_call=us_k, gbps=_gbps(bytes_io, us_k),
+        launches=1, device_count=1, exact=ok, mxu_flops=flops,
+    )
     return [
         ("kernel/polymul_pallas_256x256", us_k,
          f"exact={ok} mxu_flops={flops:.2e} vmem_tile=(256,256)x4limb"),
@@ -53,6 +73,10 @@ def motion_kernel() -> List[Row]:
     mv_k, _ = estimate_motion(cur, prev)
     mv_r, _ = block_motion_ref(cur, prev)
     ok = bool(np.array_equal(np.asarray(mv_k), np.asarray(mv_r)))
+    record_json(
+        "motion", us_per_call=us_k, gbps=_gbps(2 * H * W * 4, us_k),
+        launches=1, device_count=1, exact=ok,
+    )
     return [
         ("kernel/motion_pallas_128x128", us_k,
          f"exact={ok} offsets=289 halo=triple-fetch"),
@@ -61,14 +85,21 @@ def motion_kernel() -> List[Row]:
 
 
 def _count_pallas_launches(fn, *args) -> int:
-    """Number of pallas_call primitives in fn's jaxpr (incl. sub-jaxprs)."""
+    """Number of pallas_call primitives in fn's jaxpr (incl. sub-jaxprs).
+
+    Recurses through both ClosedJaxpr params (pjit, scan) and raw Jaxpr
+    params (shard_map), so a shard_map'd kernel counts its per-device
+    launches.
+    """
     def walk(jaxpr) -> int:
         n = 0
         for eqn in jaxpr.eqns:
             if eqn.primitive.name == "pallas_call":
                 n += 1
             for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
+                if hasattr(v, "eqns"):  # raw Jaxpr (shard_map)
+                    n += walk(v)
+                elif hasattr(v, "jaxpr"):
                     inner = v.jaxpr if hasattr(v.jaxpr, "eqns") else v
                     n += walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
         return n
@@ -110,6 +141,23 @@ def seal_datapath() -> List[Row]:
     )
     t = datapath_traffic(S, fused.pad_words, "raid6")
     gop_kib = fused.pad_words * 4 / 1024
+    record_json(
+        "seal_fused",
+        us_per_call=us_k,
+        gbps=_gbps(sum(lens), us_k),
+        launches=launches,
+        device_count=1,
+        exact=ok,
+        hbm_bytes=t["fused_bytes"],
+    )
+    record_json(
+        "seal_staged_ref",
+        us_per_call=us_r,
+        gbps=_gbps(sum(lens), us_r),
+        launches=sref.N_STAGED_PASSES,
+        device_count=1,
+        hbm_bytes=t["staged_bytes"],
+    )
     return [
         ("kernel/seal_fused_4shard", us_k,
          f"exact={ok} launches={launches} hbm_bytes={t['fused_bytes']}"
@@ -118,6 +166,157 @@ def seal_datapath() -> List[Row]:
          f"passes={sref.N_STAGED_PASSES} hbm_bytes={t['staged_bytes']}"
          f" traffic_reduction={t['reduction']:.1f}x"),
     ]
+
+
+def sharded_seal() -> List[Row]:
+    """shard_map'd seal over 1/2/8 host devices + 16-stream ingest coalescing.
+
+    Reports GB/s sealed and launches/stripe: the sharded path must keep
+    launches-per-stripe-per-device at 1, and the coalescer must cut the
+    launch count >= 4x for the ragged multi-stream workload.
+    """
+    from jax.sharding import Mesh
+    from repro.distributed import archival as darch
+    from repro.distributed.archival import (
+        StripeCoalescer,
+        seal_stripe_sharded,
+        unseal_stripe_sharded,
+    )
+    from repro.kernels import use_interpret
+    from repro.kernels.seal import ops as sops
+
+    rng = np.random.default_rng(3)
+    S = 8
+    lens = [int(24 * 512 - rng.integers(0, 512)) for _ in range(S)]
+    payloads = [jnp.asarray(rng.integers(-128, 128, n), jnp.int8) for n in lens]
+    keys = jnp.asarray(rng.integers(0, 2**32, (S, 8), dtype=np.uint32))
+    nonces = jnp.asarray(rng.integers(0, 2**32, (S, 3), dtype=np.uint32))
+    single = sops.seal_stripe(payloads, keys, nonces)
+    total = sum(lens)
+
+    rows: List[Row] = []
+    for D in (1, 2, 8):
+        name = f"kernel/seal_sharded_{D}dev"
+        if D > jax.device_count():
+            rows.append(
+                (name, float("nan"),
+                 f"SKIP: need {D} devices, have {jax.device_count()} "
+                 "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+            )
+            continue
+        mesh = Mesh(np.array(jax.devices()[:D]), ("data",))
+
+        def run(mesh=mesh):
+            return seal_stripe_sharded(payloads, keys, nonces, mesh=mesh)
+
+        us = timeit(run)
+        sh = run()
+        ok = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in ((sh.sealed, single.sealed), (sh.p, single.p),
+                         (sh.q, single.q))
+        )
+        back, _, _ = unseal_stripe_sharded(sh, keys, nonces, mesh=mesh)
+        ok = ok and all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(back, payloads)
+        )
+        # launch count from the jit'd shard_map core's jaxpr (the host-side
+        # wrapper does table lookups make_jaxpr cannot trace); S divides D
+        # here so no dummy-shard padding is involved
+        codes, n_words, _ = sops._stack_padded(
+            [p.reshape(-1).astype(jnp.int8) for p in payloads]
+        )
+        core = darch._sharded_core(
+            mesh, "data", "raid6", False, True, use_interpret(None)
+        )
+        launches = _count_pallas_launches(
+            core, codes, *sops._meta_arrays(keys, nonces, n_words)
+        )
+        gbps = _gbps(total, us)
+        record_json(
+            f"seal_sharded_{D}dev",
+            us_per_call=us,
+            gbps=gbps,
+            launches_per_stripe_per_device=launches,
+            device_count=D,
+            exact=ok,
+            stripe_bytes=total,
+        )
+        rows.append(
+            (name, us,
+             f"exact={ok} devices={D} launches/stripe/device={launches}"
+             f" GB/s={gbps:.4f}")
+        )
+
+    # ---- multi-stream ingest coalescing: 16 ragged GOPs per round.
+    # streams=1: one camera, GOPs arrive serially -> each seals alone (one
+    # launch per GOP, parity over a 1-shard stripe).  streams=16: cross-
+    # stream coalescing fills S-shard stripes -> one launch per stripe.
+    gop_lens = [
+        int(rng.integers(8 * 512 * 2 + 4, 8 * 512 * 4)) for _ in range(16)
+    ]
+    gops = [
+        jnp.asarray(rng.integers(-128, 128, n), jnp.int8) for n in gop_lens
+    ]
+    gop_bytes = sum(gop_lens)
+
+    def run_single_stream():  # per-GOP stripes, no stripe-mates to wait for
+        return [
+            sops.seal_stripe([g], keys[:1], nonces[:1]).sealed for g in gops
+        ]
+
+    us1 = timeit(run_single_stream)
+    record_json(
+        "seal_ingest_1stream",
+        us_per_call=us1,
+        gbps=_gbps(gop_bytes, us1),
+        launches=len(gops),
+        device_count=1,
+    )
+    rows.append(
+        ("kernel/seal_ingest_1stream", us1,
+         f"gops=16 launches={len(gops)} (one per GOP)"
+         f" GB/s={_gbps(gop_bytes, us1):.4f}")
+    )
+
+    coal = StripeCoalescer(n_shards=S)
+    ready = []
+    for g, payload in enumerate(gops):
+        ready += coal.add(g % 16, payload, {"n_i8": int(payload.shape[0])})
+    ready += coal.flush()
+    naive, coalesced = len(gops), len(ready)
+    reduction = naive / coalesced
+
+    def run_coalesced():
+        outs = []
+        for cs in ready:
+            pay = [g.payload for g in cs.gops]
+            outs.append(
+                sops.seal_stripe(
+                    pay, keys[: len(pay)], nonces[: len(pay)],
+                    pad_rows=cs.pad_rows,
+                )
+            )
+        return [o.sealed for o in outs]
+
+    us16 = timeit(run_coalesced)
+    record_json(
+        "seal_ingest_16stream_coalesced",
+        us_per_call=us16,
+        gbps=_gbps(gop_bytes, us16),
+        launches=coalesced,
+        naive_launches=naive,
+        launch_reduction=reduction,
+        device_count=1,
+        pad_rows_buckets=sorted({cs.pad_rows for cs in ready}),
+    )
+    rows.append(
+        ("kernel/seal_ingest_16stream_coalesced", us16,
+         f"gops=16 launches={coalesced} (vs {naive},"
+         f" {reduction:.1f}x fewer) GB/s={_gbps(gop_bytes, us16):.4f}")
+    )
+    return rows
 
 
 def quantize_kernel() -> List[Row]:
@@ -130,6 +329,10 @@ def quantize_kernel() -> List[Row]:
     q, s = quantize_blockwise(x)
     qr, sr = quantize_ref(x)
     ok = bool(np.array_equal(np.asarray(q), np.asarray(qr)))
+    record_json(
+        "quantize", us_per_call=us_k, gbps=_gbps(x.size * 5, us_k),
+        launches=1, device_count=1, exact=ok,
+    )
     return [
         ("kernel/quantize_pallas_256x1024", us_k,
          f"exact={ok} blocks=128 hbm_ratio=4:1 (f32->int8)"),

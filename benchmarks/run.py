@@ -1,16 +1,48 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Set BENCH_FULL=1 for the longer
-codec-training variant of the Fig. 8/9 rate-distortion sweep.
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_kernels.json``
+(per-bench GB/s, launch counts, device count) at the repo root so the kernel
+perf trajectory is machine-readable across PRs.  Set BENCH_FULL=1 for the
+longer codec-training variant of the Fig. 8/9 rate-distortion sweep.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _force_multidevice_host() -> None:
+    """Give the bench process an 8-device host platform (before jax init)
+    so the sharded_seal bench can build 1/2/8-device storage meshes."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+
+def _write_kernels_json(metrics: dict) -> None:
+    import jax
+
+    out = {
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "benches": metrics,
+    }
+    path = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({len(metrics)} benches)", flush=True)
+
 
 def main() -> None:
+    _force_multidevice_host()
+
     from benchmarks import kernels_bench, paper_tables
     from benchmarks.common import fmt_rows
 
@@ -29,6 +61,7 @@ def main() -> None:
         ("kernels/motion", kernels_bench.motion_kernel),
         ("kernels/quantize", kernels_bench.quantize_kernel),
         ("kernels/seal", kernels_bench.seal_datapath),
+        ("kernels/sharded_seal", kernels_bench.sharded_seal),
     ]
     print("name,us_per_call,derived")
     failures = 0
@@ -38,6 +71,7 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR: {e!r}", flush=True)
+    _write_kernels_json(kernels_bench.JSON_METRICS)
     if failures:
         sys.exit(1)
 

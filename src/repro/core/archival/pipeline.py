@@ -18,6 +18,20 @@ Two granularities:
   reference instead (bit-identical outputs).
 * ``archive_gop`` / ``restore_gop`` + ``stripe_parity`` — the per-block
   reference path, kept as the dispatch/compat layer and for single-GOP use.
+
+Sharded archival (mesh axis <-> CSD array):
+
+The stripe's shard axis IS the paper's CSD array: shard s of a stripe lives
+on storage device s, and the whole point of the CSD offload is that each
+device seals *its own* shard locally while only the tiny parity reduction
+crosses devices.  On the TPU adaptation the ``data`` mesh axis plays the
+CSD-array role (see ``distributed/sharding.py``): ``repro.distributed.
+archival`` shard_maps the fused seal kernel over ``data`` so every mesh
+shard runs one local kernel launch on its slice of the stripe, then
+combines RAID-5 P / RAID-6 Q with a cross-shard XOR reduce (exact, order-
+free, bit-identical to this module's single-device path).  The hooks below
+(``encode_gop_payload`` / ``seal_payload_stripe`` / the ``seal_fn`` /
+``unseal_fn`` parameters) are the seams that path plugs into.
 """
 
 from __future__ import annotations
@@ -52,6 +66,8 @@ __all__ = [
     "unpack_u32_to_i8",
     "archive_gop",
     "restore_gop",
+    "encode_gop_payload",
+    "seal_payload_stripe",
     "archive_stripe",
     "restore_stripe",
     "stripe_manifests",
@@ -168,43 +184,56 @@ def _u32_rows_to_u8(rows: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(rows, jnp.uint8).reshape(-1)
 
 
-def archive_stripe(
+def encode_gop_payload(
     codec_params,
+    frames: jax.Array,
+    cfg: ArchiveConfig = ArchiveConfig(),
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Codec-encode one GOP to a flat int8 seal payload.
+
+    frames: (T, B, H, W, 3).  Returns (flat int8 payload, manifest, recons).
+    This is the encode half of ``archive_gop``/``archive_stripe``, split out
+    so ingest layers (``repro.distributed.archival.StripeCoalescer``) can
+    encode GOPs as they arrive and defer sealing until a full stripe exists.
+    """
+    frame_codes, recons = encode_gop(
+        codec_params, cfg.codec, frames, n_layers=cfg.n_layers
+    )
+    flat, manifest = _flatten_codes(frame_codes)
+    return flat, dict(manifest, frames_shape=tuple(frames.shape)), recons
+
+
+def seal_payload_stripe(
     pub: rlwe.PublicKey,
-    frames_list: List[jax.Array],
+    flats: List[jax.Array],
+    manifests: List[Dict],
     key: jax.Array,
     cfg: ArchiveConfig = ArchiveConfig(),
     *,
     use_pallas: bool = True,
-) -> Tuple[StripeArchive, List[jax.Array]]:
-    """Archive S GOPs as one parity stripe with a single fused seal launch.
+    pad_rows: Optional[int] = None,
+    seal_fn=None,
+) -> StripeArchive:
+    """Seal pre-encoded payloads as one parity stripe (one fused launch).
 
-    frames_list: S clips, each (T, B, H, W, 3) — one per storage shard.
     Per-shard session keys are KEM-encapsulated host-side (tiny); the bulk
     pack + ChaCha20 + XOR + RAID parity run in one kernel pass over the
-    stripe (``use_pallas=False`` runs the staged jnp reference instead,
-    producing bit-identical bodies and parity).
+    stripe.  ``seal_fn`` overrides the launch itself — the sharded path
+    passes a shard_map'd wrapper with the same signature as
+    ``seal_ops.seal_stripe``.
     """
-    flats, manifests, recons = [], [], []
-    for frames in frames_list:
-        frame_codes, rec = encode_gop(
-            codec_params, cfg.codec, frames, n_layers=cfg.n_layers
-        )
-        flat, manifest = _flatten_codes(frame_codes)
-        flats.append(flat)
-        manifests.append(dict(manifest, frames_shape=tuple(frames.shape)))
-        recons.append(rec)
-
     mats = [
         encapsulate_session(pub, jax.random.fold_in(key, s), cfg.rlwe)
         for s in range(len(flats))
     ]
-    stripe = seal_ops.seal_stripe(
+    seal_fn = seal_fn or seal_ops.seal_stripe
+    stripe = seal_fn(
         flats,
         jnp.stack([m.session for m in mats]),
         jnp.stack([m.nonce for m in mats]),
         parity=cfg.parity,
         use_pallas=use_pallas,
+        pad_rows=pad_rows,
     )
     blocks = [
         ArchivedBlock(
@@ -220,7 +249,36 @@ def archive_stripe(
         parity = {"p": _u32_rows_to_u8(stripe.p), "pad_to": stripe.pad_words}
         if stripe.q is not None:
             parity["q"] = _u32_rows_to_u8(stripe.q)
-    return StripeArchive(blocks, parity), recons
+    return StripeArchive(blocks, parity)
+
+
+def archive_stripe(
+    codec_params,
+    pub: rlwe.PublicKey,
+    frames_list: List[jax.Array],
+    key: jax.Array,
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+    seal_fn=None,
+) -> Tuple[StripeArchive, List[jax.Array]]:
+    """Archive S GOPs as one parity stripe with a single fused seal launch.
+
+    frames_list: S clips, each (T, B, H, W, 3) — one per storage shard.
+    ``use_pallas=False`` runs the staged jnp reference instead (bit-identical
+    bodies and parity); ``seal_fn`` dispatches the launch (see
+    ``seal_payload_stripe``).
+    """
+    flats, manifests, recons = [], [], []
+    for frames in frames_list:
+        flat, manifest, rec = encode_gop_payload(codec_params, frames, cfg)
+        flats.append(flat)
+        manifests.append(manifest)
+        recons.append(rec)
+    stripe = seal_payload_stripe(
+        pub, flats, manifests, key, cfg, use_pallas=use_pallas, seal_fn=seal_fn
+    )
+    return stripe, recons
 
 
 def restore_stripe(
@@ -231,13 +289,18 @@ def restore_stripe(
     *,
     use_pallas: bool = True,
     verify_parity: bool = True,
+    unseal_fn=None,
 ) -> List[jax.Array]:
     """Decode every shard of a stripe with a single fused unseal launch.
 
     The kernel recomputes P/Q from the sealed bodies as stored; with
     ``verify_parity`` the recomputation must match the parity written at
     seal time (stripe integrity check) or a ``ValueError`` is raised.
+    ``unseal_fn`` dispatches the launch (the sharded path passes a
+    shard_map'd wrapper with ``seal_ops.unseal_stripe``'s signature).
     """
+    if not stripe.blocks:
+        raise ValueError("stripe must contain at least one shard payload")
     sessions, nonces = [], []
     for b in stripe.blocks:
         sessions.append(
@@ -264,7 +327,8 @@ def restore_stripe(
         parity_mode = "none"
     else:
         parity_mode = "raid6" if "q" in stripe.parity else "raid5"
-    flats, p2, q2 = seal_ops.unseal_stripe(
+    unseal_fn = unseal_fn or seal_ops.unseal_stripe
+    flats, p2, q2 = unseal_fn(
         packed,
         jnp.stack(sessions),
         jnp.stack(nonces),

@@ -32,6 +32,7 @@ __all__ = [
     "seal_stripe",
     "unseal_stripe",
     "pad_rows_for",
+    "bucket_rows_for",
     "datapath_traffic",
 ]
 
@@ -58,6 +59,17 @@ def pad_rows_for(n_words: int) -> int:
     return -(-rows // R_TILE) * R_TILE
 
 
+def bucket_rows_for(n_words: int) -> int:
+    """Smallest power-of-two multiple of ``R_TILE`` rows covering n_words.
+
+    ``_seal_core`` retraces per distinct (S, R) shape; bucketing stripe
+    heights to pow2 tile counts bounds traces at log2(max_rows/R_TILE) for
+    arbitrarily mixed GOP sizes (same idea as ``chacha.bucket_n_words``).
+    """
+    tiles = -(-pad_rows_for(n_words) // R_TILE)
+    return R_TILE * (1 << (tiles - 1).bit_length())
+
+
 def _as_payload_list(payloads) -> List[jax.Array]:
     if isinstance(payloads, (list, tuple)):
         return [jnp.asarray(p).reshape(-1).astype(jnp.int8) for p in payloads]
@@ -65,12 +77,21 @@ def _as_payload_list(payloads) -> List[jax.Array]:
     return [arr[s].reshape(-1).astype(jnp.int8) for s in range(arr.shape[0])]
 
 
-def _stack_padded(flats: Sequence[jax.Array]) -> Tuple[jax.Array, Tuple[int, ...], Tuple[int, ...]]:
+def _stack_padded(
+    flats: Sequence[jax.Array], pad_rows: Optional[int] = None
+) -> Tuple[jax.Array, Tuple[int, ...], Tuple[int, ...]]:
     if not flats:
         raise ValueError("stripe must contain at least one shard payload")
     n_i8 = tuple(int(f.shape[0]) for f in flats)
     n_words = tuple(-(-n // 4) for n in n_i8)
     R = pad_rows_for(max(n_words))
+    if pad_rows is not None:
+        if pad_rows < R or pad_rows % R_TILE:
+            raise ValueError(
+                f"pad_rows={pad_rows} must be a multiple of {R_TILE} "
+                f"covering the largest shard ({R} rows)"
+            )
+        R = pad_rows
     rows = [
         jnp.pad(f, (0, R * ROW_BYTES - f.shape[0])).reshape(R, ROW_BYTES)
         for f in flats
@@ -121,14 +142,19 @@ def _unseal_core(sealed, keys, nonces, n_valid, q_coef, *,
 
 def seal_stripe(payloads, keys, nonces, *, parity: str = "raid6",
                 use_pallas: bool = True,
-                interpret: Optional[bool] = None) -> SealedStripe:
+                interpret: Optional[bool] = None,
+                pad_rows: Optional[int] = None) -> SealedStripe:
     """Seal all S shards of a stripe (+ parity) in one fused pass.
 
     payloads: list of flat int8 arrays (ragged ok) or an (S, N) int8 array.
     keys: (S, 8) uint32 ChaCha session keys; nonces: (S, 3) uint32.
+    pad_rows: optional row-count override (multiple of ``R_TILE`` covering
+    the largest shard).  Multi-stream coalescers pass a pow2 bucket here so
+    mixed GOP sizes share one jit trace per bucket instead of one per
+    distinct padded length.
     """
     flats = _as_payload_list(payloads)
-    codes, n_words, n_i8 = _stack_padded(flats)
+    codes, n_words, n_i8 = _stack_padded(flats, pad_rows)
     meta = _meta_arrays(keys, nonces, n_words)
     sealed, p, q = _seal_core(
         codes, *meta, parity=parity, use_pallas=use_pallas,
@@ -143,6 +169,8 @@ def unseal_stripe(stripe: SealedStripe, keys, nonces, *,
     """Fused decode: returns (payload list, P, Q) with parity recomputed
     from the stored bodies (compare against the seal-time parity to verify
     stripe integrity before trusting the decode)."""
+    if not stripe.n_words:
+        raise ValueError("stripe must contain at least one shard payload")
     meta = _meta_arrays(keys, nonces, stripe.n_words)
     codes, p, q = _unseal_core(
         stripe.sealed, *meta, parity=parity, use_pallas=use_pallas,

@@ -1,10 +1,20 @@
-"""Batched serving engine: slot-based continuous batching over decode_step.
+"""Batched serving engine: slot-based continuous batching over decode_step,
+plus the edge server's camera-facing archive ingest tier.
 
-Requests occupy fixed batch slots; each engine step decodes one token for
-every active slot (padded slots run but are masked).  Prefill uses the full
-forward to populate KV/SSM caches token-by-token (teacher-forcing path — the
-same code the parity tests validate), so serve results match training-side
-semantics exactly.
+LM serving: requests occupy fixed batch slots; each engine step decodes one
+token for every active slot (padded slots run but are masked).  Prefill uses
+the full forward to populate KV/SSM caches token-by-token (teacher-forcing
+path — the same code the parity tests validate), so serve results match
+training-side semantics exactly.
+
+Archive ingest (``ArchiveIngest``): the continuous-learning edge server also
+*serves* N camera streams pushing ragged GOPs.  Ingest mirrors the LM
+engine's batching idea at the storage layer: GOPs are codec-encoded on
+arrival, coalesced across streams into full parity stripes
+(``StripeCoalescer``), and each completed stripe is sealed in ONE fused
+kernel launch — shard_map'd over the storage mesh's ``data`` axis when a
+mesh is attached, so every mesh shard seals its local slice (the CSD-array
+mapping; see ``repro.distributed.archival``).
 """
 
 from __future__ import annotations
@@ -15,10 +25,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    StripeArchive,
+    encode_gop_payload,
+)
+from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
 
-__all__ = ["ServeConfig", "Request", "ServingEngine"]
+__all__ = [
+    "ServeConfig",
+    "Request",
+    "ServingEngine",
+    "IngestConfig",
+    "ArchiveIngest",
+]
 
 
 class ServeConfig(NamedTuple):
@@ -119,3 +141,68 @@ class ServingEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.finished
+
+
+# ------------------------------------------------------------ archive ingest
+class IngestConfig(NamedTuple):
+    n_shards: int = 4  # GOPs per stripe == storage shards per parity group
+    archive: ArchiveConfig = ArchiveConfig()
+
+
+class ArchiveIngest:
+    """Multi-stream GOP ingest front-end for the edge server's storage tier.
+
+    ``submit`` accepts one GOP from one camera stream: the clip is
+    codec-encoded immediately (features are hot — same frames the serving/
+    training tier just saw) and the flat payload joins the coalescer.  The
+    returned list holds every :class:`StripeArchive` whose stripe this GOP
+    completed — sealed, parity-coded, ready for the journal/placement tier.
+    ``flush`` drains stragglers (end of epoch, shutdown) the same way.
+    """
+
+    def __init__(
+        self,
+        codec_params,
+        pub,
+        cfg: IngestConfig = IngestConfig(),
+        *,
+        mesh=None,
+        axis: str = "data",
+        seed: int = 0,
+    ):
+        self.codec_params = codec_params
+        self.pub = pub
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.coalescer = StripeCoalescer(cfg.n_shards)
+        self._key = jax.random.PRNGKey(seed * 9176 + 29)
+        self._stripe_seq = 0
+
+    def _seal(self, ready) -> List[StripeArchive]:
+        out = []
+        for cs in ready:
+            key = jax.random.fold_in(self._key, self._stripe_seq)
+            self._stripe_seq += 1
+            out.append(
+                seal_coalesced_stripe(
+                    self.pub, cs, key, self.cfg.archive,
+                    mesh=self.mesh, axis=self.axis,
+                )
+            )
+        return out
+
+    def submit(self, stream_id: int, frames: jax.Array) -> List[StripeArchive]:
+        """frames: (T, B, H, W, 3) one GOP. Returns stripes it completed."""
+        flat, manifest, _ = encode_gop_payload(
+            self.codec_params, frames, self.cfg.archive
+        )
+        ready = self.coalescer.add(stream_id, flat, manifest)
+        return self._seal(ready)
+
+    def flush(self) -> List[StripeArchive]:
+        """Seal all pending GOPs into (possibly short) stripes."""
+        return self._seal(self.coalescer.flush())
+
+    def stats(self) -> Dict[str, float]:
+        return self.coalescer.stats()

@@ -1,12 +1,20 @@
 """Fault-tolerant checkpointing through the Salient Store archival pipeline.
 
 Checkpoints are archival data: each save is chunked into S logical storage
-shards, zstd-compressed, optionally sealed (R-LWE KEM + ChaCha20) and
-RAID-6-parity-coded, then committed through the power-loss-safe ``Journal``
-(write payload -> fsync -> manifest record).  Restore tolerates:
+shards (stripe tiles), zstd-compressed, and pushed through the SAME fused
+seal kernel as the video archive (``repro.kernels.seal``): pack + ChaCha20 +
+XOR + RAID-5 P / RAID-6 Q in one launch over the stripe.  With a ``seal_key``
+the per-shard ChaCha session keys are R-LWE-KEM-encapsulated (true
+encryption, secret needed to restore); without one they are stored in the
+manifest — whitening only, but the datapath and on-disk layout stay
+identical, so the parity tier is always exercised.  Shards are committed
+through the power-loss-safe ``Journal`` (write payload -> fsync -> manifest
+record).  Restore tolerates:
 
   * torn writes (journal replay drops them),
-  * up to two missing/corrupt shards per checkpoint (parity rebuild),
+  * up to two missing/corrupt shards per checkpoint (parity rebuild over the
+    sealed bodies, then one fused unseal of the repaired stripe — the same
+    recompute-and-compare integrity check the archive restore uses),
   * a different mesh on restart (elastic: arrays are saved unsharded-logical
     and resharded by the caller's NamedShardings at load).
 """
@@ -25,8 +33,9 @@ import numpy as np
 from repro.common import compress as entropy
 from repro.core.archival import raid
 from repro.core.crypto import rlwe
-from repro.core.crypto.chacha import xor_stream
+from repro.core.crypto.hybrid import encapsulate_session
 from repro.core.csd.failure import Journal
+from repro.kernels.seal import ops as seal_ops
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointError"]
 
@@ -51,6 +60,41 @@ def _deserialize_leaves(blob: bytes) -> List[np.ndarray]:
     with np.load(buf) as z:
         n = sum(1 for k in z.files if k.startswith("leaf_"))
         return [z[f"leaf_{i}"] for i in range(n)]
+
+
+def _session_material(
+    meta: Dict[str, Any],
+    n_shards: int,
+    step: int,
+    seal_key: Optional[rlwe.PublicKey],
+    rng: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    """(S, 8) uint32 ChaCha keys + (S, 3) nonces for the stripe launch.
+
+    Sealed: fresh per-shard session keys under the lattice KEM (ciphertexts
+    into the manifest, keys never stored).  Unsealed: manifest-stored
+    whitening keys — restore needs no secret and the kernel path is shared.
+    """
+    if seal_key is not None:
+        if rng is None:
+            rng = jax.random.PRNGKey(step)
+        mats = [
+            encapsulate_session(seal_key, jax.random.fold_in(rng, i))
+            for i in range(n_shards)
+        ]
+        meta["kem_c1"] = [np.asarray(m.kem_c1).tolist() for m in mats]
+        meta["kem_c2"] = [np.asarray(m.kem_c2).tolist() for m in mats]
+        meta["nonce"] = [np.asarray(m.nonce).tolist() for m in mats]
+        return (
+            jnp.stack([m.session for m in mats]),
+            jnp.stack([m.nonce for m in mats]),
+        )
+    rk = np.random.default_rng(step)
+    keys = rk.integers(0, 2**32, (n_shards, 8), dtype=np.uint32)
+    nonces = rk.integers(0, 2**32, (n_shards, 3), dtype=np.uint32)
+    meta["keys"] = keys.tolist()
+    meta["nonce"] = nonces.tolist()
+    return jnp.asarray(keys), jnp.asarray(nonces)
 
 
 def save_checkpoint(
@@ -78,47 +122,41 @@ def save_checkpoint(
         "sealed": bool(seal_key is not None),
         "codec": entropy.CODEC_NAME,  # zstd or the zlib fallback
     }
-    payload = comp
-    if seal_key is not None:
-        if rng is None:
-            rng = jax.random.PRNGKey(step)
-        pad = (-len(payload)) % 4
-        words = jnp.asarray(
-            np.frombuffer(payload + b"\0" * pad, dtype="<u4").copy()
+
+    # chunk the compressed payload into S stripe tiles
+    shard_len = (len(comp) + n_shards - 1) // n_shards
+    padded = comp + b"\0" * (shard_len * n_shards - len(comp))
+    flats = [
+        jnp.asarray(
+            np.frombuffer(padded[i * shard_len : (i + 1) * shard_len], np.int8)
         )
-        from repro.core.crypto.hybrid import seal
-
-        blk = seal(seal_key, words, rng)
-        meta["kem_c1"] = np.asarray(blk.kem_c1).tolist()
-        meta["kem_c2"] = np.asarray(blk.kem_c2).tolist()
-        meta["nonce"] = np.asarray(blk.nonce).tolist()
-        payload = np.asarray(blk.body).astype("<u4").tobytes()[: len(payload) + pad]
-
-    # shard + parity
-    shard_len = (len(payload) + n_shards - 1) // n_shards
-    padded = payload + b"\0" * (shard_len * n_shards - len(payload))
-    shards = [
-        padded[i * shard_len : (i + 1) * shard_len] for i in range(n_shards)
+        for i in range(n_shards)
     ]
-    meta["payload_len"] = len(payload)
     meta["shard_len"] = shard_len
 
+    keys, nonces = _session_material(meta, n_shards, step, seal_key, rng)
+    stripe = seal_ops.seal_stripe(flats, keys, nonces, parity=parity)
+    meta["n_words"] = [int(n) for n in stripe.n_words]
+    meta["pad_words"] = int(stripe.pad_words)
+
     names = []
-    for i, s in enumerate(shards):
+    for i in range(n_shards):
         name = f"ckpt_{step:08d}_shard{i}.bin"
-        j.commit(name, s, {"step": step, "shard": i})
+        body = np.asarray(stripe.body(i)).astype("<u4").tobytes()
+        j.commit(name, body, {"step": step, "shard": i})
         names.append(name)
     if parity != "none":
-        arr = jnp.asarray(
-            np.stack([np.frombuffer(s, np.uint8) for s in shards])
-        )
-        if parity == "raid5":
-            p = raid.raid5_encode(arr)
-            j.commit(f"ckpt_{step:08d}_parity_p.bin", bytes(np.asarray(p)), {"step": step})
-        else:
-            p, q = raid.raid6_encode(arr)
-            j.commit(f"ckpt_{step:08d}_parity_p.bin", bytes(np.asarray(p)), {"step": step})
-            j.commit(f"ckpt_{step:08d}_parity_q.bin", bytes(np.asarray(q)), {"step": step})
+        p_u8 = np.asarray(
+            jax.lax.bitcast_convert_type(stripe.p, jnp.uint8)
+        ).reshape(-1)
+        j.commit(f"ckpt_{step:08d}_parity_p.bin", p_u8.tobytes(), {"step": step})
+        if stripe.q is not None:
+            q_u8 = np.asarray(
+                jax.lax.bitcast_convert_type(stripe.q, jnp.uint8)
+            ).reshape(-1)
+            j.commit(
+                f"ckpt_{step:08d}_parity_q.bin", q_u8.tobytes(), {"step": step}
+            )
     meta["shards"] = names
     j.commit(f"ckpt_{step:08d}_manifest.json", json.dumps(meta).encode(), {"step": step})
     return meta
@@ -132,6 +170,93 @@ def latest_step(root: str) -> Optional[int]:
         if r["name"].endswith("_manifest.json") and "step" in r.get("meta", {})
     ]
     return max(steps) if steps else None
+
+
+def _read_bodies(
+    j: Journal, root: str, meta: Dict
+) -> Tuple[List[Optional[bytes]], List[int]]:
+    bodies: List[Optional[bytes]] = []
+    missing: List[int] = []
+    for i, name in enumerate(meta["shards"]):
+        path = os.path.join(root, name)
+        want = 4 * meta["n_words"][i]
+        if os.path.exists(path) and os.path.getsize(path) == want:
+            bodies.append(j.read(name))
+        else:
+            bodies.append(None)
+            missing.append(i)
+    return bodies, missing
+
+
+def _rebuild_missing(
+    j: Journal, meta: Dict, bodies: List[Optional[bytes]], missing: List[int]
+) -> List[bytes]:
+    """Parity-rebuild lost sealed bodies (host RAID math over u8 rows)."""
+    step, pad_u8 = meta["step"], 4 * meta["pad_words"]
+    rows: List[Optional[jnp.ndarray]] = [
+        None
+        if b is None
+        else jnp.asarray(np.frombuffer(b.ljust(pad_u8, b"\0"), np.uint8))
+        for b in bodies
+    ]
+    p = jnp.asarray(
+        np.frombuffer(j.read(f"ckpt_{step:08d}_parity_p.bin"), np.uint8)
+    )
+    if meta["parity"] == "raid5":
+        if len(missing) != 1:
+            raise CheckpointError(
+                f"shards {missing} lost; RAID-5 covers one erasure"
+            )
+        rows[missing[0]] = raid.raid5_reconstruct(rows, p, missing[0])
+    else:
+        q = jnp.asarray(
+            np.frombuffer(j.read(f"ckpt_{step:08d}_parity_q.bin"), np.uint8)
+        )
+        rows = raid.raid6_reconstruct(rows, p, q, missing)
+    return [
+        bytes(np.asarray(r))[: 4 * meta["n_words"][i]]
+        for i, r in enumerate(rows)
+    ]
+
+
+def _stripe_keys(meta: Dict, secret: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    nonces = jnp.asarray(meta["nonce"], jnp.uint32)
+    if meta["sealed"]:
+        if secret is None:
+            raise CheckpointError("checkpoint is sealed; need the R-LWE secret")
+        keys = jnp.stack(
+            [
+                rlwe.kem_decapsulate(
+                    secret,
+                    rlwe.Ciphertext(
+                        jnp.asarray(meta["kem_c1"][i], jnp.int32),
+                        jnp.asarray(meta["kem_c2"][i], jnp.int32),
+                    ),
+                )
+                for i in range(len(meta["shards"]))
+            ]
+        )
+    else:
+        keys = jnp.asarray(meta["keys"], jnp.uint32)
+    return keys, nonces
+
+
+def _verify_stripe_parity(j: Journal, meta: Dict, p2, q2) -> None:
+    step = meta["step"]
+    for name, got in (("p", p2), ("q", q2)):
+        if got is None:
+            continue
+        want = np.frombuffer(
+            j.read(f"ckpt_{step:08d}_parity_{name}.bin"), np.uint8
+        )
+        got_u8 = np.asarray(
+            jax.lax.bitcast_convert_type(got, jnp.uint8)
+        ).reshape(-1)
+        if not np.array_equal(got_u8, want):
+            raise CheckpointError(
+                f"checkpoint parity mismatch on {name.upper()} "
+                f"(corrupt shard beyond what erasure coding can see)"
+            )
 
 
 def load_checkpoint(
@@ -151,56 +276,42 @@ def load_checkpoint(
         if step is None:
             raise CheckpointError(f"no checkpoint in {root}")
     meta = json.loads(j.read(f"ckpt_{step:08d}_manifest.json"))
+    if "n_words" not in meta:
+        raise CheckpointError(
+            f"checkpoint at step {step} predates the fused-kernel stripe "
+            "format (manifest has no 'n_words'); re-save it with this version"
+        )
 
-    shards: List[Optional[bytes]] = []
-    missing: List[int] = []
-    for i, name in enumerate(meta["shards"]):
-        path = os.path.join(root, name)
-        if os.path.exists(path) and os.path.getsize(path) == meta["shard_len"]:
-            shards.append(j.read(name))
-        else:
-            shards.append(None)
-            missing.append(i)
+    bodies, missing = _read_bodies(j, root, meta)
     if missing:
         if meta["parity"] == "none":
             raise CheckpointError(f"shards {missing} lost and no parity")
-        rows = [
-            None if s is None else jnp.asarray(np.frombuffer(s, np.uint8))
-            for s in shards
+        bodies = _rebuild_missing(j, meta, bodies, missing)
+
+    # one fused unseal of the whole stripe (keystream + XOR + unpack), with
+    # parity recomputed from the bodies as stored for the integrity check
+    keys, nonces = _stripe_keys(meta, secret)
+    n_words = tuple(meta["n_words"])
+    R = meta["pad_words"] // seal_ops.LANES
+    sealed = jnp.stack(
+        [
+            jnp.pad(
+                jnp.asarray(np.frombuffer(b, "<u4").copy()), (0, R * seal_ops.LANES - n)
+            ).reshape(R, seal_ops.LANES)
+            for b, n in zip(bodies, n_words)
         ]
-        p = jnp.asarray(
-            np.frombuffer(j.read(f"ckpt_{step:08d}_parity_p.bin"), np.uint8)
-        )
-        q = None
-        if meta["parity"] == "raid6":
-            q = jnp.asarray(
-                np.frombuffer(j.read(f"ckpt_{step:08d}_parity_q.bin"), np.uint8)
-            )
-        if meta["parity"] == "raid5":
-            assert len(missing) == 1, "RAID-5 covers one erasure"
-            rows[missing[0]] = raid.raid5_reconstruct(rows, p, missing[0])
-        else:
-            rows = raid.raid6_reconstruct(rows, p, q, missing)
-        shards = [bytes(np.asarray(r)) for r in rows]
+    )
+    packed = seal_ops.SealedStripe(
+        sealed, None, None, n_words, (meta["shard_len"],) * len(bodies)
+    )
+    flats, p2, q2 = seal_ops.unseal_stripe(
+        packed, keys, nonces, parity=meta["parity"]
+    )
+    if meta["parity"] != "none":
+        _verify_stripe_parity(j, meta, p2, q2)
 
-    payload = b"".join(shards)[: meta["payload_len"]]
-    if meta["sealed"]:
-        if secret is None:
-            raise CheckpointError("checkpoint is sealed; need the R-LWE secret")
-        from repro.core.crypto.hybrid import SealedBlock, unseal
-
-        words = jnp.asarray(np.frombuffer(payload, dtype="<u4").copy())
-        blk = SealedBlock(
-            jnp.asarray(meta["kem_c1"], jnp.int32),
-            jnp.asarray(meta["kem_c2"], jnp.int32),
-            jnp.asarray(meta["nonce"], jnp.uint32),
-            words,
-            int(words.size),
-        )
-        plain = unseal(secret, blk)
-        payload = np.asarray(plain).astype("<u4").tobytes()[: meta["comp_len"]]
-    else:
-        payload = payload[: meta["comp_len"]]
+    payload = b"".join(np.asarray(f, np.int8).tobytes() for f in flats)
+    payload = payload[: meta["comp_len"]]
 
     ckpt_codec = meta.get("codec", "zstd")
     if ckpt_codec != entropy.CODEC_NAME:

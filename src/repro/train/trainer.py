@@ -6,10 +6,16 @@ Per step (Fig. 1's dual-stream dataflow):
   2. run the frozen backbone ONCE: its features feed both exemplar selection
      (k-means++ novelty -> train-or-archive) and the codec (compute reuse);
   3. novel samples -> codec training step (Alg. 2);
-  4. known samples -> archive: layered-codec encode -> hybrid seal ->
-     RAID parity across shards -> journal commit;
+  4. known samples -> archive ingest: layered-codec encode, then the GOP
+     joins the multi-stream ``StripeCoalescer`` — ragged GOPs from many
+     cameras are bucketed into full stripes so one fused seal launch (per
+     mesh shard, when a storage mesh is attached) covers S GOPs instead of
+     one launch each; completed stripes are sealed + parity-coded and
+     journal-committed;
   5. heartbeat the straggler monitor; rebalance placement when flagged;
-  6. periodic checkpoint (itself compressed+sealed+parity, train/checkpoint).
+  6. periodic checkpoint (pending stripes drain first; the checkpoint itself
+     runs compressed+sealed+parity through the same fused kernel,
+     train/checkpoint).
 
 Everything is pure JAX + the core modules; the same loop drives the LM path
 through ``lm_train_step`` (distributed/steps.py) with codec-based gradient
@@ -18,15 +24,16 @@ compression as an option.
 
 from __future__ import annotations
 
+import re
 import time
-from typing import Dict, List, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.archival.exemplar import select_exemplars
-from repro.core.archival.pipeline import ArchiveConfig, archive_stripe
+from repro.core.archival.pipeline import ArchiveConfig, encode_gop_payload
 from repro.core.codec.feature_extractor import extract_features
 from repro.core.codec.layered_codec import CodecConfig, init_codec, psnr
 from repro.core.codec.training import (
@@ -38,6 +45,7 @@ from repro.core.crypto import rlwe
 from repro.core.csd.failure import Journal, StragglerMonitor
 from repro.core.csd.placement import Placement, balance_streams, rebalance
 from repro.data.video import VideoStream, render_clip
+from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
 from repro.train.checkpoint import latest_step, load_checkpoint, save_checkpoint
 
 __all__ = ["SalientTrainer", "TrainerConfig", "StepReport"]
@@ -58,10 +66,12 @@ class StepReport(NamedTuple):
     step: int
     codec_loss: float
     psnr: float
-    archived_streams: int
+    archived_streams: int  # GOPs sealed to the journal this step
     archive_bytes: int
     novel_selected: int
     rebalanced: bool
+    stripes_sealed: int = 0  # fused launches this step (coalesced stripes)
+    pending_gops: int = 0  # encoded GOPs still waiting for stripe-mates
 
 
 class SalientTrainer:
@@ -71,10 +81,15 @@ class SalientTrainer:
         workdir: str,
         cfg: TrainerConfig = TrainerConfig(),
         seed: int = 0,
+        mesh=None,
     ):
+        """``mesh``: optional storage mesh — when given, stripe seals are
+        shard_map'd over its ``data`` axis (one fused launch per mesh shard,
+        cross-shard parity reduce) instead of running on one device."""
         self.cfg = cfg
         self.streams = streams
         self.workdir = workdir
+        self.mesh = mesh
         key = jax.random.PRNGKey(seed)
         kc, kk = jax.random.split(key)
         self.codec_params = init_codec(kc, cfg.codec)
@@ -91,6 +106,21 @@ class SalientTrainer:
         )
         self.monitor = StragglerMonitor(cfg.n_shards)
         self.journal = Journal(workdir)
+        self.coalescer = StripeCoalescer(cfg.n_shards)
+        self._archive_key = jax.random.PRNGKey(seed * 31 + 7)
+        # resume the stripe sequence from the journal: a restart must not
+        # overwrite committed stripes or re-derive their key/nonce material
+        self._stripe_seq = max(
+            (
+                int(m.group(1)) + 1
+                for m in (
+                    re.match(r"archive_(\d+)\.bin$", r["name"])
+                    for r in self.journal.replay()
+                )
+                if m
+            ),
+            default=0,
+        )
         self.step = 0
         self.known_centroids = None
         self._maybe_restore()
@@ -114,6 +144,8 @@ class SalientTrainer:
         self.step = int(state["step"])
 
     def checkpoint(self):
+        # drain pending ragged stripes first so a restart loses no GOP
+        self._seal_and_commit(self.coalescer.flush())
         save_checkpoint(
             self.workdir,
             self.step,
@@ -125,6 +157,61 @@ class SalientTrainer:
             n_shards=self.cfg.n_shards,
             parity=self.cfg.parity,
         )
+
+    # ----------------------------------------------------------- archival
+    def _seal_and_commit(self, stripes) -> Tuple[int, int]:
+        """Seal coalesced stripes (one fused launch each, sharded over the
+        storage mesh when attached) and journal-commit bodies + parity.
+
+        Returns (GOPs sealed, sealed bytes).
+        """
+        n_gops, total_bytes = 0, 0
+        for cs in stripes:
+            key = jax.random.fold_in(self._archive_key, self._stripe_seq)
+            stripe = seal_coalesced_stripe(
+                self.pub, cs, key, self.archive_cfg, mesh=self.mesh
+            )
+            rec_name = f"archive_{self._stripe_seq:08d}"
+            self._stripe_seq += 1
+            body = b"".join(
+                np.asarray(b.sealed.body).astype("<u4").tobytes()
+                for b in stripe.blocks
+            )
+            self.journal.commit(
+                rec_name + ".bin",
+                body,
+                {
+                    "step": self.step,
+                    "streams": [g.stream_id for g in cs.gops],
+                    "shards": [
+                        (g.meta or {}).get("shard") for g in cs.gops
+                    ],
+                    "parity": self.archive_cfg.parity,
+                    "body_words": [
+                        int(b.sealed.body.size) for b in stripe.blocks
+                    ],
+                },
+            )
+            if stripe.parity is not None:
+                # persist P/Q so shard loss in the .bin is actually recoverable
+                p_u8 = np.asarray(stripe.parity["p"])
+                q_u8 = stripe.parity.get("q")
+                self.journal.commit(
+                    rec_name + ".parity.bin",
+                    p_u8.tobytes()
+                    + (np.asarray(q_u8).tobytes() if q_u8 is not None else b""),
+                    {
+                        "step": self.step,
+                        "pad_to": int(stripe.parity["pad_to"]),
+                        "p_len": int(p_u8.size),
+                        "has_q": q_u8 is not None,
+                    },
+                )
+            n_gops += len(stripe.blocks)
+            total_bytes += sum(
+                int(b.sealed.body.size) * 4 for b in stripe.blocks
+            )
+        return n_gops, total_bytes
 
     # -------------------------------------------------------------- step
     def run_step(self, shard_times: Optional[List[float]] = None) -> StepReport:
@@ -164,55 +251,25 @@ class SalientTrainer:
             self.trainable, self.frozen, self.opt_state, self.train_cfg, train_clips
         )
 
-        # 4. archive the known clips as ONE parity stripe: all shards are
-        # packed + sealed + parity-coded in a single fused kernel launch
+        # 4. archive ingest: codec-encode the known clips, coalesce ragged
+        # GOPs across streams into full stripes; every completed stripe is
+        # packed + sealed + parity-coded in ONE fused kernel launch (per
+        # mesh shard when a storage mesh is attached)
         params = self._params()
-        blocks, shard_of = [], []
-        total_bytes = 0
         recon_psnrs = []
-        if archive_ids:
-            frames_list = [
-                clips[self.streams[i].stream_id][:, None] for i in archive_ids
-            ]  # each (T, 1, H, W, 3)
-            shard_of = [self.placement.assignment[i] for i in archive_ids]
-            stripe, recons_list = archive_stripe(
-                params, self.pub, frames_list,
-                jax.random.fold_in(step_key, self.step), self.archive_cfg,
+        ready = []
+        for i in archive_ids:
+            sid = self.streams[i].stream_id
+            frames = clips[sid][:, None]  # (T, 1, H, W, 3)
+            flat, manifest, recons = encode_gop_payload(
+                params, frames, self.archive_cfg
             )
-            blocks = stripe.blocks
-            for frames, recons, blk in zip(frames_list, recons_list, blocks):
-                total_bytes += int(blk.sealed.body.size) * 4
-                recon_psnrs.append(float(psnr(recons, frames)))
-        if blocks:
-            rec_name = f"archive_{self.step:08d}"
-            body = b"".join(
-                np.asarray(b.sealed.body).astype("<u4").tobytes() for b in blocks
+            recon_psnrs.append(float(psnr(recons, frames)))
+            ready += self.coalescer.add(
+                sid, flat, manifest,
+                meta={"shard": self.placement.assignment[i]},
             )
-            self.journal.commit(
-                rec_name + ".bin",
-                body,
-                {
-                    "step": self.step,
-                    "shards": shard_of,
-                    "parity": self.archive_cfg.parity,
-                    "body_words": [int(b.sealed.body.size) for b in blocks],
-                },
-            )
-            if stripe.parity is not None:
-                # persist P/Q so shard loss in the .bin is actually recoverable
-                p_u8 = np.asarray(stripe.parity["p"])
-                q_u8 = stripe.parity.get("q")
-                self.journal.commit(
-                    rec_name + ".parity.bin",
-                    p_u8.tobytes()
-                    + (np.asarray(q_u8).tobytes() if q_u8 is not None else b""),
-                    {
-                        "step": self.step,
-                        "pad_to": int(stripe.parity["pad_to"]),
-                        "p_len": int(p_u8.size),
-                        "has_q": q_u8 is not None,
-                    },
-                )
+        n_sealed, total_bytes = self._seal_and_commit(ready)
 
         # 5. straggler handling
         rebalanced = False
@@ -235,8 +292,10 @@ class SalientTrainer:
             step=self.step,
             codec_loss=float(metrics["loss"]),
             psnr=float(np.mean(recon_psnrs)) if recon_psnrs else float("nan"),
-            archived_streams=len(blocks),
+            archived_streams=n_sealed,
             archive_bytes=total_bytes,
             novel_selected=len(train_ids),
             rebalanced=rebalanced,
+            stripes_sealed=len(ready),
+            pending_gops=self.coalescer.n_pending,
         )
