@@ -319,6 +319,104 @@ def sharded_seal() -> List[Row]:
     return rows
 
 
+def entropy_coder() -> List[Row]:
+    """Fused interleaved-rANS entropy stage vs staged ref vs host codec.
+
+    The derived columns are the paper-facing numbers: compression ratio on
+    int8 latent codes (header included) and how many payload bytes the
+    entropy stage ships over the host link — zero for the on-device coder,
+    every raw byte for the zstd/zlib fallback it replaces.
+    """
+    from repro.common import compress as host_entropy
+    from repro.kernels.entropy import ops as eops
+    from repro.kernels.entropy.rans import N_LANES
+
+    rng = np.random.default_rng(4)
+    S, n = 4, 64 * 1024
+    # quantized-latent-shaped payloads: peaked at 0 like the codec's int8 codes
+    payloads = [
+        jnp.asarray(
+            np.clip(np.round(rng.normal(0.0, 2.0, n)), -128, 127), jnp.int8
+        )
+        for _ in range(S)
+    ]
+    raw_bytes = S * n
+
+    us_k = timeit(lambda: eops.encode_payloads(payloads, use_pallas=True))
+    us_r = timeit(lambda: eops.encode_payloads(payloads, use_pallas=False))
+    comp, metas = eops.encode_payloads(payloads, use_pallas=True)
+    comp_r, metas_r = eops.encode_payloads(payloads, use_pallas=False)
+    ok = metas == metas_r and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(comp, comp_r)
+    )
+    back = eops.decode_payloads(comp, metas, use_pallas=True)
+    ok = ok and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(back, payloads)
+    )
+    us_d = timeit(lambda: eops.decode_payloads(comp, metas, use_pallas=True))
+
+    comp_bytes = sum(m["n_comp"] for m in metas)
+    t = eops.entropy_traffic(raw_bytes, comp_bytes)
+
+    # launch count from the jit'd core's jaxpr (whole stripe in one launch)
+    T = eops.rows_for(n)
+    codes = jnp.stack([p.reshape(T, N_LANES) for p in payloads])
+    n_valid = jnp.full((S, 1), n, jnp.int32)
+    launches = _count_pallas_launches(
+        lambda c, v: eops._encode_core(
+            c, v, use_pallas=True, interpret=True
+        ),
+        codes, n_valid,
+    )
+
+    # the stage this kernel replaces: host codec over the same payloads
+    blobs = [np.asarray(p, np.int8).tobytes() for p in payloads]
+    us_h = timeit(lambda: [host_entropy.compress(b) for b in blobs])
+    host_comp = sum(len(host_entropy.compress(b)) for b in blobs)
+
+    record_json(
+        "entropy_fused",
+        us_per_call=us_k,
+        us_decode=us_d,
+        gbps=_gbps(raw_bytes, us_k),
+        launches=launches,
+        device_count=1,
+        exact=ok,
+        ratio=t["ratio"],
+        lanes=N_LANES,
+        host_entropy_bytes=t["host_entropy_bytes"],
+        host_bytes_eliminated=t["host_bytes_eliminated"],
+    )
+    record_json(
+        "entropy_staged_ref",
+        us_per_call=us_r,
+        gbps=_gbps(raw_bytes, us_r),
+        launches=eops._ref.N_STAGED_PASSES,
+        device_count=1,
+    )
+    record_json(
+        f"entropy_host_{host_entropy.CODEC_NAME}",
+        us_per_call=us_h,
+        gbps=_gbps(raw_bytes, us_h),
+        ratio=raw_bytes / host_comp,
+        device_count=1,
+        host_entropy_bytes=raw_bytes,
+    )
+    return [
+        ("kernel/entropy_rans_4x64KiB", us_k,
+         f"exact={ok} launches={launches} ratio={t['ratio']:.2f}x"
+         f" host_entropy_bytes=0 lanes={N_LANES}"),
+        ("kernel/entropy_rans_decode", us_d, "fused decode twin"),
+        ("kernel/entropy_staged_ref", us_r,
+         f"passes={eops._ref.N_STAGED_PASSES} pure-jnp oracle"),
+        (f"kernel/entropy_host_{host_entropy.CODEC_NAME}", us_h,
+         f"ratio={raw_bytes / host_comp:.2f}x host_entropy_bytes={raw_bytes}"
+         " (the stage the kernel replaces)"),
+    ]
+
+
 def quantize_kernel() -> List[Row]:
     from repro.kernels.quantize.ops import dequantize_blockwise, quantize_blockwise
     from repro.kernels.quantize.ref import quantize_ref

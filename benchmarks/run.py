@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_kernels.json``
 (per-bench GB/s, launch counts, device count) at the repo root so the kernel
 perf trajectory is machine-readable across PRs.  Set BENCH_FULL=1 for the
 longer codec-training variant of the Fig. 8/9 rate-distortion sweep.
+
+``--check`` turns the committed BENCH_kernels.json into a regression gate:
+the fresh run is diffed against it per bench and the process exits nonzero
+if any ``us_per_call`` regressed by more than CHECK_THRESHOLD (2x — the
+timings are interpret-mode wall clock, so the gate is deliberately coarse).
 """
 
 from __future__ import annotations
@@ -13,6 +18,8 @@ import os
 import sys
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
+CHECK_THRESHOLD = 2.0  # >2x slower us_per_call fails --check
 
 
 def _force_multidevice_host() -> None:
@@ -33,14 +40,45 @@ def _write_kernels_json(metrics: dict) -> None:
         "backend": jax.default_backend(),
         "benches": metrics,
     }
-    path = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
-    with open(path, "w") as f:
+    with open(_JSON_PATH, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {path} ({len(metrics)} benches)", flush=True)
+    print(f"# wrote {_JSON_PATH} ({len(metrics)} benches)", flush=True)
+
+
+def _load_committed() -> dict:
+    if not os.path.exists(_JSON_PATH):
+        return {}
+    with open(_JSON_PATH) as f:
+        return json.load(f).get("benches", {})
+
+
+def _check_regressions(committed: dict, fresh: dict) -> int:
+    """Print the per-bench delta table; return the number of >threshold
+    ``us_per_call`` regressions (benches present on both sides only)."""
+    rows = []
+    for name in sorted(set(committed) & set(fresh)):
+        old = committed[name].get("us_per_call")
+        new = fresh[name].get("us_per_call")
+        if not old or not new or old != old or new != new:  # missing/NaN
+            continue
+        rows.append((name, old, new, new / old))
+    print("\n# bench delta vs committed BENCH_kernels.json")
+    print("name,old_us,new_us,ratio,verdict")
+    bad = 0
+    for name, old, new, ratio in rows:
+        verdict = "ok"
+        if ratio > CHECK_THRESHOLD:
+            verdict = f"REGRESSION(>{CHECK_THRESHOLD:.0f}x)"
+            bad += 1
+        print(f"{name},{old:.1f},{new:.1f},{ratio:.2f},{verdict}")
+    if bad:
+        print(f"# {bad} bench(es) regressed more than {CHECK_THRESHOLD:.0f}x")
+    return bad
 
 
 def main() -> None:
+    check = "--check" in sys.argv
     _force_multidevice_host()
 
     from benchmarks import kernels_bench, paper_tables
@@ -60,9 +98,11 @@ def main() -> None:
         ("kernels/polymul", kernels_bench.polymul_kernel),
         ("kernels/motion", kernels_bench.motion_kernel),
         ("kernels/quantize", kernels_bench.quantize_kernel),
+        ("kernels/entropy", kernels_bench.entropy_coder),
         ("kernels/seal", kernels_bench.seal_datapath),
         ("kernels/sharded_seal", kernels_bench.sharded_seal),
     ]
+    committed = _load_committed() if check else {}
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites:
@@ -71,8 +111,16 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR: {e!r}", flush=True)
-    _write_kernels_json(kernels_bench.JSON_METRICS)
-    if failures:
+    regressions = 0
+    if check:
+        regressions = _check_regressions(committed, kernels_bench.JSON_METRICS)
+    if regressions:
+        # keep the committed baseline intact so a rerun still gates against
+        # the good numbers instead of ratcheting down to the regressed ones
+        print(f"# NOT overwriting {_JSON_PATH} (regression gate failed)")
+    else:
+        _write_kernels_json(kernels_bench.JSON_METRICS)
+    if failures or regressions:
         sys.exit(1)
 
 

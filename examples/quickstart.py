@@ -1,9 +1,10 @@
 """Quickstart: the Salient Store archival pipeline in ~60 lines.
 
     compress (layered neural codec, motion-vector latent)
-      -> encrypt + erasure-code in ONE fused kernel pass
-         (pack + ChaCha20 + XOR-seal + RAID-6 P/Q, repro.kernels.seal)
-        -> lose two shards -> rebuild -> decrypt -> decode.
+      -> entropy-code on-device (interleaved rANS, repro.kernels.entropy)
+        -> encrypt + erasure-code in ONE fused kernel pass
+           (pack + ChaCha20 + XOR-seal + RAID-6 P/Q, repro.kernels.seal)
+          -> lose two shards -> rebuild -> decrypt -> decode.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -45,12 +46,14 @@ def main():
     for sid, (frames, blk, rec) in enumerate(
         zip(frames_list, stripe.blocks, recons)
     ):
+        em = blk.manifest["entropy"]
         print(
             f"stream {sid}: {frames.size * 4:6d} raw bytes -> "
+            f"{em['n_raw']:5d} codes -{em['codec']}-> {em['n_comp']:5d} -> "
             f"{blk.sealed.body.size * 4:5d} sealed bytes, "
             f"codec psnr {float(psnr(rec, frames)):.1f} dB (untrained AE)"
         )
-    print("RAID-6 parity computed in the same kernel pass")
+    print("entropy stage ran on-device; RAID-6 parity in the same seal pass")
 
     # simulate losing two storage shards (paper: intermittent power / pulled disk)
     manifests = stripe_manifests(stripe)

@@ -2,12 +2,23 @@
 
 Device path (runs where the data shard lives — the CSD analogue):
   1. layered neural codec encodes the GOP (int8 codes + int8 motion fields);
-  2. codes are packed into uint32 words and sealed (R-LWE KEM + ChaCha20);
-  3. sealed bodies from the S shards of a stripe are parity-coded
+  2. the flat codes are entropy-coded by the interleaved-rANS kernel
+     (``repro.kernels.entropy``, ``codec_name="rans"``) — the stage that
+     used to ship raw bytes to a host-side zstd pass now runs at the data;
+  3. the compressed streams are packed into uint32 words and sealed
+     (R-LWE KEM + ChaCha20);
+  4. sealed bodies from the S shards of a stripe are parity-coded
      (RAID-5/6) so any 1-2 shard losses are recoverable.
 
-Only steps that must see raw bytes (zstd entropy stage, disk I/O) run host
-side, on *sealed, compressed* data — the paper's data-movement thesis.
+With the entropy stage on-device the whole codes -> entropy -> pack ->
+ChaCha20 -> parity chain runs without a host roundtrip; only disk I/O and
+O(1) manifest metadata (lengths, KEM polys, nonces) are host-side, and they
+cover *sealed, compressed* data — the paper's data-movement thesis, now for
+every hot-path stage.  ``ArchiveConfig.codec_name`` selects ``"rans"``
+(on-device, default), ``"zstd"``/``"zlib"`` (the legacy host-side codec via
+``repro.common.compress``, kept as the fallback for hosts that want a
+byte-for-byte zstd archive), or ``"none"``; manifests record the codec so
+``restore_stripe`` dispatches on what was actually written.
 
 Two granularities:
 
@@ -42,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import compress as host_entropy
 from repro.core.archival import raid
 from repro.core.codec.layered_codec import (
     CodecConfig,
@@ -56,6 +68,7 @@ from repro.core.crypto.hybrid import (
     seal,
     unseal,
 )
+from repro.kernels.entropy import ops as entropy_ops
 from repro.kernels.seal import ops as seal_ops
 
 __all__ = [
@@ -67,6 +80,8 @@ __all__ = [
     "archive_gop",
     "restore_gop",
     "encode_gop_payload",
+    "entropy_encode_payloads",
+    "entropy_decode_payloads",
     "seal_payload_stripe",
     "archive_stripe",
     "restore_stripe",
@@ -81,6 +96,9 @@ class ArchiveConfig(NamedTuple):
     rlwe: rlwe.RLWEParams = rlwe.RLWEParams()
     n_layers: Optional[int] = None  # quality-layer prefix (None = all)
     parity: str = "raid6"  # "raid5" | "raid6" | "none"
+    # entropy stage: "rans" (on-device kernel) | "zstd"/"zlib" (host
+    # fallback via repro.common.compress) | "none"
+    codec_name: str = "rans"
 
 
 class ArchivedBlock(NamedTuple):
@@ -203,6 +221,79 @@ def encode_gop_payload(
     return flat, dict(manifest, frames_shape=tuple(frames.shape)), recons
 
 
+def entropy_encode_payloads(
+    flats: List[jax.Array],
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+    entropy_fn=None,
+) -> Tuple[List[jax.Array], List[Dict]]:
+    """Entropy-code S shard payloads per ``cfg.codec_name``.
+
+    Returns (compressed flats, per-shard entropy metas recorded into the
+    manifests).  ``entropy_fn`` overrides the on-device coder launch — the
+    sharded path passes a shard_map'd wrapper with the same signature as
+    ``entropy_ops.encode_payloads`` (the ``seal_fn`` pattern).  Host codecs
+    (zstd/zlib) pull the payload to the host — that is the traffic the
+    on-device coder exists to remove; they are kept as the compatibility
+    fallback.
+    """
+    name = cfg.codec_name
+    if name == "none":
+        return list(flats), [
+            {"codec": "none", "n_raw": int(f.shape[0]), "n_comp": int(f.shape[0])}
+            for f in flats
+        ]
+    if name == "rans":
+        if entropy_fn is not None:
+            return entropy_fn(flats, use_pallas=use_pallas)
+        return entropy_ops.encode_payloads(flats, use_pallas=use_pallas)
+    if name in ("zstd", "zlib"):
+        comps, metas = [], []
+        for f in flats:
+            raw = np.asarray(f, np.int8).tobytes()
+            blob = host_entropy.compress_as(name, raw)
+            comps.append(jnp.asarray(np.frombuffer(blob, np.int8)))
+            metas.append(
+                {"codec": name, "n_raw": len(raw), "n_comp": len(blob)}
+            )
+        return comps, metas
+    raise ValueError(f"unknown entropy codec {name!r}")
+
+
+def entropy_decode_payloads(
+    comps: List[jax.Array],
+    metas: List[Dict],
+    *,
+    use_pallas: bool = True,
+    entropy_decode_fn=None,
+) -> List[jax.Array]:
+    """Invert ``entropy_encode_payloads``, dispatching on the *recorded*
+    codec (the manifest is ground truth, not the caller's current config)."""
+    if not metas:
+        return []
+    names = {m["codec"] for m in metas}
+    if len(names) != 1:
+        raise ValueError(f"stripe mixes entropy codecs {sorted(names)}")
+    name = names.pop()
+    if name == "none":
+        return list(comps)
+    if name == "rans":
+        if entropy_decode_fn is not None:
+            return entropy_decode_fn(comps, metas, use_pallas=use_pallas)
+        return entropy_ops.decode_payloads(comps, metas, use_pallas=use_pallas)
+    if name in ("zstd", "zlib"):
+        out = []
+        for c, m in zip(comps, metas):
+            raw = host_entropy.decompress_as(
+                name, np.asarray(c, np.int8).tobytes(),
+                max_output_size=m["n_raw"],
+            )
+            out.append(jnp.asarray(np.frombuffer(raw, np.int8)))
+        return out
+    raise ValueError(f"unknown entropy codec {name!r}")
+
+
 def seal_payload_stripe(
     pub: rlwe.PublicKey,
     flats: List[jax.Array],
@@ -213,15 +304,30 @@ def seal_payload_stripe(
     use_pallas: bool = True,
     pad_rows: Optional[int] = None,
     seal_fn=None,
+    entropy_fn=None,
 ) -> StripeArchive:
-    """Seal pre-encoded payloads as one parity stripe (one fused launch).
+    """Entropy-code + seal pre-encoded payloads as one parity stripe.
 
-    Per-shard session keys are KEM-encapsulated host-side (tiny); the bulk
-    pack + ChaCha20 + XOR + RAID parity run in one kernel pass over the
-    stripe.  ``seal_fn`` overrides the launch itself — the sharded path
-    passes a shard_map'd wrapper with the same signature as
-    ``seal_ops.seal_stripe``.
+    The entropy stage (``cfg.codec_name``) runs first — on-device for
+    "rans", so the compressed stream feeds pack + ChaCha20 + XOR + RAID
+    parity in the fused seal launch without visiting the host.  Per-shard
+    session keys are KEM-encapsulated host-side (tiny).  ``seal_fn`` /
+    ``entropy_fn`` override the respective launches — the sharded path
+    passes shard_map'd wrappers with the same signatures as
+    ``seal_ops.seal_stripe`` / ``entropy_ops.encode_payloads``.
     """
+    flats, emetas = entropy_encode_payloads(
+        flats, cfg, use_pallas=use_pallas, entropy_fn=entropy_fn
+    )
+    manifests = [dict(m, entropy=em) for m, em in zip(manifests, emetas)]
+    if cfg.codec_name != "none" and pad_rows is not None:
+        # the caller's bucket covered the RAW payload; re-bucket on the
+        # compressed sizes (still pow2, so jit traces stay bounded) — an
+        # incompressible shard can exceed its raw bucket (stream header +
+        # 16-bit renorm slack)
+        pad_rows = seal_ops.bucket_rows_for(
+            max(-(-int(f.shape[0]) // 4) for f in flats)
+        )
     mats = [
         encapsulate_session(pub, jax.random.fold_in(key, s), cfg.rlwe)
         for s in range(len(flats))
@@ -261,13 +367,14 @@ def archive_stripe(
     *,
     use_pallas: bool = True,
     seal_fn=None,
+    entropy_fn=None,
 ) -> Tuple[StripeArchive, List[jax.Array]]:
-    """Archive S GOPs as one parity stripe with a single fused seal launch.
+    """Archive S GOPs as one parity stripe: codes -> entropy -> fused seal.
 
     frames_list: S clips, each (T, B, H, W, 3) — one per storage shard.
-    ``use_pallas=False`` runs the staged jnp reference instead (bit-identical
-    bodies and parity); ``seal_fn`` dispatches the launch (see
-    ``seal_payload_stripe``).
+    ``use_pallas=False`` runs the staged jnp references instead
+    (bit-identical streams, bodies and parity); ``seal_fn``/``entropy_fn``
+    dispatch the launches (see ``seal_payload_stripe``).
     """
     flats, manifests, recons = [], [], []
     for frames in frames_list:
@@ -276,7 +383,8 @@ def archive_stripe(
         manifests.append(manifest)
         recons.append(rec)
     stripe = seal_payload_stripe(
-        pub, flats, manifests, key, cfg, use_pallas=use_pallas, seal_fn=seal_fn
+        pub, flats, manifests, key, cfg, use_pallas=use_pallas,
+        seal_fn=seal_fn, entropy_fn=entropy_fn,
     )
     return stripe, recons
 
@@ -290,14 +398,17 @@ def restore_stripe(
     use_pallas: bool = True,
     verify_parity: bool = True,
     unseal_fn=None,
+    entropy_decode_fn=None,
 ) -> List[jax.Array]:
-    """Decode every shard of a stripe with a single fused unseal launch.
+    """Decode every shard of a stripe: fused unseal -> entropy decode -> GOPs.
 
     The kernel recomputes P/Q from the sealed bodies as stored; with
     ``verify_parity`` the recomputation must match the parity written at
-    seal time (stripe integrity check) or a ``ValueError`` is raised.
-    ``unseal_fn`` dispatches the launch (the sharded path passes a
-    shard_map'd wrapper with ``seal_ops.unseal_stripe``'s signature).
+    seal time (stripe integrity check) or a ``ValueError`` is raised —
+    *before* the entropy stage touches the streams.  The entropy codec is
+    dispatched from the manifest (what was written wins over the caller's
+    cfg).  ``unseal_fn``/``entropy_decode_fn`` dispatch the launches (the
+    sharded path passes shard_map'd wrappers).
     """
     if not stripe.blocks:
         raise ValueError("stripe must contain at least one shard payload")
@@ -311,7 +422,15 @@ def restore_stripe(
         nonces.append(b.sealed.nonce)
 
     n_words = tuple(int(b.sealed.body.shape[0]) for b in stripe.blocks)
-    n_i8 = tuple(b.manifest["n_i8"] for b in stripe.blocks)
+    emetas = [
+        b.manifest.get("entropy", {"codec": "none"}) for b in stripe.blocks
+    ]
+    # bytes inside the sealed body: the compressed stream when an entropy
+    # stage ran, the raw payload otherwise
+    n_i8 = tuple(
+        int(em.get("n_comp", b.manifest["n_i8"]))
+        for b, em in zip(stripe.blocks, emetas)
+    )
     R = seal_ops.pad_rows_for(max(n_words))
     sealed = jnp.stack(
         [
@@ -350,9 +469,17 @@ def restore_stripe(
             ):
                 raise ValueError(f"stripe parity mismatch on {name.upper()}")
 
+    payloads = entropy_decode_payloads(
+        [flats[i][: n_i8[i]] for i in range(len(stripe.blocks))],
+        [dict(em, codec=em.get("codec", "none")) for em in emetas],
+        use_pallas=use_pallas,
+        entropy_decode_fn=entropy_decode_fn,
+    )
     out = []
     for i, b in enumerate(stripe.blocks):
-        frame_codes = _unflatten_codes(flats[i][: n_i8[i]], b.manifest)
+        frame_codes = _unflatten_codes(
+            payloads[i][: b.manifest["n_i8"]], b.manifest
+        )
         out.append(decode_gop(codec_params, cfg.codec, frame_codes))
     return out
 

@@ -17,15 +17,27 @@ Key structural facts encoded:
     COMPRESSED+ENCRYPTED bytes peer-to-peer — the paper's entire thesis;
   * CSD compute rate ~= 3.9x storage-CPU rate (Table 2 row 2);
   * multi-node remote access suffers contention growing with node count
-    (Fig. 10's super-linear latency).
+    (Fig. 10's super-linear latency);
+  * the entropy stage is placeable (``entropy_placement_cost`` /
+    ``best_entropy_placement``): host-side zstd pays a raw-byte host-link
+    crossing, the on-device rANS kernel pays none — the term the placement
+    scheduler prices now that ``repro.kernels.entropy`` exists.
+
+On ``compress_ratio``: 6.1 is the paper's END-TO-END data-volume reduction
+(Fig. 5c), i.e. neural codec x entropy stage.  Our measured *entropy-stage*
+ratio on int8 latent codes is ~2.5x (``BENCH_kernels.json`` ->
+``entropy_fused.ratio``); the remaining factor comes from the lossy codec
+upstream, so 6.1 stays the right end-to-end default here.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Sequence, Tuple
 
 __all__ = ["SystemModel", "classical_archive", "vss_archive", "csd_archive",
-           "multinode_latency", "multinode_movement_latency", "csd_ratio_tradeoff"]
+           "multinode_latency", "multinode_movement_latency",
+           "csd_ratio_tradeoff", "entropy_placement_cost",
+           "best_entropy_placement"]
 
 
 class SystemModel(NamedTuple):
@@ -42,10 +54,19 @@ class SystemModel(NamedTuple):
     stripe_serial_frac: float = 0.25  # non-parallel stripe work (parity,
     # coordination, metadata) — system-level only; Table 2's independent
     # streams scale near-linearly, Fig. 11's shared stripe does not.
+    entropy_cpu_GBps: float = 1.1  # host entropy-coder (zstd-class) rate
+    entropy_ratio: float = 2.5  # entropy-stage-only ratio on int8 latents
+    # (measured: BENCH_kernels.json entropy_fused.ratio; compress_ratio
+    # above is the END-TO-END 6.1x incl. the neural codec)
 
     @property
     def csd_rate_GBps(self) -> float:
         return self.cpu_rate_GBps * self.csd_speedup
+
+    @property
+    def entropy_csd_GBps(self) -> float:
+        """On-CSD entropy rate: same kernel-vs-CPU factor as Table 2."""
+        return self.entropy_cpu_GBps * self.csd_speedup
 
 
 class ArchiveCost(NamedTuple):
@@ -91,6 +112,46 @@ def csd_archive(
         out / (sys.ssd_write_GBps * 1e9),
     )
     return ArchiveCost(lat, out)
+
+
+def entropy_placement_cost(
+    sys: SystemModel, raw_bytes: float, where: str = "csd"
+) -> ArchiveCost:
+    """Price the entropy stage alone at a given placement.
+
+    ``where="host"``: the legacy zstd/zlib stage — every raw payload byte
+    crosses the host link, gets coded at CPU rate, and the compressed
+    stream crosses back to be sealed where the data lives (pipelined: the
+    bottleneck stage bounds latency, the *moved* figure counts both hops).
+    ``where="csd"``: the on-device rANS kernel — coded at the CSD kernel
+    rate, zero payload bytes on the host link (manifest ints only).
+    """
+    out = raw_bytes / sys.entropy_ratio
+    if where == "host":
+        lat = max(
+            raw_bytes / (sys.host_link_GBps * 1e9),   # raw up
+            raw_bytes / (sys.entropy_cpu_GBps * 1e9),  # CPU coder
+            out / (sys.host_link_GBps * 1e9),          # stream back down
+        )
+        return ArchiveCost(lat, raw_bytes + out)
+    if where == "csd":
+        lat = max(
+            raw_bytes / (sys.entropy_csd_GBps * 1e9),      # on-device coder
+            raw_bytes / (sys.ssd_internal_GBps * 1e9),     # flash feed
+        )
+        return ArchiveCost(lat, 0.0)
+    raise ValueError(f"unknown entropy placement {where!r}")
+
+
+def best_entropy_placement(
+    sys: SystemModel, raw_bytes: float
+) -> Tuple[str, dict]:
+    """The scheduler's entropy-stage decision: cheapest latency placement,
+    with the per-option costs so callers can weigh movement too."""
+    costs = {
+        w: entropy_placement_cost(sys, raw_bytes, w) for w in ("host", "csd")
+    }
+    return min(costs, key=lambda w: costs[w].latency_s), costs
 
 
 def cpu_on_csd_data(sys: SystemModel, raw_bytes: float) -> ArchiveCost:

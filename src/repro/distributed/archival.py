@@ -72,6 +72,8 @@ from repro.core.archival.pipeline import (
 )
 from repro.core.crypto import rlwe
 from repro.kernels import use_interpret
+from repro.kernels.entropy import ops as entropy_ops
+from repro.kernels.entropy.rans import PROB_SCALE
 from repro.kernels.seal import ops as seal_ops
 from repro.kernels.seal import ref as _ref
 from repro.kernels.seal.ops import SealedStripe
@@ -83,6 +85,8 @@ from repro.kernels.seal.seal import (
 __all__ = [
     "seal_stripe_sharded",
     "unseal_stripe_sharded",
+    "entropy_encode_sharded",
+    "entropy_decode_sharded",
     "archive_stripe_sharded",
     "restore_stripe_sharded",
     "PendingGOP",
@@ -214,6 +218,99 @@ def unseal_stripe_sharded(stripe: SealedStripe, keys, nonces, *, mesh: Mesh,
     return flats, p, q
 
 
+# --------------------------------------------------- sharded entropy stage
+@functools.lru_cache(maxsize=None)
+def _sharded_entropy_core(mesh: Mesh, axis: str, decode: bool,
+                          use_pallas: bool, interpret: bool):
+    """jit'd shard_map'd rANS core, cached per (mesh, mode).
+
+    The coder has no cross-shard term at all — each mesh shard runs the
+    fused histogram+table+scan kernel on its local slice of the stripe
+    (launches/stripe/device = 1), which is exactly the paper's per-CSD
+    compression: only the seal stage's parity reduce ever crosses shards.
+    """
+
+    def local_encode(codes, n_valid):
+        return entropy_ops._encode_core(
+            codes, n_valid, use_pallas=use_pallas, interpret=interpret
+        )
+
+    def local_decode(lane_words, freq, states, n_valid):
+        return entropy_ops._decode_core(
+            lane_words, freq, states, n_valid,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    if decode:
+        fn = _shard_map(
+            local_decode, mesh=mesh,
+            in_specs=(P(axis),) * 4, out_specs=P(axis),
+        )
+    else:
+        fn = _shard_map(
+            local_encode, mesh=mesh,
+            in_specs=(P(axis), P(axis)), out_specs=(P(axis),) * 4,
+        )
+    return jax.jit(fn)
+
+
+def entropy_encode_sharded(payloads, *, mesh: Mesh, axis: str = "data",
+                           use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """``entropy_ops.encode_payloads`` with the coder shard_map'd over
+    ``mesh`` — same streams/metas bit-for-bit for every mesh shape (dummy
+    zero-length shards pad non-divisible stripes; ``n_valid = 0`` idles
+    their lanes so they emit nothing)."""
+    D = int(mesh.shape[axis])
+    core = _sharded_entropy_core(
+        mesh, axis, False, use_pallas, use_interpret(interpret)
+    )
+
+    def core_fn(codes, n_valid):
+        S = codes.shape[0]
+        s_pad = -(-S // D) * D
+        outs = core(
+            _pad_shard_axis(codes, s_pad), _pad_shard_axis(n_valid, s_pad)
+        )
+        return tuple(o[:S] for o in outs)
+
+    return entropy_ops.encode_payloads(
+        payloads, use_pallas=use_pallas, core_fn=core_fn
+    )
+
+
+def entropy_decode_sharded(comps, metas, *, mesh: Mesh, axis: str = "data",
+                           use_pallas: bool = True,
+                           interpret: Optional[bool] = None):
+    """Sharded twin of ``entropy_ops.decode_payloads`` (same outputs)."""
+    D = int(mesh.shape[axis])
+    core = _sharded_entropy_core(
+        mesh, axis, True, use_pallas, use_interpret(interpret)
+    )
+    # dummy shards decode against a degenerate-but-valid table (symbol 0
+    # owns the whole range) so padded lanes cannot divide by zero or gather
+    # out of range; n_valid = 0 masks their output anyway
+    dummy_freq = jnp.zeros((256,), jnp.int32).at[0].set(PROB_SCALE)
+
+    def core_fn(lane_words, freq, states, n_valid):
+        S = lane_words.shape[0]
+        s_pad = -(-S // D) * D
+        freq_p = jnp.concatenate(
+            [freq] + [dummy_freq[None]] * (s_pad - S), axis=0
+        ) if s_pad != S else freq
+        out = core(
+            _pad_shard_axis(lane_words, s_pad),
+            freq_p,
+            _pad_shard_axis(states, s_pad),
+            _pad_shard_axis(n_valid, s_pad),
+        )
+        return out[:S]
+
+    return entropy_ops.decode_payloads(
+        comps, metas, use_pallas=use_pallas, core_fn=core_fn
+    )
+
+
 def archive_stripe_sharded(
     codec_params,
     pub: rlwe.PublicKey,
@@ -225,16 +322,22 @@ def archive_stripe_sharded(
     axis: str = "data",
     use_pallas: bool = True,
 ) -> Tuple[StripeArchive, List[jax.Array]]:
-    """``archive_stripe`` with the seal launch shard_map'd over ``mesh``.
+    """``archive_stripe`` with the entropy + seal launches shard_map'd over
+    ``mesh``: each mesh shard entropy-codes and seals its own slice of the
+    stripe (the CSD-array mapping), so a stripe goes codes -> rANS -> pack
+    -> ChaCha20 -> parity with one local launch per stage per device.
 
-    Outputs (sealed bodies, P, Q, manifests) are bit-identical to the
-    single-device ``archive_stripe`` for every mesh shape — the KEM runs
-    host-side in the same order, and the sharded seal differs only in where
-    each shard's kernel executes.
+    Outputs (streams, sealed bodies, P, Q, manifests) are bit-identical to
+    the single-device ``archive_stripe`` for every mesh shape — the KEM runs
+    host-side in the same order, and the sharded launches differ only in
+    where each shard's kernel executes.
     """
     return archive_stripe(
         codec_params, pub, frames_list, key, cfg, use_pallas=use_pallas,
         seal_fn=functools.partial(seal_stripe_sharded, mesh=mesh, axis=axis),
+        entropy_fn=functools.partial(
+            entropy_encode_sharded, mesh=mesh, axis=axis
+        ),
     )
 
 
@@ -249,12 +352,16 @@ def restore_stripe_sharded(
     use_pallas: bool = True,
     verify_parity: bool = True,
 ) -> List[jax.Array]:
-    """``restore_stripe`` with the unseal launch shard_map'd over ``mesh``."""
+    """``restore_stripe`` with the unseal + entropy-decode launches
+    shard_map'd over ``mesh``."""
     return restore_stripe(
         codec_params, s, stripe, cfg, use_pallas=use_pallas,
         verify_parity=verify_parity,
         unseal_fn=functools.partial(
             unseal_stripe_sharded, mesh=mesh, axis=axis
+        ),
+        entropy_decode_fn=functools.partial(
+            entropy_decode_sharded, mesh=mesh, axis=axis
         ),
     )
 
@@ -367,14 +474,20 @@ def seal_coalesced_stripe(
     axis: str = "data",
     use_pallas: bool = True,
 ) -> StripeArchive:
-    """Seal one coalesced stripe (sharded over ``mesh`` when given).
+    """Entropy-code + seal one coalesced stripe (sharded over ``mesh`` when
+    given: the rANS coder and the seal kernel each run once per mesh shard).
 
     The bucket's ``pad_rows`` flows into the launch so every stripe from the
-    same bucket shares one jit trace.
+    same bucket shares one jit trace (re-bucketed on the compressed sizes
+    when an entropy stage runs — see ``seal_payload_stripe``).
     """
     seal_fn = None
+    entropy_fn = None
     if mesh is not None:
         seal_fn = functools.partial(seal_stripe_sharded, mesh=mesh, axis=axis)
+        entropy_fn = functools.partial(
+            entropy_encode_sharded, mesh=mesh, axis=axis
+        )
     return seal_payload_stripe(
         pub,
         [g.payload for g in cs.gops],
@@ -384,4 +497,5 @@ def seal_coalesced_stripe(
         use_pallas=use_pallas,
         pad_rows=cs.pad_rows,
         seal_fn=seal_fn,
+        entropy_fn=entropy_fn,
     )

@@ -5,17 +5,19 @@ Each kernel lives in its own package as ``<name>.py`` (the Pallas kernel),
 ``ops.py`` (jit'd public wrappers handling padding and dispatch).
 
 Kernels: ``polymul`` (R-LWE negacyclic matmul, MXU), ``motion`` (block
-matching, VPU), ``quantize`` (blockwise int8, VPU), ``seal`` (fused archival
-pack + ChaCha20 + XOR-seal + RAID parity, VPU).
+matching, VPU), ``quantize`` (blockwise int8, VPU), ``entropy``
+(interleaved-rANS byte coder, 128 lanes on the VPU lane axis), ``seal``
+(fused archival pack + ChaCha20 + XOR-seal + RAID parity, VPU).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
+import jax.numpy as jnp
 
-__all__ = ["use_interpret"]
+__all__ = ["use_interpret", "as_payload_list"]
 
 
 def use_interpret(interpret: Optional[bool] = None) -> bool:
@@ -28,3 +30,12 @@ def use_interpret(interpret: Optional[bool] = None) -> bool:
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def as_payload_list(payloads) -> List[jax.Array]:
+    """Normalize ragged stripe payloads (list/tuple or stacked (S, N) array)
+    to a list of flat int8 arrays — shared by the seal and entropy ops."""
+    if isinstance(payloads, (list, tuple)):
+        return [jnp.asarray(p).reshape(-1).astype(jnp.int8) for p in payloads]
+    arr = jnp.asarray(payloads)
+    return [arr[s].reshape(-1).astype(jnp.int8) for s in range(arr.shape[0])]

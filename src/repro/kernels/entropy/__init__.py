@@ -1,0 +1,14 @@
+"""Interleaved-rANS entropy coder kernel package.
+
+Layout follows the kernel convention: ``rans.py`` (the Pallas coder),
+``ref.py`` (staged jnp oracle, bit-identical), ``ops.py`` (public padding/
+dispatch/stream-packing wrappers).
+"""
+
+from repro.kernels.entropy.ops import (  # noqa: F401
+    HEADER_BYTES,
+    decode_payloads,
+    encode_payloads,
+    entropy_traffic,
+    rows_for,
+)

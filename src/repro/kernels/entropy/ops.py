@@ -1,0 +1,281 @@
+"""Public wrappers for the interleaved-rANS entropy stage: padding, dispatch,
+stream packing, accounting.
+
+``encode_payloads`` / ``decode_payloads`` accept ragged per-shard payloads,
+pad them to the kernel's (T, 128) lane grid (T pow2-bucketed like
+``seal_ops.bucket_rows_for`` so jit traces stay bounded for mixed GOP
+sizes), dispatch either the fused Pallas coder (one launch per stripe) or
+the staged jnp oracle (``use_pallas=False``), and pack the result into a
+self-contained compressed byte stream per shard:
+
+    [freq table: 256 x u16][lane lengths: 128 x u32][lane states: 128 x u32]
+    [per-lane word streams, lane-major, in decoder read order]
+
+Everything a decoder needs except the raw/compressed lengths (tiny host
+metadata, recorded in the archive manifest like ``n_i8``) travels inside the
+stream, so the compression-ratio accounting is honest: ``n_comp`` includes
+the 1280-byte header.  The stream bytes are what the seal kernel encrypts
+and parity-codes — the entropy stage output never has to visit the host.
+
+``core_fn`` overrides the coder launch itself; the sharded path
+(``repro.distributed.archival``) passes a shard_map'd wrapper with the same
+signature, exactly like ``seal_fn``/``unseal_fn`` in the seal pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import as_payload_list, use_interpret
+from repro.kernels.entropy import ref as _ref
+from repro.kernels.entropy.rans import (
+    N_LANES,
+    T_TILE,
+    rans_decode_pallas,
+    rans_encode_pallas,
+)
+
+__all__ = [
+    "HEADER_BYTES",
+    "MAX_ROWS",
+    "rows_for",
+    "encode_payloads",
+    "decode_payloads",
+    "entropy_traffic",
+]
+
+# freq u16[256] + lane_lens u32[128] + states u32[128]
+HEADER_BYTES = 2 * 256 + 4 * N_LANES + 4 * N_LANES
+# int32 global byte indices inside the kernels bound the shard size (the
+# practical bound: one stripe shard is a GOP or a checkpoint chunk, not GBs)
+MAX_ROWS = 1 << 23  # 1 GiB per shard
+
+
+def rows_for(n_bytes: int) -> int:
+    """Smallest pow2 multiple of ``T_TILE`` lane rows covering n_bytes.
+
+    Pow2 bucketing bounds jit traces at log2(max_rows) for arbitrarily
+    ragged payload mixes (same scheme as ``seal_ops.bucket_rows_for``); the
+    padding bytes are zeros, which the coder squeezes to ~0 bits each.
+    """
+    rows = max(1, -(-n_bytes // N_LANES))
+    tiles = -(-rows // T_TILE)
+    return T_TILE * (1 << (tiles - 1).bit_length())
+
+
+def _u16_to_u8(w: jax.Array) -> jax.Array:
+    """(..., n) uint16 -> (..., 2n) uint8, little-endian."""
+    lo = (w & jnp.uint16(0xFF)).astype(jnp.uint8)
+    hi = (w >> jnp.uint16(8)).astype(jnp.uint8)
+    return jnp.stack([lo, hi], axis=-1).reshape(*w.shape[:-1], -1)
+
+
+def _u32_to_u8(w: jax.Array) -> jax.Array:
+    """(..., n) uint32 -> (..., 4n) uint8, little-endian."""
+    parts = [
+        ((w >> jnp.uint32(8 * k)) & jnp.uint32(0xFF)).astype(jnp.uint8)
+        for k in range(4)
+    ]
+    return jnp.stack(parts, axis=-1).reshape(*w.shape[:-1], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _encode_core(codes, n_valid, *, use_pallas: bool, interpret: bool):
+    if use_pallas:
+        return rans_encode_pallas(codes, n_valid, interpret=interpret)
+    return _ref.rans_encode_ref(codes, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _decode_core(lane_words, freq, states, n_valid, *,
+                 use_pallas: bool, interpret: bool):
+    if use_pallas:
+        return rans_decode_pallas(
+            lane_words, freq, states, n_valid, interpret=interpret
+        )
+    return _ref.rans_decode_ref(lane_words, freq, states, n_valid)
+
+
+@jax.jit
+def _pack_streams(words, mask, freq, states):
+    """Dense emissions -> (padded compressed bytes (S, C), n_comp (S,)).
+
+    Compaction is a prefix-sum scatter in lane-major order: lane l's words
+    land at [off(l), off(l)+len(l)) in increasing row order — exactly the
+    order the decoder consumes them (rANS emits backwards, reads forwards;
+    the encode kernel already tagged each emission with its row).  Unemitted
+    slots are routed to one overflow slot past the end and dropped.
+    """
+    S, T, L = words.shape
+    lm = jnp.swapaxes(mask, 1, 2).reshape(S, L * T) != 0
+    wm = jnp.swapaxes(words, 1, 2).reshape(S, L * T)
+    pos = jnp.cumsum(lm, axis=1) - 1
+    dest = jnp.where(lm, pos, L * T)
+    comp_words = (
+        jnp.zeros((S, L * T + 1), jnp.uint16)
+        .at[jnp.arange(S)[:, None], dest]
+        .set(wm)[:, : L * T]
+    )
+    lane_lens = mask.astype(jnp.int32).sum(axis=1)           # (S, L)
+    n_words = lm.sum(axis=1)                                 # (S,)
+    header = jnp.concatenate(
+        [
+            _u16_to_u8(freq.astype(jnp.uint16)),
+            _u32_to_u8(lane_lens.astype(jnp.uint32)),
+            _u32_to_u8(states),
+        ],
+        axis=1,
+    )
+    comp = jnp.concatenate([header, _u16_to_u8(comp_words)], axis=1)
+    return comp, HEADER_BYTES + 2 * n_words
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def _parse_streams(comp, *, rows: int):
+    """Padded compressed bytes (S, C) uint8 -> decoder inputs.
+
+    Re-gathers the flat word stream into the (S, T, 128) per-lane layout the
+    decode kernel scans: word j of lane l sits at stream[off(l) + j].
+    Positions past a lane's length gather a clamped index — never consumed,
+    because the decoder's renorm flags mirror the encoder's emissions.
+    """
+    S, C = comp.shape
+    u = comp.astype(jnp.int32)
+    freq = u[:, 0:512:2] | (u[:, 1:512:2] << 8)              # (S, 256)
+    lane_lens = (
+        u[:, 512:1024:4]
+        | (u[:, 513:1024:4] << 8)
+        | (u[:, 514:1024:4] << 16)
+        | (u[:, 515:1024:4] << 24)
+    )                                                        # (S, 128)
+    su = comp.astype(jnp.uint32)
+    states = (
+        su[:, 1024:1536:4]
+        | (su[:, 1025:1536:4] << jnp.uint32(8))
+        | (su[:, 1026:1536:4] << jnp.uint32(16))
+        | (su[:, 1027:1536:4] << jnp.uint32(24))
+    )                                                        # (S, 128)
+    body = u[:, HEADER_BYTES:]
+    W = body.shape[1] // 2
+    stream = (body[:, 0 : 2 * W : 2] | (body[:, 1 : 2 * W : 2] << 8)).astype(
+        jnp.uint16
+    )
+    off = jnp.cumsum(lane_lens, axis=-1) - lane_lens         # exclusive
+    idx = off[:, None, :] + jnp.arange(rows, dtype=jnp.int32)[None, :, None]
+    idx = jnp.clip(idx, 0, W - 1).reshape(S, rows * N_LANES)
+    lane_words = jnp.take_along_axis(stream, idx, axis=1).reshape(
+        S, rows, N_LANES
+    )
+    return lane_words, freq, states
+
+
+def encode_payloads(
+    payloads,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    core_fn=None,
+) -> Tuple[List[jax.Array], List[Dict]]:
+    """rANS-encode S ragged shard payloads in one fused launch.
+
+    payloads: list of flat int8 arrays (ragged ok) or an (S, N) int8 array.
+    Returns (compressed int8 streams — exact length, header included — and
+    per-shard metas ``{"codec", "n_raw", "n_comp", "rows"}``).  ``rows`` is
+    the padded lane-row count the whole stripe was coded at; decode needs it
+    back.  ``core_fn`` overrides the coder launch (sharded path).
+    """
+    flats = as_payload_list(payloads)
+    if not flats:
+        raise ValueError("stripe must contain at least one shard payload")
+    n_raw = tuple(int(f.shape[0]) for f in flats)
+    T = rows_for(max(n_raw))
+    if T > MAX_ROWS:
+        raise ValueError(
+            f"payload of {max(n_raw)} bytes needs {T} lane rows (max "
+            f"{MAX_ROWS}); split it across more stripe shards"
+        )
+    codes = jnp.stack(
+        [
+            jnp.pad(f, (0, T * N_LANES - n)).reshape(T, N_LANES)
+            for f, n in zip(flats, n_raw)
+        ]
+    )
+    n_valid = jnp.asarray(n_raw, jnp.int32).reshape(-1, 1)
+    if core_fn is None:
+        core_fn = functools.partial(
+            _encode_core, use_pallas=use_pallas, interpret=use_interpret(interpret)
+        )
+    words, mask, freq, states = core_fn(codes, n_valid)
+    comp_pad, n_comp_dev = _pack_streams(words, mask, freq, states)
+    n_comp = [int(n) for n in np.asarray(n_comp_dev)]        # tiny host metadata
+    comps = [
+        comp_pad[s, :n].astype(jnp.int8) for s, n in enumerate(n_comp)
+    ]
+    metas = [
+        {"codec": "rans", "n_raw": nr, "n_comp": nc, "rows": T}
+        for nr, nc in zip(n_raw, n_comp)
+    ]
+    return comps, metas
+
+
+def decode_payloads(
+    comps: Sequence[jax.Array],
+    metas: Sequence[Dict],
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    core_fn=None,
+) -> List[jax.Array]:
+    """Decode twin: compressed streams + metas -> exact original payloads."""
+    if len(comps) != len(metas):
+        raise ValueError(f"{len(comps)} streams vs {len(metas)} metas")
+    if not comps:
+        raise ValueError("stripe must contain at least one shard payload")
+    T = int(metas[0]["rows"])
+    if any(int(m["rows"]) != T for m in metas):
+        raise ValueError("all shards of a stripe share one padded row count")
+    flats = [jnp.asarray(c).reshape(-1).astype(jnp.uint8) for c in comps]
+    for f, m in zip(flats, metas):
+        if int(f.shape[0]) != int(m["n_comp"]):
+            raise ValueError(
+                f"stream is {int(f.shape[0])} bytes, manifest says {m['n_comp']}"
+            )
+        if int(f.shape[0]) < HEADER_BYTES:
+            raise ValueError("compressed stream shorter than its header")
+    # common padded width, stream area even and >= one word (tails unread)
+    C = max(max(int(f.shape[0]) for f in flats), HEADER_BYTES + 2)
+    C += (C - HEADER_BYTES) % 2
+    comp = jnp.stack([jnp.pad(f, (0, C - f.shape[0])) for f in flats])
+    lane_words, freq, states = _parse_streams(comp, rows=T)
+    n_valid = jnp.asarray(
+        [int(m["n_raw"]) for m in metas], jnp.int32
+    ).reshape(-1, 1)
+    if core_fn is None:
+        core_fn = functools.partial(
+            _decode_core, use_pallas=use_pallas, interpret=use_interpret(interpret)
+        )
+    codes = core_fn(lane_words, freq, states, n_valid)
+    return [
+        codes[s].reshape(-1)[: int(m["n_raw"])] for s, m in enumerate(metas)
+    ]
+
+
+def entropy_traffic(n_raw: int, n_comp: int) -> dict:
+    """Structural byte accounting: on-device coder vs host entropy stage.
+
+    The host path must round-trip every payload byte over the host link
+    (the exact traffic the paper's CSD offload exists to remove); the fused
+    path ships zero payload bytes host-side — only O(1) manifest ints.
+    """
+    return {
+        "ratio": n_raw / n_comp if n_comp else float("nan"),
+        "host_entropy_bytes": 0,
+        "host_bytes_eliminated": n_raw,
+        "staged_passes": _ref.N_STAGED_PASSES,
+        "fused_launches": 1,
+    }

@@ -1,0 +1,291 @@
+"""Pallas TPU kernel: interleaved-rANS byte coder for the archival datapath.
+
+One grid step codes one shard of a stripe.  The shard's flat int8 payload is
+laid out as (T, 128) rows, and the 128 columns are 128 *independent* rANS
+lanes (lane l owns bytes l, 128+l, 256+l, ...), so every step of the
+sequential coding loop is one (128,)-wide VPU vector op — the interleaved
+layout from Giesen's SIMD rANS, with the lane axis mapped onto the TPU lane
+dimension.
+
+Per shard the kernel runs three fused stages without leaving VMEM:
+
+  1. histogram pass over all T*128 bytes (scatter-add into 256 bins);
+  2. static frequency-table build (:func:`build_freq_table`): integer-exact
+     normalization to ``M = 2**PROB_BITS`` total, every present symbol kept
+     >= 1 — the table is emitted as an output (it ships in the compressed
+     stream header, so decode never re-derives it from data);
+  3. the interleaved encode loop, processed in *reverse* row order (rANS
+     encodes backwards so decode streams forwards), emitting at most one
+     16-bit word per lane per row (32-bit states, 16-bit renormalization:
+     state in [2^16, 2^32) means renorm fires at most once per symbol, which
+     is what makes the loop branchlessly vectorizable).
+
+All arithmetic is integer (uint32 states, shifts, masked compares, one u32
+divide by the per-symbol frequency): there is no float anywhere in the
+coder, so kernel-vs-reference bit-exactness cannot be broken by XLA float
+rewrites (cf. the x/c -> x*(1/c) jit canonicalization that bites float
+kernels).
+
+The encoder does NOT compact its output: it writes a dense (T, 128) word
+buffer plus an emission mask, and ``ops.py`` runs the (shared, order-free)
+prefix-sum compaction into the final byte stream.  The decoder twin takes
+the per-lane word streams re-gathered to (T, 128) plus the header tables
+and states, and reproduces the exact input bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "N_LANES",
+    "PROB_BITS",
+    "PROB_SCALE",
+    "RANS_L",
+    "T_TILE",
+    "build_freq_table",
+    "slot_to_symbol",
+    "rans_encode_pallas",
+    "rans_decode_pallas",
+]
+
+N_LANES = 128                 # interleaved rANS lanes == TPU lane width
+PROB_BITS = 12                # frequency table quantization: sum(freq) = 4096
+PROB_SCALE = 1 << PROB_BITS
+RANS_L = 1 << 16              # state lower bound; 16-bit renormalization
+T_TILE = 8                    # sublane-aligned row granularity
+
+
+def build_freq_table(counts: jax.Array) -> jax.Array:
+    """(256,) int32 byte counts -> (256,) int32 freqs summing to PROB_SCALE.
+
+    Integer-exact and overflow-safe in int32: counts are right-shifted until
+    their total is < 2^19 (so count*budget < 2^31), every present symbol is
+    reserved one slot up front, the remaining budget is floor-allocated
+    proportionally, and the rounding remainder goes to the most frequent
+    symbol.  Present symbols always get freq >= 1; the sum is exactly
+    PROB_SCALE.  Shared verbatim by the Pallas kernel and the jnp reference
+    (same role as ``chacha_rounds_planes`` in the seal kernel).
+    """
+    present = (counts > 0).astype(jnp.int32)
+    total = counts.sum()
+    # shift = #{k : total >= 2^(19+k)}  -- smallest shift with total>>shift < 2^19
+    # (iota, not arange: materialized constants cannot be captured by a
+    # pallas kernel body, computed iotas can)
+    thresholds = 19 + jax.lax.broadcasted_iota(jnp.int32, (12,), 0)
+    shift = (total >= (1 << thresholds)).sum()
+    c2 = jnp.maximum(counts >> shift, present)
+    n2 = jnp.maximum(c2.sum(), 1)
+    budget = PROB_SCALE - present.sum()
+    extra = (c2 * budget) // n2        # c2 < 2^19, budget < 2^12: no overflow
+    freq = present + extra
+    rem = budget - extra.sum()
+    return freq.at[jnp.argmax(c2)].add(rem)
+
+
+def slot_to_symbol(freq: jax.Array, slots: jax.Array) -> jax.Array:
+    """Inverse cumulative lookup: slot in [0, PROB_SCALE) -> symbol id.
+
+    ``side='right'`` on the inclusive cumsum skips zero-frequency symbols
+    (their cumsum entries duplicate the predecessor).
+    """
+    return jnp.searchsorted(
+        jnp.cumsum(freq), slots, side="right"
+    ).astype(jnp.int32)
+
+
+def _histogram(vals: jax.Array, vmask: jax.Array) -> jax.Array:
+    """Exact byte histogram over the valid positions of a (T, 128) tile.
+
+    Invalid (padding) positions are routed to a 257th overflow bin and
+    dropped, so pad zeros cannot distort the frequency table.
+    """
+    idx = jnp.where(vmask, vals, 256)
+    return jnp.zeros((257,), jnp.int32).at[idx.reshape(-1)].add(1)[:256]
+
+
+def _enc_step(x, f, c):
+    """One interleaved encode step: (states, freq, cum) -> (states', word, emit).
+
+    Renorm-before-update with the 16-bit word convention: emit the low half
+    when x >= f << 20 (written shift-compare so f = PROB_SCALE cannot
+    overflow the uint32 threshold).
+    """
+    emit = (x >> jnp.uint32(20)) >= f
+    word = (x & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    x = jnp.where(emit, x >> jnp.uint32(16), x)
+    # padding lanes can look up a zero-frequency symbol; their state update
+    # is discarded by the caller, but the divide must still be defined on
+    # every backend (clamping is a no-op for any real symbol: freq >= 1)
+    f1 = jnp.maximum(f, jnp.uint32(1))
+    x = ((x // f1) << jnp.uint32(PROB_BITS)) + (x % f1) + c
+    return x, word, emit
+
+
+def _dec_step(x, freq, cum_excl, slot2sym):
+    """One interleaved decode step -> (pre-renorm states, symbols, need-word)."""
+    slot = (x & jnp.uint32(PROB_SCALE - 1)).astype(jnp.int32)
+    s = slot2sym[slot]
+    f = freq[s].astype(jnp.uint32)
+    c = cum_excl[s].astype(jnp.uint32)
+    x = f * (x >> jnp.uint32(PROB_BITS)) + slot.astype(jnp.uint32) - c
+    return x, s, x < jnp.uint32(RANS_L)
+
+
+def _lane_iota() -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (N_LANES,), 0)
+
+
+def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
+                   state_ref):
+    vals = (codes_ref[0].astype(jnp.int32)) & 0xFF          # (T, 128)
+    T = vals.shape[0]
+    nv = nvalid_ref[0, 0]
+    gidx = (
+        jax.lax.broadcasted_iota(jnp.int32, (T, N_LANES), 0) * N_LANES
+        + jax.lax.broadcasted_iota(jnp.int32, (T, N_LANES), 1)
+    )
+
+    freq = build_freq_table(_histogram(vals, gidx < nv))     # (256,)
+    cum = jnp.cumsum(freq) - freq                            # exclusive
+    f_u = freq.astype(jnp.uint32)
+    c_u = cum.astype(jnp.uint32)
+
+    def body(j, carry):
+        x, words, mask = carry
+        r = T - 1 - j                                        # reverse row order
+        s = jax.lax.dynamic_index_in_dim(vals, r, 0, keepdims=False)
+        valid = (r * N_LANES + _lane_iota()) < nv
+        x2, w, m = _enc_step(x, f_u[s], c_u[s])
+        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
+        m = m & valid
+        words = jax.lax.dynamic_update_index_in_dim(words, w, r, 0)
+        mask = jax.lax.dynamic_update_index_in_dim(
+            mask, m.astype(jnp.uint8), r, 0
+        )
+        return x, words, mask
+
+    x0 = jnp.full((N_LANES,), RANS_L, jnp.uint32)
+    x, words, mask = jax.lax.fori_loop(
+        0,
+        T,
+        body,
+        (x0, jnp.zeros((T, N_LANES), jnp.uint16),
+         jnp.zeros((T, N_LANES), jnp.uint8)),
+    )
+    words_ref[...] = words[None]
+    mask_ref[...] = mask[None]
+    freq_ref[...] = freq[None]
+    state_ref[...] = x[None]
+
+
+def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref):
+    lane_words = stream_ref[0]                               # (T, 128) u16
+    freq = freq_ref[0]                                       # (256,) int32
+    T = lane_words.shape[0]
+    nv = nvalid_ref[0, 0]
+    cum_excl = jnp.cumsum(freq) - freq
+    slot2sym = slot_to_symbol(
+        freq, jax.lax.broadcasted_iota(jnp.int32, (PROB_SCALE,), 0)
+    )
+
+    def body(i, carry):
+        x, ptr, out = carry
+        valid = (i * N_LANES + _lane_iota()) < nv
+        x2, s, need = _dec_step(x, freq, cum_excl, slot2sym)
+        need = need & valid
+        w = jnp.take_along_axis(
+            lane_words, jnp.minimum(ptr, T - 1)[None, :], axis=0
+        )[0].astype(jnp.uint32)
+        x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
+        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
+        ptr = ptr + need.astype(jnp.int32)
+        signed = jnp.where(
+            valid, (s - ((s & 0x80) << 1)), 0
+        ).astype(jnp.int8)                                   # two's complement
+        out = jax.lax.dynamic_update_index_in_dim(out, signed, i, 0)
+        return x, ptr, out
+
+    x0 = state_ref[0]
+    _, _, out = jax.lax.fori_loop(
+        0,
+        T,
+        body,
+        (x0, jnp.zeros((N_LANES,), jnp.int32),
+         jnp.zeros((T, N_LANES), jnp.int8)),
+    )
+    codes_ref[...] = out[None]
+
+
+def rans_encode_pallas(codes, n_valid, *, interpret: bool = True):
+    """Encode all S shards of a stripe in one launch (grid over shards).
+
+    codes: (S, T, 128) int8 payload rows, zero-padded; T % T_TILE == 0.
+    n_valid: (S, 1) int32 valid byte count per shard — positions past it are
+    padding and are excluded from both the histogram and the coding loop
+    (their lanes idle, costing zero stream bytes).
+    Returns (words (S, T, 128) uint16, mask (S, T, 128) uint8,
+    freq (S, 256) int32, states (S, 128) uint32): the dense emission buffer +
+    per-row emission mask (compacted by the caller), the per-shard frequency
+    tables, and the final lane states the decoder starts from.
+    """
+    S, T, L = codes.shape
+    if L != N_LANES:
+        raise ValueError(f"expected {N_LANES} lanes, got {L}")
+    if T % T_TILE:
+        raise ValueError(f"rows {T} not a multiple of {T_TILE}")
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, 256), lambda s: (s, 0)),
+            pl.BlockSpec((1, N_LANES), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint16),
+            jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint8),
+            jax.ShapeDtypeStruct((S, 256), jnp.int32),
+            jax.ShapeDtypeStruct((S, N_LANES), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(codes, n_valid)
+
+
+def rans_decode_pallas(lane_words, freq, states, n_valid, *,
+                       interpret: bool = True):
+    """Decode twin: per-lane word streams + header tables -> original bytes.
+
+    lane_words: (S, T, 128) uint16 — word j of lane l at [s, j, l] (the
+    caller re-gathers the flat stream into this layout; tails past each
+    lane's length are never consumed so their value is irrelevant).
+    freq: (S, 256) int32 tables; states: (S, 128) uint32 initial lane states.
+    n_valid: (S, 1) int32 — must equal the encoder's (the decoder skips the
+    same padding positions the encoder skipped).
+    Returns (S, T, 128) int8 decoded payload rows, zeros past n_valid.
+    """
+    S, T, L = lane_words.shape
+    if L != N_LANES:
+        raise ValueError(f"expected {N_LANES} lanes, got {L}")
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, 256), lambda s: (s, 0)),
+            pl.BlockSpec((1, N_LANES), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, T, N_LANES), jnp.int8),
+        interpret=interpret,
+    )(lane_words, freq, states, n_valid)

@@ -1,0 +1,115 @@
+"""Staged pure-jnp oracle for the interleaved-rANS coder (bit-exact target).
+
+The reference runs the coder as separate full-stripe passes — histogram,
+table build, then one ``lax.scan`` over rows vectorized over (shard, lane) —
+i.e. the pre-fusion pipeline with one HBM round-trip per stage, exactly like
+``kernels/seal/ref.py`` mirrors the fused seal kernel.  Outputs must match
+``rans.rans_encode_pallas`` / ``rans_decode_pallas`` bit-for-bit: the coder
+is all-integer, so there is no tolerance anywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.entropy.rans import (
+    N_LANES,
+    PROB_SCALE,
+    RANS_L,
+    _dec_step,
+    _enc_step,
+    build_freq_table,
+    slot_to_symbol,
+)
+
+__all__ = ["STAGED_PASSES", "N_STAGED_PASSES", "rans_encode_ref", "rans_decode_ref"]
+
+# One entry per full-payload pass in the staged pipeline (the fused kernel
+# does all of them in one VMEM residency per shard).
+STAGED_PASSES = (
+    "byte histogram (read payload)",
+    "frequency-table normalize (256-entry, table-only)",
+    "interleaved encode scan (read payload, write words+mask)",
+    "emission compaction (read words+mask, write stream)",
+)
+N_STAGED_PASSES = len(STAGED_PASSES)
+
+
+def _valid_mask(S: int, T: int, n_valid: jax.Array) -> jax.Array:
+    """(S, T, 128) bool: position r*128+l is a real (non-padding) byte."""
+    gidx = jnp.arange(T * N_LANES, dtype=jnp.int32).reshape(1, T, N_LANES)
+    return gidx < n_valid.reshape(S, 1, 1)
+
+
+def rans_encode_ref(codes: jax.Array, n_valid: jax.Array) -> Tuple[jax.Array, ...]:
+    """Staged encode: same signature/outputs as ``rans_encode_pallas``."""
+    S, T, L = codes.shape
+    assert L == N_LANES, codes.shape
+    vals = (codes.astype(jnp.int32)) & 0xFF                  # (S, T, 128)
+    vmask = _valid_mask(S, T, n_valid)
+
+    # pass 1-2: histogram + table per shard (padding -> dropped overflow bin)
+    hidx = jnp.where(vmask, vals, 256)
+    counts = jax.vmap(
+        lambda v: jnp.zeros((257,), jnp.int32).at[v.reshape(-1)].add(1)[:256]
+    )(hidx)
+    freq = jax.vmap(build_freq_table)(counts)                # (S, 256)
+    cum = jnp.cumsum(freq, axis=-1) - freq
+    f_u = freq.astype(jnp.uint32)
+    c_u = cum.astype(jnp.uint32)
+
+    # pass 3: encode scan over rows, reversed (rANS codes backwards),
+    # vectorized over the (shard, lane) axes
+    def step(x, xs):
+        row, valid = xs                                      # (S, 128) each
+        f = jnp.take_along_axis(f_u, row, axis=-1)
+        c = jnp.take_along_axis(c_u, row, axis=-1)
+        x2, w, m = _enc_step(x, f, c)
+        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
+        return x, (w, (m & valid).astype(jnp.uint8))
+
+    x0 = jnp.full((S, N_LANES), RANS_L, jnp.uint32)
+    states, (w_rev, m_rev) = jax.lax.scan(
+        step,
+        x0,
+        (jnp.swapaxes(vals, 0, 1)[::-1], jnp.swapaxes(vmask, 0, 1)[::-1]),
+    )
+    words = jnp.swapaxes(w_rev[::-1], 0, 1)                  # back to (S, T, 128)
+    mask = jnp.swapaxes(m_rev[::-1], 0, 1)
+    return words, mask, freq, states
+
+
+def rans_decode_ref(
+    lane_words: jax.Array,
+    freq: jax.Array,
+    states: jax.Array,
+    n_valid: jax.Array,
+) -> jax.Array:
+    """Staged decode: same signature/outputs as ``rans_decode_pallas``."""
+    S, T, L = lane_words.shape
+    assert L == N_LANES, lane_words.shape
+    vmask = _valid_mask(S, T, n_valid)
+    cum_excl = jnp.cumsum(freq, axis=-1) - freq
+    slot2sym = jax.vmap(
+        lambda f: slot_to_symbol(f, jnp.arange(PROB_SCALE, dtype=jnp.int32))
+    )(freq)
+
+    def step(carry, valid):
+        x, ptr = carry
+        x2, s, need = jax.vmap(_dec_step)(x, freq, cum_excl, slot2sym)
+        need = need & valid
+        w = jnp.take_along_axis(
+            lane_words, jnp.minimum(ptr, T - 1)[:, None, :], axis=1
+        )[:, 0].astype(jnp.uint32)
+        x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
+        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
+        ptr = ptr + need.astype(jnp.int32)
+        signed = jnp.where(valid, s - ((s & 0x80) << 1), 0).astype(jnp.int8)
+        return (x, ptr), signed
+
+    ptr0 = jnp.zeros((S, N_LANES), jnp.int32)
+    _, rows = jax.lax.scan(step, (states, ptr0), jnp.swapaxes(vmask, 0, 1))
+    return jnp.swapaxes(rows, 0, 1)                          # (S, T, 128)

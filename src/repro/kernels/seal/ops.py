@@ -10,14 +10,14 @@ same P/Q parity, zero-padded tails.
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.archival.raid import gf_pow_gen
-from repro.kernels import use_interpret
+from repro.kernels import as_payload_list, use_interpret
 from repro.kernels.seal import ref as _ref
 from repro.kernels.seal.seal import (
     LANES,
@@ -70,11 +70,8 @@ def bucket_rows_for(n_words: int) -> int:
     return R_TILE * (1 << (tiles - 1).bit_length())
 
 
-def _as_payload_list(payloads) -> List[jax.Array]:
-    if isinstance(payloads, (list, tuple)):
-        return [jnp.asarray(p).reshape(-1).astype(jnp.int8) for p in payloads]
-    arr = jnp.asarray(payloads)
-    return [arr[s].reshape(-1).astype(jnp.int8) for s in range(arr.shape[0])]
+# callers (distributed/archival, benches) reach this via the seal namespace
+_as_payload_list = as_payload_list
 
 
 def _stack_padded(

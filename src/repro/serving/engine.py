@@ -11,10 +11,14 @@ Archive ingest (``ArchiveIngest``): the continuous-learning edge server also
 *serves* N camera streams pushing ragged GOPs.  Ingest mirrors the LM
 engine's batching idea at the storage layer: GOPs are codec-encoded on
 arrival, coalesced across streams into full parity stripes
-(``StripeCoalescer``), and each completed stripe is sealed in ONE fused
-kernel launch — shard_map'd over the storage mesh's ``data`` axis when a
-mesh is attached, so every mesh shard seals its local slice (the CSD-array
-mapping; see ``repro.distributed.archival``).
+(``StripeCoalescer``), and each completed stripe is entropy-coded by the
+on-device interleaved-rANS kernel and sealed, one fused launch per stage —
+shard_map'd over the storage mesh's ``data`` axis when a mesh is attached,
+so every mesh shard codes + seals its local slice (the CSD-array mapping;
+see ``repro.distributed.archival``).  ``IngestConfig.archive.codec_name``
+falls back to the host zstd/zlib codec for compatibility; ``stats()``
+reports the measured entropy ratio and how many payload bytes the entropy
+stage shipped host-side (zero for the on-device coder).
 """
 
 from __future__ import annotations
@@ -178,18 +182,24 @@ class ArchiveIngest:
         self.coalescer = StripeCoalescer(cfg.n_shards)
         self._key = jax.random.PRNGKey(seed * 9176 + 29)
         self._stripe_seq = 0
+        self._entropy_raw = 0
+        self._entropy_comp = 0
 
     def _seal(self, ready) -> List[StripeArchive]:
         out = []
         for cs in ready:
             key = jax.random.fold_in(self._key, self._stripe_seq)
             self._stripe_seq += 1
-            out.append(
-                seal_coalesced_stripe(
-                    self.pub, cs, key, self.cfg.archive,
-                    mesh=self.mesh, axis=self.axis,
-                )
+            stripe = seal_coalesced_stripe(
+                self.pub, cs, key, self.cfg.archive,
+                mesh=self.mesh, axis=self.axis,
             )
+            for b in stripe.blocks:
+                em = b.manifest.get("entropy")
+                if em and em.get("codec") != "none":
+                    self._entropy_raw += int(em["n_raw"])
+                    self._entropy_comp += int(em["n_comp"])
+            out.append(stripe)
         return out
 
     def submit(self, stream_id: int, frames: jax.Array) -> List[StripeArchive]:
@@ -205,4 +215,14 @@ class ArchiveIngest:
         return self._seal(self.coalescer.flush())
 
     def stats(self) -> Dict[str, float]:
-        return self.coalescer.stats()
+        s = self.coalescer.stats()
+        s["entropy_ratio"] = (
+            self._entropy_raw / self._entropy_comp
+            if self._entropy_comp
+            else float("nan")
+        )
+        # payload bytes the entropy stage moved over the host link: the
+        # on-device coder ships none, the zstd/zlib fallback ships them all
+        on_device = self.cfg.archive.codec_name in ("rans", "none")
+        s["host_entropy_bytes"] = 0 if on_device else self._entropy_raw
+        return s

@@ -1,8 +1,10 @@
 """Fault-tolerant checkpointing through the Salient Store archival pipeline.
 
 Checkpoints are archival data: each save is chunked into S logical storage
-shards (stripe tiles), zstd-compressed, and pushed through the SAME fused
-seal kernel as the video archive (``repro.kernels.seal``): pack + ChaCha20 +
+shards (stripe tiles), entropy-coded by the on-device interleaved-rANS
+kernel (``repro.kernels.entropy``; ``codec_name="zstd"``/``"zlib"`` keeps
+the host codec as a fallback), and pushed through the SAME fused seal
+kernel as the video archive (``repro.kernels.seal``): pack + ChaCha20 +
 XOR + RAID-5 P / RAID-6 Q in one launch over the stripe.  With a ``seal_key``
 the per-shard ChaCha session keys are R-LWE-KEM-encapsulated (true
 encryption, secret needed to restore); without one they are stored in the
@@ -35,6 +37,7 @@ from repro.core.archival import raid
 from repro.core.crypto import rlwe
 from repro.core.crypto.hybrid import encapsulate_session
 from repro.core.csd.failure import Journal
+from repro.kernels.entropy import ops as entropy_ops
 from repro.kernels.seal import ops as seal_ops
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointError"]
@@ -107,31 +110,58 @@ def save_checkpoint(
     seal_key: Optional[rlwe.PublicKey] = None,
     rng: Optional[jax.Array] = None,
     zstd_level: int = 3,
+    codec_name: str = "rans",
 ) -> Dict:
-    """state: arbitrary pytree (params/opt/extra). Returns the manifest."""
+    """state: arbitrary pytree (params/opt/extra). Returns the manifest.
+
+    ``codec_name="rans"`` (default) chunks the RAW serialized tree into S
+    shards and runs the entropy stage on-device, chained straight into the
+    fused seal launch — the checkpoint bytes never visit a host codec.
+    ``"zstd"``/``"zlib"`` keeps the legacy host path (must match what this
+    host's ``repro.common.compress`` actually provides).
+    """
     j = Journal(root)
     raw = _serialize_tree(state)
-    comp = entropy.compress(raw, level=zstd_level)
 
     meta: Dict[str, Any] = {
         "step": int(step),
         "n_shards": n_shards,
         "parity": parity,
         "raw_len": len(raw),
-        "comp_len": len(comp),
         "sealed": bool(seal_key is not None),
-        "codec": entropy.CODEC_NAME,  # zstd or the zlib fallback
+        "codec": codec_name,
     }
 
-    # chunk the compressed payload into S stripe tiles
-    shard_len = (len(comp) + n_shards - 1) // n_shards
-    padded = comp + b"\0" * (shard_len * n_shards - len(comp))
-    flats = [
-        jnp.asarray(
-            np.frombuffer(padded[i * shard_len : (i + 1) * shard_len], np.int8)
+    if codec_name == "rans":
+        # chunk the RAW payload into S stripe tiles; entropy runs on-device
+        shard_len = (len(raw) + n_shards - 1) // n_shards
+        padded = raw + b"\0" * (shard_len * n_shards - len(raw))
+        flats, emetas = entropy_ops.encode_payloads(
+            [
+                jnp.asarray(
+                    np.frombuffer(
+                        padded[i * shard_len : (i + 1) * shard_len], np.int8
+                    )
+                )
+                for i in range(n_shards)
+            ]
         )
-        for i in range(n_shards)
-    ]
+        meta["entropy"] = emetas
+        meta["comp_len"] = sum(m["n_comp"] for m in emetas)
+    else:
+        try:
+            comp = entropy.compress_as(codec_name, raw, level=zstd_level)
+        except ValueError as e:
+            raise CheckpointError(f"host entropy codec: {e}") from e
+        meta["comp_len"] = len(comp)
+        shard_len = (len(comp) + n_shards - 1) // n_shards
+        padded = comp + b"\0" * (shard_len * n_shards - len(comp))
+        flats = [
+            jnp.asarray(
+                np.frombuffer(padded[i * shard_len : (i + 1) * shard_len], np.int8)
+            )
+            for i in range(n_shards)
+        ]
     meta["shard_len"] = shard_len
 
     keys, nonces = _session_material(meta, n_shards, step, seal_key, rng)
@@ -301,26 +331,34 @@ def load_checkpoint(
             for b, n in zip(bodies, n_words)
         ]
     )
-    packed = seal_ops.SealedStripe(
-        sealed, None, None, n_words, (meta["shard_len"],) * len(bodies)
-    )
+    ckpt_codec = meta.get("codec", "zstd")
+    if ckpt_codec == "rans":
+        n_i8 = tuple(m["n_comp"] for m in meta["entropy"])
+    else:
+        n_i8 = (meta["shard_len"],) * len(bodies)
+    packed = seal_ops.SealedStripe(sealed, None, None, n_words, n_i8)
     flats, p2, q2 = seal_ops.unseal_stripe(
         packed, keys, nonces, parity=meta["parity"]
     )
     if meta["parity"] != "none":
         _verify_stripe_parity(j, meta, p2, q2)
 
-    payload = b"".join(np.asarray(f, np.int8).tobytes() for f in flats)
-    payload = payload[: meta["comp_len"]]
-
-    ckpt_codec = meta.get("codec", "zstd")
-    if ckpt_codec != entropy.CODEC_NAME:
-        raise CheckpointError(
-            f"checkpoint was written with {ckpt_codec!r} but this host's "
-            f"entropy codec is {entropy.CODEC_NAME!r} "
-            f"(install zstandard to read zstd checkpoints)"
-        )
-    raw = entropy.decompress(payload, max_output_size=meta["raw_len"])
+    if ckpt_codec == "rans":
+        # on-device entropy decode of the unsealed streams, then reassemble
+        raws = entropy_ops.decode_payloads(flats, meta["entropy"])
+        raw = b"".join(np.asarray(f, np.int8).tobytes() for f in raws)
+        raw = raw[: meta["raw_len"]]
+    else:
+        payload = b"".join(np.asarray(f, np.int8).tobytes() for f in flats)
+        payload = payload[: meta["comp_len"]]
+        try:
+            raw = entropy.decompress_as(
+                ckpt_codec, payload, max_output_size=meta["raw_len"]
+            )
+        except ValueError as e:
+            raise CheckpointError(
+                f"checkpoint was written with {ckpt_codec!r}: {e}"
+            ) from e
     leaves = _deserialize_leaves(raw)
     t_leaves, treedef = jax.tree_util.tree_flatten(template)
     if len(leaves) != len(t_leaves):

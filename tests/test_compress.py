@@ -1,0 +1,121 @@
+"""Direct unit tests for ``repro.common.compress`` (the host entropy
+fallback): level clamping, truncated decompression, cross-codec behavior.
+
+The zlib branch is loaded explicitly (with ``zstandard`` import-blocked)
+into a private module instance, so both branches are exercised no matter
+which codec this host actually has — CI runs one job per branch on top.
+"""
+
+import importlib.util
+import sys
+import zlib
+
+import pytest
+
+from repro.common import compress as active
+
+DATA = (b"salient store entropy stage " * 200) + bytes(range(256))
+
+
+def _load_compress_module(block_zstd: bool):
+    """Fresh instance of repro/common/compress.py, optionally with the
+    zstandard import forced to fail (sys.modules[name] = None makes the
+    import statement raise ImportError)."""
+    spec = importlib.util.spec_from_file_location(
+        f"_compress_{'zlib' if block_zstd else 'auto'}", active.__file__
+    )
+    mod = importlib.util.module_from_spec(spec)
+    had = "zstandard" in sys.modules
+    prev = sys.modules.get("zstandard")
+    if block_zstd:
+        sys.modules["zstandard"] = None
+    try:
+        spec.loader.exec_module(mod)
+    finally:
+        if block_zstd:
+            if had:
+                sys.modules["zstandard"] = prev
+            else:
+                del sys.modules["zstandard"]
+    return mod
+
+
+@pytest.fixture(scope="module")
+def zlib_branch():
+    mod = _load_compress_module(block_zstd=True)
+    assert not mod.HAVE_ZSTD and mod.CODEC_NAME == "zlib"
+    return mod
+
+
+# ------------------------------------------------------------- active codec
+def test_active_codec_roundtrip():
+    blob = active.compress(DATA)
+    assert len(blob) < len(DATA)
+    assert active.decompress(blob) == DATA
+    assert active.decompress(blob, max_output_size=len(DATA)) == DATA
+
+
+def test_active_codec_high_level_roundtrip():
+    # zstd levels go to 22; the zlib fallback must clamp instead of raising
+    blob = active.compress(DATA, level=22)
+    assert active.decompress(blob) == DATA
+
+
+# -------------------------------------------------------------- zlib branch
+def test_zlib_fallback_level_clamp(zlib_branch):
+    # zlib.compress raises on level > 9; the fallback clamps 22 -> 9
+    with pytest.raises(Exception):
+        zlib.compress(DATA, 22)
+    blob = zlib_branch.compress(DATA, level=22)
+    assert blob == zlib.compress(DATA, 9)
+    assert zlib_branch.decompress(blob) == DATA
+
+
+def test_zlib_max_output_size_truncates(zlib_branch):
+    blob = zlib_branch.compress(DATA)
+    out = zlib_branch.decompress(blob, max_output_size=100)
+    assert out == DATA[:100]
+    # 0 means "no limit", not "empty output"
+    assert zlib_branch.decompress(blob, max_output_size=0) == DATA
+
+
+def test_zlib_blob_is_stdlib_zlib(zlib_branch):
+    # the fallback writes plain zlib streams: any zlib reader can decode
+    assert zlib.decompress(zlib_branch.compress(DATA, level=3)) == DATA
+
+
+# ------------------------------------------------------------- cross-codec
+def test_cross_codec_roundtrip_within_host():
+    """Within one host the codec choice is deterministic, so compress ->
+    decompress must always invert — for the active branch AND the forced
+    zlib branch (they need not produce the same bytes as each other)."""
+    zl = _load_compress_module(block_zstd=True)
+    for mod in (active, zl):
+        blob = mod.compress(DATA, level=5)
+        assert mod.decompress(blob, max_output_size=len(DATA)) == DATA
+
+
+def test_named_codec_api():
+    """compress_as/decompress_as dispatch by recorded name: zlib always
+    works (stdlib), zstd only when the module exists."""
+    blob = active.compress_as("zlib", DATA, level=22)  # clamps like the branch
+    assert zlib.decompress(blob) == DATA
+    assert active.decompress_as("zlib", blob, max_output_size=50) == DATA[:50]
+    if active.HAVE_ZSTD:
+        z = active.compress_as("zstd", DATA)
+        assert active.decompress_as("zstd", z, max_output_size=len(DATA)) == DATA
+    else:
+        with pytest.raises(ValueError, match="requires the zstandard"):
+            active.compress_as("zstd", DATA)
+    with pytest.raises(ValueError, match="unknown host entropy codec"):
+        active.decompress_as("lz4", b"")
+
+
+def test_zstd_blob_rejected_by_zlib_branch(zlib_branch):
+    """A blob from the other codec must fail loudly, not roundtrip quietly
+    (this is why checkpoint manifests record the codec name)."""
+    if not active.HAVE_ZSTD:
+        pytest.skip("host has no zstandard; branches coincide")
+    blob = active.compress(DATA)
+    with pytest.raises(Exception):
+        zlib_branch.decompress(blob)

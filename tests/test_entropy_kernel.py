@@ -1,0 +1,326 @@
+"""Interleaved-rANS entropy kernel tests: exactness vs oracle, roundtrip,
+stream format, pipeline chaining (single-device and sharded)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    archive_stripe,
+    restore_stripe,
+)
+from repro.core.codec.layered_codec import CodecConfig, init_codec
+from repro.core.crypto import rlwe
+from repro.kernels.entropy import ops as eops
+from repro.kernels.entropy.rans import N_LANES, PROB_SCALE, build_freq_table
+
+CFG = CodecConfig(n_layers=2, latent_ch=4, feat_ch=16, mv_cond_ch=4)
+
+
+def _eq(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _latents(seed, n, sigma=2.0):
+    """Peaked int8 distribution shaped like quantized codec latents."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.clip(np.round(rng.normal(0.0, sigma, n)), -128, 127), jnp.int8
+    )
+
+
+# ------------------------------------------------------- kernel vs jnp oracle
+def test_encode_matches_staged_oracle():
+    payloads = [_latents(i, n) for i, n in enumerate([5000, 4093, 4096, 2500])]
+    ck, mk = eops.encode_payloads(payloads, use_pallas=True)
+    cr, mr = eops.encode_payloads(payloads, use_pallas=False)
+    assert mk == mr
+    for a, b in zip(ck, cr):
+        assert _eq(a, b)  # streams bit-identical, header included
+
+
+def test_roundtrip_bit_exact_both_paths():
+    payloads = [_latents(7, 9000), _latents(8, 100)]
+    comp, metas = eops.encode_payloads(payloads)
+    for use_pallas in (True, False):
+        back = eops.decode_payloads(comp, metas, use_pallas=use_pallas)
+        for got, want in zip(back, payloads):
+            assert _eq(got, want)
+
+
+@pytest.mark.parametrize(
+    "lens",
+    [
+        [1],                          # single byte
+        [7, 1],                       # sub-lane shards
+        [N_LANES * 8, 511],           # exactly one tile vs one byte short
+        [4097, 13],                   # one word past a tile vs tiny
+        [37, 37],                     # equal odd lengths
+    ],
+)
+def test_odd_length_edges(lens):
+    payloads = [_latents(sum(lens) + i, n) for i, n in enumerate(lens)]
+    ck, mk = eops.encode_payloads(payloads, use_pallas=True)
+    cr, mr = eops.encode_payloads(payloads, use_pallas=False)
+    assert mk == mr
+    for a, b in zip(ck, cr):
+        assert _eq(a, b)
+    back = eops.decode_payloads(ck, mk)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+
+
+def test_degenerate_distributions_roundtrip():
+    """Single-symbol (freq == PROB_SCALE), all-zero, and uniform-random
+    (incompressible) payloads must all survive the coder exactly."""
+    payloads = [
+        jnp.full((4096,), -5, jnp.int8),
+        jnp.zeros((300,), jnp.int8),
+        jnp.asarray(
+            np.random.default_rng(0).integers(-128, 128, 3000), jnp.int8
+        ),
+    ]
+    comp, metas = eops.encode_payloads(payloads)
+    comp_r, metas_r = eops.encode_payloads(payloads, use_pallas=False)
+    assert metas == metas_r
+    for a, b in zip(comp, comp_r):
+        assert _eq(a, b)
+    back = eops.decode_payloads(comp, metas)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+    # single-symbol shard never renormalizes: stream is exactly the header
+    assert metas[0]["n_comp"] == eops.HEADER_BYTES
+
+
+def test_freq_table_exact_invariants():
+    rng = np.random.default_rng(2)
+    for counts in [
+        rng.integers(0, 1000, 256),
+        np.eye(256, dtype=np.int64)[3] * 10**9,      # huge single-symbol count
+        np.full(256, 1 << 22),                       # huge uniform (downscale)
+        np.zeros(256),                               # empty payload
+    ]:
+        f = np.asarray(build_freq_table(jnp.asarray(counts, jnp.int32)))
+        assert f.sum() == PROB_SCALE, counts
+        assert (f[counts > 0] >= 1).all()
+        assert (f >= 0).all()
+
+
+def test_compression_ratio_on_latents():
+    """Acceptance shape: >= 2x on realistically peaked int8 latent codes."""
+    payloads = [_latents(i, 65536) for i in range(4)]
+    comp, metas = eops.encode_payloads(payloads)
+    ratio = sum(m["n_raw"] for m in metas) / sum(m["n_comp"] for m in metas)
+    assert ratio >= 2.0, ratio
+    back = eops.decode_payloads(comp, metas)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+
+
+def test_stream_is_self_contained():
+    """Tables/lengths/states travel in the stream header; metas carry only
+    lengths + row count (what the archive manifest stores)."""
+    payloads = [_latents(0, 5000)]
+    comp, metas = eops.encode_payloads(payloads)
+    assert set(metas[0]) == {"codec", "n_raw", "n_comp", "rows"}
+    assert int(comp[0].shape[0]) == metas[0]["n_comp"] >= eops.HEADER_BYTES
+
+
+def test_corrupt_meta_rejected():
+    comp, metas = eops.encode_payloads([_latents(1, 1000)])
+    bad = [dict(metas[0], n_comp=metas[0]["n_comp"] + 4)]
+    with pytest.raises(ValueError, match="manifest says"):
+        eops.decode_payloads(comp, bad)
+    with pytest.raises(ValueError, match="share one padded row count"):
+        eops.decode_payloads(
+            comp + comp, [metas[0], dict(metas[0], rows=metas[0]["rows"] * 2)]
+        )
+
+
+# ------------------------------------------------------------ pipeline chain
+def _clip(key, t=3, b=1, h=32, w=32):
+    f = jax.random.uniform(key, (t, b, h, w, 3))
+    k = jnp.ones((3, 3)) / 9.0
+    from jax import lax
+
+    f = lax.conv_general_dilated(
+        f.reshape(t * b, h, w, 3),
+        jnp.tile(k[:, :, None, None], (1, 1, 1, 3)).astype(f.dtype),
+        (1, 1),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=3,
+    ).reshape(t, b, h, w, 3)
+    return jnp.clip(f, 0.0, 1.0)
+
+
+def test_archive_stripe_rans_roundtrip_and_bit_identity():
+    """Acceptance: codec_name="rans" stripes roundtrip bit-exactly and the
+    Pallas/staged-reference paths agree on every stored byte."""
+    cfg = ArchiveConfig(codec=CFG, codec_name="rans")
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+    frames = [_clip(jax.random.PRNGKey(30 + i)) for i in range(3)]
+    key = jax.random.PRNGKey(7)
+    fused, rec = archive_stripe(params, pub, frames, key, cfg, use_pallas=True)
+    staged, _ = archive_stripe(params, pub, frames, key, cfg, use_pallas=False)
+    for bf, bs in zip(fused.blocks, staged.blocks):
+        assert _eq(bf.sealed.body, bs.sealed.body)
+        assert bf.manifest["entropy"] == bs.manifest["entropy"]
+        assert bf.manifest["entropy"]["codec"] == "rans"
+    assert _eq(fused.parity["p"], staged.parity["p"])
+    assert _eq(fused.parity["q"], staged.parity["q"])
+    for use_pallas in (True, False):
+        out = restore_stripe(params, sec, fused, cfg, use_pallas=use_pallas)
+        for got, want in zip(out, rec):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-5
+            )
+
+
+def test_archive_stripe_host_codec_fallback():
+    from repro.common import compress as host_entropy
+
+    cfg = ArchiveConfig(codec=CFG, codec_name=host_entropy.CODEC_NAME)
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+    frames = [_clip(jax.random.PRNGKey(50 + i)) for i in range(2)]
+    stripe, rec = archive_stripe(params, pub, frames, jax.random.PRNGKey(9), cfg)
+    assert stripe.blocks[0].manifest["entropy"]["codec"] == host_entropy.CODEC_NAME
+    out = restore_stripe(params, sec, stripe, cfg)
+    for got, want in zip(out, rec):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_zlib_codec_always_available():
+    """zlib is stdlib: a codec_name="zlib" stripe must write and restore on
+    every host, whatever compressor the host prefers."""
+    cfg = ArchiveConfig(codec=CFG, codec_name="zlib")
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+    stripe, rec = archive_stripe(
+        params, pub, [_clip(jax.random.PRNGKey(61))], jax.random.PRNGKey(5), cfg
+    )
+    assert stripe.blocks[0].manifest["entropy"]["codec"] == "zlib"
+    out = restore_stripe(params, sec, stripe, cfg)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(rec[0]), atol=1e-5)
+
+
+def test_missing_zstd_raises():
+    from repro.common import compress as host_entropy
+
+    if host_entropy.HAVE_ZSTD:
+        pytest.skip("zstandard installed; nothing to be missing")
+    cfg = ArchiveConfig(codec=CFG, codec_name="zstd")
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, _ = rlwe.keygen(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="requires the zstandard"):
+        archive_stripe(
+            params, pub, [_clip(jax.random.PRNGKey(60))],
+            jax.random.PRNGKey(3), cfg,
+        )
+
+
+def test_restore_dispatches_on_manifest_not_cfg():
+    """What was written wins: a rans stripe restores even if the caller's
+    cfg says a host codec (and vice versa the manifest drives decode)."""
+    cfg = ArchiveConfig(codec=CFG, codec_name="rans")
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+    stripe, rec = archive_stripe(
+        params, pub, [_clip(jax.random.PRNGKey(70))], jax.random.PRNGKey(4), cfg
+    )
+    out = restore_stripe(
+        params, sec, stripe, cfg._replace(codec_name="none")
+    )
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(rec[0]), atol=1e-5)
+
+
+# ------------------------------------------------------- checkpoint chaining
+def test_checkpoint_codec_dispatch(tmp_path):
+    """Checkpoints default to the on-device coder; the host codec stays a
+    working fallback; an unavailable host codec fails loudly at save."""
+    from repro.common import compress as host_entropy
+    from repro.train.checkpoint import (
+        CheckpointError,
+        load_checkpoint,
+        save_checkpoint,
+    )
+
+    state = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (64, 64)),
+        "step": jnp.asarray(3, jnp.int32),
+    }
+    meta = save_checkpoint(str(tmp_path), 3, state)  # codec_name="rans"
+    assert meta["codec"] == "rans"
+    assert [m["codec"] for m in meta["entropy"]] == ["rans"] * meta["n_shards"]
+    _, back = load_checkpoint(str(tmp_path), state, 3)
+    assert _eq(back["w"], state["w"])
+
+    # zlib is stdlib: always a valid fallback, whatever the host prefers
+    meta_h = save_checkpoint(str(tmp_path / "host"), 3, state, codec_name="zlib")
+    assert meta_h["codec"] == "zlib"
+    _, back_h = load_checkpoint(str(tmp_path / "host"), state, 3)
+    assert _eq(back_h["w"], state["w"])
+
+    if not host_entropy.HAVE_ZSTD:
+        with pytest.raises(CheckpointError, match="host entropy codec"):
+            save_checkpoint(str(tmp_path / "bad"), 3, state, codec_name="zstd")
+
+
+# ------------------------------------------------------------- sharded coder
+@pytest.mark.parametrize("D", [1, 2, 4, 8])
+def test_sharded_coder_bit_identical(D):
+    if D > jax.device_count():
+        pytest.skip(f"need {D} devices, have {jax.device_count()}")
+    from repro.distributed.archival import (
+        entropy_decode_sharded,
+        entropy_encode_sharded,
+    )
+
+    payloads = [
+        _latents(i, n) for i, n in enumerate([5000, 4093, 4096, 2500, 9000])
+    ]  # S=5: exercises dummy-shard padding for D in {2, 4, 8}
+    single_c, single_m = eops.encode_payloads(payloads)
+    mesh = Mesh(np.array(jax.devices()[:D]), ("data",))
+    c, m = entropy_encode_sharded(payloads, mesh=mesh)
+    assert m == single_m
+    for a, b in zip(c, single_c):
+        assert _eq(a, b)
+    back = entropy_decode_sharded(c, m, mesh=mesh)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+
+
+@pytest.mark.parametrize("D", [2, 8])
+def test_archive_stripe_sharded_rans(D):
+    """Acceptance: the 8-host-device sharded path roundtrips codec_name="rans"
+    stripes bit-exactly and matches the single-device archive byte-for-byte."""
+    if D > jax.device_count():
+        pytest.skip(f"need {D} devices, have {jax.device_count()}")
+    from repro.distributed.archival import (
+        archive_stripe_sharded,
+        restore_stripe_sharded,
+    )
+
+    cfg = ArchiveConfig(codec=CFG, codec_name="rans")
+    params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+    frames = [_clip(jax.random.PRNGKey(80 + i)) for i in range(3)]
+    key = jax.random.PRNGKey(11)
+    mesh = Mesh(np.array(jax.devices()[:D]), ("data",))
+    sharded, rec = archive_stripe_sharded(
+        params, pub, frames, key, cfg, mesh=mesh
+    )
+    single, _ = archive_stripe(params, pub, frames, key, cfg)
+    for bs, b1 in zip(sharded.blocks, single.blocks):
+        assert _eq(bs.sealed.body, b1.sealed.body)
+        assert bs.manifest["entropy"] == b1.manifest["entropy"]
+    assert _eq(sharded.parity["p"], single.parity["p"])
+    assert _eq(sharded.parity["q"], single.parity["q"])
+    out = restore_stripe_sharded(params, sec, sharded, cfg, mesh=mesh)
+    for got, want in zip(out, rec):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

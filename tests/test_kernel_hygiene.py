@@ -1,0 +1,75 @@
+"""Source-level hygiene guards for kernel/ref pairs.
+
+Float division by a *constant* is banned in kernel-adjacent code: under jit
+XLA canonicalizes ``x / c`` to ``x * (1/c)``, which differs by up to 1 ULP
+from a true divide, so a kernel and its reference can disagree on
+round-half cases and break the bit-exact tests (the quantize kernel hit
+exactly this; it now multiplies by an explicit reciprocal).  Audit result
+as of the entropy-subsystem PR: motion, polymul, seal, entropy and the
+kernel-callable ChaCha core are integer-only; quantize carries the
+reciprocal-multiply fix.  This test keeps it that way.
+"""
+
+import io
+import os
+import token
+import tokenize
+
+import pytest
+
+import repro.kernels as _k
+from repro.core.crypto import chacha as _chacha
+
+KERNEL_ROOT = os.path.dirname(_k.__file__)
+
+
+def _kernel_sources():
+    files = [_chacha.__file__]  # kernel-callable ChaCha core
+    for dirpath, _, names in os.walk(KERNEL_ROOT):
+        files += [
+            os.path.join(dirpath, n) for n in names if n.endswith(".py")
+        ]
+    return sorted(files)
+
+
+def _float_const_divisions(source: str):
+    """Yield (line, text) for each ``<array-ish> / <float literal>``.
+
+    Token-based so docstrings/comments can't false-positive.  A literal
+    numerator (``1.0 / 127.0``) is allowed: Python folds it to one exact
+    constant before tracing, no XLA rewrite involved.  ``x / traced`` is
+    allowed: both sides of a kernel/ref pair trace the same divide op.
+    """
+    toks = [
+        t
+        for t in tokenize.generate_tokens(io.StringIO(source).readline)
+        if t.type not in (token.NL, token.NEWLINE, token.INDENT, token.DEDENT,
+                          token.COMMENT)
+    ]
+    for i, t in enumerate(toks):
+        if t.type != token.OP or t.string != "/" or not (0 < i < len(toks) - 1):
+            continue
+        prev, nxt = toks[i - 1], toks[i + 1]
+        # any numeric literal divisor: jnp's `/` is true division even for
+        # int literals, so `x / 127` hits the same reciprocal rewrite as
+        # `x / 127.0` (`//` tokenizes as its own operator and is exempt)
+        numerator_arrayish = (
+            prev.type == token.NAME
+            or (prev.type == token.OP and prev.string in (")", "]"))
+        )
+        if nxt.type == token.NUMBER and numerator_arrayish:
+            yield t.start[0], t.line.strip()
+
+
+@pytest.mark.parametrize("path", _kernel_sources(), ids=os.path.basename)
+def test_no_float_division_by_constant(path):
+    with open(path) as f:
+        offenders = [
+            f"{path}:{line}: {text}"
+            for line, text in _float_const_divisions(f.read())
+        ]
+    assert not offenders, (
+        "float division by a constant in kernel code (jit rewrites x/c to "
+        "x*(1/c); use an explicit exact reciprocal multiply or integer "
+        "ops):\n" + "\n".join(offenders)
+    )
