@@ -417,6 +417,163 @@ def entropy_coder() -> List[Row]:
     ]
 
 
+def retrieval() -> List[Row]:
+    """Salience-indexed retrieval: top-k partial-stripe reads vs full restore.
+
+    The paper-facing number is bytes moved: a top-k query over the catalog
+    plans shard-subset reads, so only the planned bodies enter the unseal
+    launches — the baseline (no salience index) must restore every stripe
+    fully and score AFTER decoding.  Also exercises the degraded path: the
+    same plan still succeeds with one planned shard dropped (parity
+    rebuild), at its honestly-billed byte cost.
+    """
+    from repro.core.archival.catalog import StripeCatalog
+    from repro.core.archival.pipeline import (
+        ArchiveConfig,
+        StripeArchive,
+        restore_stripe_payloads,
+        seal_payload_stripe,
+        stripe_manifests,
+    )
+    from repro.core.csd.retrieval import plan_retrieval
+    from repro.core.crypto import rlwe
+
+    rng = np.random.default_rng(5)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(11))
+    cfg = ArchiveConfig()
+    S, n_stripes, top_k = 4, 4, 3
+    key = jax.random.PRNGKey(13)
+    cat = StripeCatalog()
+    stripes: Dict[str, StripeArchive] = {}
+    payloads: Dict[str, list] = {}
+    novel = {("st1", 2), ("st2", 0), ("st3", 3)}  # planted novel GOPs
+    for t in range(n_stripes):
+        sid = f"st{t}"
+        flats = [
+            jnp.asarray(
+                np.clip(np.round(rng.normal(0, 2.0, 16 * 1024 - 128 * s)),
+                        -128, 127),
+                jnp.int8,
+            )
+            for s in range(S)
+        ]
+        mans = [{"n_i8": int(f.shape[0]), "spec": []} for f in flats]
+        stripe = seal_payload_stripe(
+            pub, flats, mans, jax.random.fold_in(key, t), cfg
+        )
+        descs = [
+            {
+                "stream_id": s,
+                # known GOPs sit on the centroid; novel ones far away
+                "feature": rng.normal(
+                    8.0 if (sid, s) in novel else 0.0, 0.05, 8
+                ),
+            }
+            for s in range(S)
+        ]
+        cat.add_stripe(sid, stripe, descs)
+        stripes[sid] = stripe
+        payloads[sid] = flats
+
+    centroids = np.zeros((1, 8), np.float32)  # "known" distribution
+    plan = plan_retrieval(cat, centroids, k=top_k)
+    ok = {(r.stripe_id, r.shard) for r in plan.reads} == novel
+
+    def run_partial():
+        return [
+            restore_stripe_payloads(
+                sec, stripes[sid], cfg, shards=plan.shards_by_stripe[sid]
+            )[0]
+            for sid in sorted(plan.shards_by_stripe)
+        ]
+
+    def run_full():
+        return [
+            restore_stripe_payloads(sec, stripes[sid], cfg)[0]
+            for sid in sorted(stripes)
+        ]
+
+    us_p = timeit(run_partial)
+    us_f = timeit(run_full)
+
+    # bit-identity: every planned GOP == the same shard out of a full restore
+    full = dict(zip(sorted(stripes), run_full()))
+    for sid in plan.shards_by_stripe:
+        part = restore_stripe_payloads(
+            sec, stripes[sid], cfg, shards=plan.shards_by_stripe[sid]
+        )[0]
+        for j, s in enumerate(plan.shards_by_stripe[sid]):
+            ok = ok and bool(
+                np.array_equal(np.asarray(part[j]), np.asarray(full[sid][s]))
+            )
+
+    # byte accounting: the bodies entering the partial unseal launches must
+    # be exactly what the plan billed (launches: one unseal per touched
+    # stripe vs one per stripe for the baseline)
+    bytes_read = sum(
+        4 * int(stripes[sid].blocks[s].sealed.n_valid_u32)
+        for sid in plan.shards_by_stripe
+        for s in plan.shards_by_stripe[sid]
+    )
+    ok = ok and bytes_read == plan.bytes_planned
+    bytes_full = sum(
+        4 * int(b.sealed.n_valid_u32)
+        for st in stripes.values()
+        for b in st.blocks
+    )
+    ok = ok and bytes_full == plan.bytes_full_restore
+    ratio = plan.bytes_planned / plan.bytes_full_restore
+
+    # degraded read: drop one planned shard's body; the plan still executes
+    deg_sid = sorted(plan.shards_by_stripe)[0]
+    deg_shard = plan.shards_by_stripe[deg_sid][0]
+    holes = list(stripes[deg_sid].blocks)
+    holes[deg_shard] = None
+    deg_payloads, _ = restore_stripe_payloads(
+        sec,
+        StripeArchive(holes, stripes[deg_sid].parity),
+        cfg,
+        shards=plan.shards_by_stripe[deg_sid],
+        manifests=stripe_manifests(stripes[deg_sid]),
+    )
+    deg_ok = bool(
+        np.array_equal(
+            np.asarray(deg_payloads[0]), np.asarray(full[deg_sid][deg_shard])
+        )
+    )
+    deg_plan = plan_retrieval(cat, centroids, k=top_k,
+                              dead_shards=[deg_shard])
+    record_json(
+        "retrieval",
+        us_per_call=us_p,
+        us_full_restore=us_f,
+        gbps=_gbps(plan.bytes_planned, us_p),
+        launches=len(plan.shards_by_stripe),
+        full_restore_launches=len(stripes),
+        device_count=1,
+        exact=ok,
+        degraded_ok=deg_ok,
+        top_k=top_k,
+        bytes_moved=plan.bytes_planned,
+        bytes_full_restore=plan.bytes_full_restore,
+        bytes_moved_ratio=ratio,
+        degraded_bytes_moved=deg_plan.bytes_planned,
+        placement=plan.placement,
+    )
+    return [
+        ("kernel/retrieval_top3_of_16", us_p,
+         f"exact={ok} bytes_moved={plan.bytes_planned}"
+         f" ratio={ratio:.3f} launches={len(plan.shards_by_stripe)}"
+         f" placement={plan.placement}"),
+        ("kernel/retrieval_full_restore", us_f,
+         f"baseline bytes={plan.bytes_full_restore}"
+         f" launches={len(stripes)}"),
+        ("kernel/retrieval_degraded", float("nan"),
+         f"degraded_ok={deg_ok}"
+         f" bytes_moved={deg_plan.bytes_planned} (parity rebuild billed)"),
+    ]
+
+
 def quantize_kernel() -> List[Row]:
     from repro.kernels.quantize.ops import dequantize_blockwise, quantize_blockwise
     from repro.kernels.quantize.ref import quantize_ref

@@ -9,6 +9,11 @@ longer codec-training variant of the Fig. 8/9 rate-distortion sweep.
 the fresh run is diffed against it per bench and the process exits nonzero
 if any ``us_per_call`` regressed by more than CHECK_THRESHOLD (2x — the
 timings are interpret-mode wall clock, so the gate is deliberately coarse).
+Benches that report ``bytes_moved_ratio`` (the retrieval bench's planned-
+bytes / full-restore fraction) are additionally gated on it with the tight
+BYTES_THRESHOLD: byte accounting is deterministic, so a retrieval plan that
+starts moving more data than the committed baseline fails even when wall
+clock looks fine.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ import sys
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
 CHECK_THRESHOLD = 2.0  # >2x slower us_per_call fails --check
+BYTES_THRESHOLD = 1.1  # >10% more bytes_moved_ratio fails --check (exact metric)
 
 
 def _force_multidevice_host() -> None:
@@ -54,26 +60,38 @@ def _load_committed() -> dict:
 
 
 def _check_regressions(committed: dict, fresh: dict) -> int:
-    """Print the per-bench delta table; return the number of >threshold
-    ``us_per_call`` regressions (benches present on both sides only)."""
-    rows = []
-    for name in sorted(set(committed) & set(fresh)):
-        old = committed[name].get("us_per_call")
-        new = fresh[name].get("us_per_call")
-        if not old or not new or old != old or new != new:  # missing/NaN
-            continue
-        rows.append((name, old, new, new / old))
+    """Print the per-bench delta table; return the number of regressions.
+
+    Two gates per bench (where both sides have the metric): ``us_per_call``
+    against the coarse CHECK_THRESHOLD, and ``bytes_moved_ratio`` against
+    the tight BYTES_THRESHOLD — data-movement accounting is deterministic,
+    so the retrieval plan growing its byte footprint is a real regression
+    even at identical wall clock.
+    """
+    gates = [
+        ("us_per_call", CHECK_THRESHOLD, "{:.1f}"),
+        ("bytes_moved_ratio", BYTES_THRESHOLD, "{:.4f}"),
+    ]
     print("\n# bench delta vs committed BENCH_kernels.json")
-    print("name,old_us,new_us,ratio,verdict")
+    print("name,metric,old,new,ratio,verdict")
     bad = 0
-    for name, old, new, ratio in rows:
-        verdict = "ok"
-        if ratio > CHECK_THRESHOLD:
-            verdict = f"REGRESSION(>{CHECK_THRESHOLD:.0f}x)"
-            bad += 1
-        print(f"{name},{old:.1f},{new:.1f},{ratio:.2f},{verdict}")
+    for name in sorted(set(committed) & set(fresh)):
+        for metric, threshold, fmt in gates:
+            old = committed[name].get(metric)
+            new = fresh[name].get(metric)
+            if not old or new is None or old != old or new != new:
+                continue  # missing/NaN/zero baseline
+            ratio = new / old
+            verdict = "ok"
+            if ratio > threshold:
+                verdict = f"REGRESSION(>{threshold:g}x)"
+                bad += 1
+            print(
+                f"{name},{metric},{fmt.format(old)},{fmt.format(new)},"
+                f"{ratio:.2f},{verdict}"
+            )
     if bad:
-        print(f"# {bad} bench(es) regressed more than {CHECK_THRESHOLD:.0f}x")
+        print(f"# {bad} bench metric(s) regressed past their threshold")
     return bad
 
 
@@ -101,6 +119,7 @@ def main() -> None:
         ("kernels/entropy", kernels_bench.entropy_coder),
         ("kernels/seal", kernels_bench.seal_datapath),
         ("kernels/sharded_seal", kernels_bench.sharded_seal),
+        ("kernels/retrieval", kernels_bench.retrieval),
     ]
     committed = _load_committed() if check else {}
     print("name,us_per_call,derived")

@@ -1,0 +1,239 @@
+"""Salience-indexed archive catalog: query sealed stripes WITHOUT decoding.
+
+Salient Store's retrieval thesis is that the archive is an active
+participant in continuous learning: the trainer must be able to ask "which
+archived GOPs are most novel w.r.t. what I know now?" and move only those
+bytes.  Decoding stripes to answer that question would forfeit the win, so
+each stripe is indexed AT ARCHIVE TIME — before seal, while the backbone
+features for the GOP are still hot from exemplar selection — with a
+per-GOP salience descriptor:
+
+  * the pooled feature vector of the GOP (same features ``select_exemplars``
+    clusters, so catalog queries and the trainer speak one embedding space);
+  * the novelty score against the trainer's exemplar centroids at archive
+    time (a prior that stays useful even when the query passes no centroids);
+  * the byte geometry of the sealed shard (raw/compressed/body lengths) so
+    the query planner (``core/csd/retrieval.py``) can price a read plan
+    without touching the stripe.
+
+Descriptors are tiny (one feature vector + a handful of ints per GOP) and
+live in the replicated-metadata tier: ``StripeCatalog`` persists one record
+per stripe through the power-loss-safe ``csd.failure.Journal``, so a restart
+replays the catalog exactly like it replays committed stripes.  Queries
+re-score stored features against the CALLER's current centroids
+(``novelty_scores``) — novelty drifts as the trainer learns, the features do
+not.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.archival.exemplar import novelty_scores
+from repro.core.csd.failure import Journal
+
+__all__ = ["CatalogEntry", "StripeCatalog", "gop_descriptors",
+           "CATALOG_PREFIX"]
+
+CATALOG_PREFIX = "catalog_"
+
+
+def gop_descriptors(gops, feature_dim: Optional[int] = None) -> List[Dict]:
+    """``add_stripe`` descriptors from coalescer ``PendingGOP``s.
+
+    The exemplar stage rides ``feature``/``novelty`` in each GOP's meta;
+    GOPs without one get a zero vector sized to ``feature_dim`` (pass the
+    catalog's locked dim, or the configured descriptor width) so one
+    ingest tier never mixes embedding widths.  Shared by the trainer and
+    the serving ingest so the fallback cannot drift between them.
+    """
+    fallback = np.zeros(feature_dim or 1, np.float32)
+    return [
+        {
+            "stream_id": g.stream_id,
+            "feature": (g.meta or {}).get("feature", fallback),
+            "novelty": (g.meta or {}).get("novelty", 0.0),
+        }
+        for g in gops
+    ]
+
+
+class CatalogEntry(NamedTuple):
+    """One archived GOP: where it lives and how salient it looked at seal."""
+
+    stripe_id: str
+    shard: int          # shard index inside the stripe (== CSD that owns it)
+    stream_id: int      # camera stream the GOP came from (-1 if unknown)
+    feature: np.ndarray  # (D,) float32 pooled backbone feature of the GOP
+    novelty: float      # novelty vs trainer centroids at archive time
+    n_i8: int           # raw codec payload bytes (post neural codec)
+    n_comp: int         # entropy-coded bytes inside the sealed body
+    body_bytes: int     # sealed body bytes on disk (what a read moves)
+
+    def to_record(self) -> Dict:
+        return {
+            "shard": self.shard,
+            "stream_id": self.stream_id,
+            "feature": np.asarray(self.feature, np.float32).tolist(),
+            "novelty": float(self.novelty),
+            "n_i8": self.n_i8,
+            "n_comp": self.n_comp,
+            "body_bytes": self.body_bytes,
+        }
+
+    @classmethod
+    def from_record(cls, stripe_id: str, rec: Dict) -> "CatalogEntry":
+        return cls(
+            stripe_id=stripe_id,
+            shard=int(rec["shard"]),
+            stream_id=int(rec["stream_id"]),
+            feature=np.asarray(rec["feature"], np.float32),
+            novelty=float(rec["novelty"]),
+            n_i8=int(rec["n_i8"]),
+            n_comp=int(rec["n_comp"]),
+            body_bytes=int(rec["body_bytes"]),
+        )
+
+
+class StripeCatalog:
+    """In-memory index of archived GOP descriptors, journal-persisted.
+
+    ``journal``: optional :class:`Journal`; when given, ``add_stripe``
+    commits one ``catalog_<stripe_id>.json`` record per stripe (payload =
+    the descriptor list) and ``load()`` rebuilds the index from a replay —
+    torn catalog writes are dropped exactly like torn stripe bodies.
+    """
+
+    def __init__(self, journal: Optional[Journal] = None):
+        self.journal = journal
+        self._entries: List[CatalogEntry] = []
+        self._stripe_ids: set = set()
+
+    # ------------------------------------------------------------ indexing
+    def add_stripe(
+        self,
+        stripe_id: str,
+        stripe,  # StripeArchive (duck-typed to avoid the import cycle)
+        descriptors: Sequence[Dict],
+    ) -> List[CatalogEntry]:
+        """Index one sealed stripe; descriptors[s] describes GOP/shard s.
+
+        Each descriptor needs ``feature`` ((D,) array-like) and optionally
+        ``stream_id`` / ``novelty``.  Byte geometry comes from the stripe's
+        own manifests, so the catalog can never disagree with what was
+        sealed.  Returns the new entries (already appended).
+        """
+        if stripe_id in self._stripe_ids:
+            raise ValueError(f"stripe {stripe_id!r} already cataloged")
+        if len(descriptors) != len(stripe.blocks):
+            raise ValueError(
+                f"{len(descriptors)} descriptors for "
+                f"{len(stripe.blocks)} stripe shards"
+            )
+        entries = []
+        want_dim = self._entries[0].feature.size if self._entries else None
+        for s, (blk, d) in enumerate(zip(stripe.blocks, descriptors)):
+            em = blk.manifest.get("entropy", {})
+            n_i8 = int(blk.manifest["n_i8"])
+            feature = np.asarray(d["feature"], np.float32).reshape(-1)
+            # one embedding space per catalog: a mismatched descriptor
+            # would otherwise blow up much later, inside a query's stack
+            if want_dim is None:
+                want_dim = feature.size
+            elif feature.size != want_dim:
+                raise ValueError(
+                    f"shard {s} descriptor has dim {feature.size}, catalog "
+                    f"uses dim {want_dim}"
+                )
+            entries.append(
+                CatalogEntry(
+                    stripe_id=stripe_id,
+                    shard=s,
+                    stream_id=int(d.get("stream_id", -1)),
+                    feature=feature,
+                    novelty=float(d.get("novelty", 0.0)),
+                    n_i8=n_i8,
+                    n_comp=int(em.get("n_comp", n_i8)),
+                    body_bytes=4 * int(blk.sealed.n_valid_u32),
+                )
+            )
+        self._entries.extend(entries)
+        self._stripe_ids.add(stripe_id)
+        if self.journal is not None:
+            payload = json.dumps([e.to_record() for e in entries]).encode()
+            self.journal.commit(
+                f"{CATALOG_PREFIX}{stripe_id}.json",
+                payload,
+                {"kind": "catalog", "stripe_id": stripe_id,
+                 "n_gops": len(entries)},
+            )
+        return entries
+
+    def load(self) -> int:
+        """Rebuild the index from the journal replay; returns #stripes."""
+        if self.journal is None:
+            raise ValueError("catalog has no journal to load from")
+        n = 0
+        for rec in self.journal.replay():
+            name = rec["name"]
+            if not (name.startswith(CATALOG_PREFIX) and name.endswith(".json")):
+                continue
+            stripe_id = name[len(CATALOG_PREFIX) : -len(".json")]
+            if stripe_id in self._stripe_ids:
+                continue
+            records = json.loads(self.journal.read(name))
+            self._entries.extend(
+                CatalogEntry.from_record(stripe_id, r) for r in records
+            )
+            self._stripe_ids.add(stripe_id)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def entries(self) -> List[CatalogEntry]:
+        return list(self._entries)
+
+    @property
+    def n_stripes(self) -> int:
+        return len(self._stripe_ids)
+
+    @property
+    def feature_dim(self) -> Optional[int]:
+        """Descriptor width the catalog is locked to (None while empty)."""
+        return int(self._entries[0].feature.size) if self._entries else None
+
+    @property
+    def bytes_indexed(self) -> int:
+        """Total sealed body bytes the catalog covers (full-restore cost)."""
+        return sum(e.body_bytes for e in self._entries)
+
+    def features(self) -> np.ndarray:
+        """(N, D) stacked descriptor features (empty -> (0, 0))."""
+        if not self._entries:
+            return np.zeros((0, 0), np.float32)
+        return np.stack([e.feature for e in self._entries])
+
+    def score(self, centroids=None) -> np.ndarray:
+        """Per-entry novelty against ``centroids`` (the caller's CURRENT
+        exemplar centroids); falls back to the archive-time score when no
+        centroids are given.  Never touches a payload byte."""
+        if not self._entries:
+            return np.zeros((0,), np.float32)
+        if centroids is None:
+            return np.asarray([e.novelty for e in self._entries], np.float32)
+        return np.asarray(
+            novelty_scores(self.features(), np.asarray(centroids, np.float32))
+        )
+
+    def topk(self, k: int, centroids=None) -> List[CatalogEntry]:
+        """The k most-novel archived GOPs, most novel first."""
+        nov = self.score(centroids)
+        order = np.argsort(-nov, kind="stable")[: max(int(k), 0)]
+        return [self._entries[i] for i in order]

@@ -1,34 +1,61 @@
-"""End-to-end archival pipeline: compress -> encrypt -> parity (Fig. 1).
+"""End-to-end archival pipeline: the full ingest -> archive -> query ->
+replay loop of Salient Store (Fig. 1, both directions).
 
-Device path (runs where the data shard lives — the CSD analogue):
+Write path (runs where the data shard lives — the CSD analogue):
   1. layered neural codec encodes the GOP (int8 codes + int8 motion fields);
   2. the flat codes are entropy-coded by the interleaved-rANS kernel
-     (``repro.kernels.entropy``, ``codec_name="rans"``) — the stage that
-     used to ship raw bytes to a host-side zstd pass now runs at the data;
+     (``repro.kernels.entropy``, ``codec_name="rans"``) — per shard, an
+     incompressible payload is stored raw instead (adaptive raw-skip,
+     flagged in the manifest and honored by every decode path);
   3. the compressed streams are packed into uint32 words and sealed
      (R-LWE KEM + ChaCha20);
   4. sealed bodies from the S shards of a stripe are parity-coded
-     (RAID-5/6) so any 1-2 shard losses are recoverable.
+     (RAID-5/6) so any 1-2 shard losses are recoverable;
+  5. AT SEAL TIME the stripe is indexed into the salience catalog
+     (``core/archival/catalog.py``): per-GOP pooled feature + novelty,
+     recorded while the backbone features are hot — queries never decode.
+
+Read path (the archive is an ACTIVE participant in continuous learning,
+not a write-only sink):
+  6. the trainer asks the query planner (``core/csd/retrieval.py``) for
+     the most-novel archived GOPs vs its CURRENT exemplar centroids; the
+     plan prices host-vs-CSD decode (``csd/costmodel.py``) and names, per
+     stripe, exactly the shard subset to read;
+  7. ``restore_stripe(shards=...)`` decodes ONLY those shards — one fused
+     unseal launch over the subset — falling back to a parity-based
+     degraded read (``recover_stripe``) when a wanted shard is missing or
+     its CSD is flagged dead by the ``StragglerMonitor``;
+  8. the decoded GOPs join the training batch (``train/trainer.py``'s
+     replay stage), closing the loop: ingest -> archive -> query -> replay.
 
 With the entropy stage on-device the whole codes -> entropy -> pack ->
 ChaCha20 -> parity chain runs without a host roundtrip; only disk I/O and
-O(1) manifest metadata (lengths, KEM polys, nonces) are host-side, and they
-cover *sealed, compressed* data — the paper's data-movement thesis, now for
-every hot-path stage.  ``ArchiveConfig.codec_name`` selects ``"rans"``
+O(1) manifest metadata (lengths, KEM polys, nonces, salience descriptors)
+are host-side, and they cover *sealed, compressed* data — the paper's
+data-movement thesis in BOTH directions: ingest moves compressed bytes,
+retrieval moves only the planned shard subset (the ``retrieval`` bench
+gates on that byte ratio).  ``ArchiveConfig.codec_name`` selects ``"rans"``
 (on-device, default), ``"zstd"``/``"zlib"`` (the legacy host-side codec via
 ``repro.common.compress``, kept as the fallback for hosts that want a
-byte-for-byte zstd archive), or ``"none"``; manifests record the codec so
-``restore_stripe`` dispatches on what was actually written.
+byte-for-byte zstd archive), or ``"none"``; manifests record the codec (and
+the raw-skip flag) so ``restore_stripe`` dispatches on what was written.
 
-Two granularities:
+Granularities and seams:
 
 * ``archive_stripe`` / ``restore_stripe`` — the batched hot path.  All S
   shards of a stripe are packed, ChaCha-sealed, and parity-coded in ONE
   fused Pallas launch (``repro.kernels.seal``); only the tiny per-shard KEM
   runs outside the kernel.  ``use_pallas=False`` dispatches the staged jnp
   reference instead (bit-identical outputs).
+* ``restore_stripe_payloads`` — the retrieval datapath below the neural
+  codec: subset unseal + entropy decode + degraded-read fallback, shared
+  by ``restore_stripe`` and the byte-accounting benches.
 * ``archive_gop`` / ``restore_gop`` + ``stripe_parity`` — the per-block
   reference path, kept as the dispatch/compat layer and for single-GOP use.
+* ``stripe_manifests`` (+ ``..._to_json``/``..._from_json``) — the
+  replicated metadata tier: KEM polys, nonces, packing manifests and body
+  lengths, journaled next to the bodies so restarts and degraded reads
+  never depend on in-memory state.
 
 Sharded archival (mesh axis <-> CSD array):
 
@@ -42,12 +69,14 @@ shard runs one local kernel launch on its slice of the stripe, then
 combines RAID-5 P / RAID-6 Q with a cross-shard XOR reduce (exact, order-
 free, bit-identical to this module's single-device path).  The hooks below
 (``encode_gop_payload`` / ``seal_payload_stripe`` / the ``seal_fn`` /
-``unseal_fn`` parameters) are the seams that path plugs into.
+``unseal_fn`` / ``entropy_fn`` / ``entropy_decode_fn`` parameters) are the
+seams that path plugs into — subset reads ride the same seams via
+``shard_ids``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,7 +114,10 @@ __all__ = [
     "seal_payload_stripe",
     "archive_stripe",
     "restore_stripe",
+    "restore_stripe_payloads",
     "stripe_manifests",
+    "stripe_manifests_to_json",
+    "stripe_manifests_from_json",
     "stripe_parity",
     "recover_stripe",
 ]
@@ -253,10 +285,18 @@ def entropy_encode_payloads(
         for f in flats:
             raw = np.asarray(f, np.int8).tobytes()
             blob = host_entropy.compress_as(name, raw)
-            comps.append(jnp.asarray(np.frombuffer(blob, np.int8)))
-            metas.append(
-                {"codec": name, "n_raw": len(raw), "n_comp": len(blob)}
-            )
+            if len(blob) >= len(raw):
+                # adaptive raw-skip, same manifest flag as the rANS path
+                comps.append(jnp.asarray(np.frombuffer(raw, np.int8)))
+                metas.append(
+                    {"codec": name, "raw": True,
+                     "n_raw": len(raw), "n_comp": len(raw)}
+                )
+            else:
+                comps.append(jnp.asarray(np.frombuffer(blob, np.int8)))
+                metas.append(
+                    {"codec": name, "n_raw": len(raw), "n_comp": len(blob)}
+                )
         return comps, metas
     raise ValueError(f"unknown entropy codec {name!r}")
 
@@ -285,6 +325,9 @@ def entropy_decode_payloads(
     if name in ("zstd", "zlib"):
         out = []
         for c, m in zip(comps, metas):
+            if m.get("raw"):  # adaptive raw-skip: stored bytes ARE the payload
+                out.append(jnp.asarray(c).reshape(-1).astype(jnp.int8))
+                continue
             raw = host_entropy.decompress_as(
                 name, np.asarray(c, np.int8).tobytes(),
                 max_output_size=m["n_raw"],
@@ -389,31 +432,75 @@ def archive_stripe(
     return stripe, recons
 
 
-def restore_stripe(
-    codec_params,
+def restore_stripe_payloads(
     s: jax.Array,
     stripe: StripeArchive,
     cfg: ArchiveConfig = ArchiveConfig(),
     *,
+    shards: Optional[Sequence[int]] = None,
     use_pallas: bool = True,
     verify_parity: bool = True,
+    manifests: Optional[List[Dict]] = None,
     unseal_fn=None,
     entropy_decode_fn=None,
-) -> List[jax.Array]:
-    """Decode every shard of a stripe: fused unseal -> entropy decode -> GOPs.
+) -> Tuple[List[jax.Array], List[ArchivedBlock]]:
+    """Unseal + entropy-decode a stripe down to codec payloads.
 
-    The kernel recomputes P/Q from the sealed bodies as stored; with
-    ``verify_parity`` the recomputation must match the parity written at
-    seal time (stripe integrity check) or a ``ValueError`` is raised —
-    *before* the entropy stage touches the streams.  The entropy codec is
-    dispatched from the manifest (what was written wins over the caller's
-    cfg).  ``unseal_fn``/``entropy_decode_fn`` dispatch the launches (the
-    sharded path passes shard_map'd wrappers).
+    This is the retrieval datapath below the neural codec: everything
+    ``restore_stripe`` does except the final ``decode_gop``.  Returns
+    (flat int8 payloads, the blocks they came from) in ``shards`` order.
+
+    Shard-subset reads: ``shards`` names the stripe shards a query plan
+    actually wants (``core/csd/retrieval.plan_retrieval`` emits them) —
+    ONLY those bodies are stacked into the unseal launch, so a top-k
+    retrieval moves/decodes k shards instead of the whole stripe.  Parity
+    cannot be recomputed from a subset, so subset reads skip the
+    recompute-and-compare integrity check (full-stripe reads keep it).
+
+    Degraded reads: entries of ``stripe.blocks`` may be ``None`` (shard
+    lost, or its CSD flagged dead by the ``StragglerMonitor``).  Wanted
+    missing shards are rebuilt from RAID parity via ``recover_stripe``
+    first — that read touches the surviving shards + parity (the classic
+    degraded-read amplification; the planner bills it), and needs the
+    replicated metadata records (``stripe_manifests`` format) in
+    ``manifests`` for the lost shards' KEM polys/nonces/lengths.
     """
     if not stripe.blocks:
         raise ValueError("stripe must contain at least one shard payload")
+    S = len(stripe.blocks)
+    subset = shards is not None
+    wanted = list(range(S)) if shards is None else [int(i) for i in shards]
+    if not wanted:
+        raise ValueError("shard subset must name at least one shard")
+    if len(set(wanted)) != len(wanted):
+        raise ValueError(f"duplicate shard ids in {wanted}")
+    if any(i < 0 or i >= S for i in wanted):
+        raise ValueError(f"shard ids {wanted} out of range for S={S}")
+    blocks = list(stripe.blocks)
+    missing = [i for i, b in enumerate(blocks) if b is None]
+    if any(i in missing for i in wanted):
+        if stripe.parity is None:
+            raise ValueError(
+                f"shards {sorted(set(missing) & set(wanted))} are missing "
+                "and the stripe has no parity to rebuild from"
+            )
+        if manifests is None:
+            raise ValueError(
+                "degraded read needs the replicated metadata records "
+                "(stripe_manifests format) for the missing shards"
+            )
+        body_lens = [
+            int(manifests[i]["n_words"])
+            if blocks[i] is None
+            else int(blocks[i].sealed.n_valid_u32)
+            for i in range(S)
+        ]
+        blocks = recover_stripe(
+            blocks, stripe.parity, missing, manifests, body_lens
+        )
+    sub = [blocks[i] for i in wanted]
     sessions, nonces = [], []
-    for b in stripe.blocks:
+    for b in sub:
         sessions.append(
             rlwe.kem_decapsulate(
                 s, rlwe.Ciphertext(b.sealed.kem_c1, b.sealed.kem_c2), cfg.rlwe
@@ -421,28 +508,27 @@ def restore_stripe(
         )
         nonces.append(b.sealed.nonce)
 
-    n_words = tuple(int(b.sealed.body.shape[0]) for b in stripe.blocks)
-    emetas = [
-        b.manifest.get("entropy", {"codec": "none"}) for b in stripe.blocks
-    ]
+    n_words = tuple(int(b.sealed.body.shape[0]) for b in sub)
+    emetas = [b.manifest.get("entropy", {"codec": "none"}) for b in sub]
     # bytes inside the sealed body: the compressed stream when an entropy
     # stage ran, the raw payload otherwise
     n_i8 = tuple(
         int(em.get("n_comp", b.manifest["n_i8"]))
-        for b, em in zip(stripe.blocks, emetas)
+        for b, em in zip(sub, emetas)
     )
     R = seal_ops.pad_rows_for(max(n_words))
     sealed = jnp.stack(
         [
             jnp.pad(b.sealed.body, (0, R * 128 - n)).reshape(R, 128)
-            for b, n in zip(stripe.blocks, n_words)
+            for b, n in zip(sub, n_words)
         ]
     )
     packed = seal_ops.SealedStripe(sealed, None, None, n_words, n_i8)
     # recompute parity in the mode the stripe was actually sealed with (the
     # stored parity dict is ground truth), not whatever the caller's cfg
-    # says — otherwise verify_parity could silently compare nothing
-    if stripe.parity is None:
+    # says — otherwise verify_parity could silently compare nothing.  A
+    # subset read cannot recompute stripe-wide parity, so it runs "none".
+    if subset or stripe.parity is None:
         parity_mode = "none"
     else:
         parity_mode = "raid6" if "q" in stripe.parity else "raid5"
@@ -453,8 +539,9 @@ def restore_stripe(
         jnp.stack(nonces),
         parity=parity_mode,
         use_pallas=use_pallas,
+        shard_ids=tuple(wanted),
     )
-    if verify_parity and stripe.parity is not None:
+    if not subset and verify_parity and stripe.parity is not None:
         for name, got in (("p", p2), ("q", q2)):
             want = stripe.parity.get(name)
             if want is None or got is None:
@@ -470,30 +557,98 @@ def restore_stripe(
                 raise ValueError(f"stripe parity mismatch on {name.upper()}")
 
     payloads = entropy_decode_payloads(
-        [flats[i][: n_i8[i]] for i in range(len(stripe.blocks))],
+        [flats[j][: n_i8[j]] for j in range(len(sub))],
         [dict(em, codec=em.get("codec", "none")) for em in emetas],
         use_pallas=use_pallas,
         entropy_decode_fn=entropy_decode_fn,
     )
-    out = []
-    for i, b in enumerate(stripe.blocks):
-        frame_codes = _unflatten_codes(
-            payloads[i][: b.manifest["n_i8"]], b.manifest
+    return (
+        [p[: b.manifest["n_i8"]] for p, b in zip(payloads, sub)],
+        sub,
+    )
+
+
+def restore_stripe(
+    codec_params,
+    s: jax.Array,
+    stripe: StripeArchive,
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    shards: Optional[Sequence[int]] = None,
+    use_pallas: bool = True,
+    verify_parity: bool = True,
+    manifests: Optional[List[Dict]] = None,
+    unseal_fn=None,
+    entropy_decode_fn=None,
+) -> List[jax.Array]:
+    """Decode stripe shards: fused unseal -> entropy decode -> GOPs.
+
+    ``shards=None`` decodes the whole stripe with the recompute-and-compare
+    parity integrity check; ``shards=[...]`` is the retrieval fast path —
+    only the named shards' bodies enter the unseal launch (see
+    ``restore_stripe_payloads`` for subset/degraded-read semantics; missing
+    wanted shards are parity-rebuilt when ``manifests`` carries their
+    replicated metadata).  The entropy codec is dispatched from the
+    manifest (what was written wins over the caller's cfg).
+    ``unseal_fn``/``entropy_decode_fn`` dispatch the launches (the sharded
+    path passes shard_map'd wrappers).  Returns one decoded GOP per
+    requested shard, in ``shards`` order.
+    """
+    payloads, sub = restore_stripe_payloads(
+        s, stripe, cfg, shards=shards, use_pallas=use_pallas,
+        verify_parity=verify_parity, manifests=manifests,
+        unseal_fn=unseal_fn, entropy_decode_fn=entropy_decode_fn,
+    )
+    return [
+        decode_gop(
+            codec_params, cfg.codec, _unflatten_codes(p, b.manifest)
         )
-        out.append(decode_gop(codec_params, cfg.codec, frame_codes))
-    return out
+        for p, b in zip(payloads, sub)
+    ]
 
 
 def stripe_manifests(stripe: StripeArchive) -> List[Dict]:
-    """Replicated-metadata records in the format ``recover_stripe`` expects."""
+    """Replicated-metadata records in the format ``recover_stripe`` and the
+    degraded-read path expect (``n_words`` sizes a lost shard's body)."""
     return [
         {
             "kem_c1": b.sealed.kem_c1,
             "kem_c2": b.sealed.kem_c2,
             "nonce": b.sealed.nonce,
             "manifest": b.manifest,
+            "n_words": int(b.sealed.n_valid_u32),
         }
         for b in stripe.blocks
+    ]
+
+
+def stripe_manifests_to_json(manifests: List[Dict]) -> List[Dict]:
+    """JSON-able form of ``stripe_manifests`` records, so the replicated
+    metadata tier can live in the power-loss-safe journal and a restarted
+    trainer can still execute retrieval plans against old stripes."""
+    return [
+        {
+            "kem_c1": np.asarray(m["kem_c1"]).tolist(),
+            "kem_c2": np.asarray(m["kem_c2"]).tolist(),
+            "nonce": np.asarray(m["nonce"]).tolist(),
+            "manifest": m["manifest"],
+            "n_words": int(m["n_words"]),
+        }
+        for m in manifests
+    ]
+
+
+def stripe_manifests_from_json(data: List[Dict]) -> List[Dict]:
+    """Invert ``stripe_manifests_to_json`` (arrays back on device)."""
+    return [
+        {
+            "kem_c1": jnp.asarray(m["kem_c1"], jnp.int32),
+            "kem_c2": jnp.asarray(m["kem_c2"], jnp.int32),
+            "nonce": jnp.asarray(m["nonce"], jnp.uint32),
+            "manifest": m["manifest"],
+            "n_words": int(m["n_words"]),
+        }
+        for m in data
     ]
 
 

@@ -37,7 +37,8 @@ from typing import NamedTuple, Sequence, Tuple
 __all__ = ["SystemModel", "classical_archive", "vss_archive", "csd_archive",
            "multinode_latency", "multinode_movement_latency",
            "csd_ratio_tradeoff", "entropy_placement_cost",
-           "best_entropy_placement"]
+           "best_entropy_placement", "retrieval_placement_cost",
+           "best_retrieval_placement"]
 
 
 class SystemModel(NamedTuple):
@@ -150,6 +151,48 @@ def best_entropy_placement(
     with the per-option costs so callers can weigh movement too."""
     costs = {
         w: entropy_placement_cost(sys, raw_bytes, w) for w in ("host", "csd")
+    }
+    return min(costs, key=lambda w: costs[w].latency_s), costs
+
+
+def retrieval_placement_cost(
+    sys: SystemModel, comp_bytes: float, raw_bytes: float, where: str = "host"
+) -> ArchiveCost:
+    """Price a retrieval's decode stage (unseal + entropy decode) at a
+    given placement — the read-side mirror of ``entropy_placement_cost``.
+
+    ``comp_bytes``: sealed/entropy-coded bytes the plan reads off flash;
+    ``raw_bytes``: the decoded codec payload those expand to.  Unlike the
+    ingest direction the byte tradeoff INVERTS here: decoding on the host
+    ships the small compressed stream over the host link and spends host
+    CPU, decoding on the CSD spends the 3.9x-faster kernel but ships the
+    EXPANDED payload up.  Which wins depends on the link/compute balance —
+    exactly the decision ``plan_retrieval`` asks this model to make.
+    """
+    if where == "host":
+        lat = max(
+            comp_bytes / (sys.host_link_GBps * 1e9),   # sealed stream up
+            raw_bytes / (sys.cpu_rate_GBps * 1e9),     # host unseal+decode
+        )
+        return ArchiveCost(lat, comp_bytes)
+    if where == "csd":
+        lat = max(
+            comp_bytes / (sys.ssd_internal_GBps * 1e9),  # flash -> FPGA feed
+            raw_bytes / (sys.csd_rate_GBps * 1e9),       # on-device decode
+            raw_bytes / (sys.host_link_GBps * 1e9),      # decoded payload up
+        )
+        return ArchiveCost(lat, raw_bytes)
+    raise ValueError(f"unknown retrieval placement {where!r}")
+
+
+def best_retrieval_placement(
+    sys: SystemModel, comp_bytes: float, raw_bytes: float
+) -> Tuple[str, dict]:
+    """Cheapest-latency decode placement for a retrieval plan, with the
+    per-option costs so the planner can report movement too."""
+    costs = {
+        w: retrieval_placement_cost(sys, comp_bytes, raw_bytes, w)
+        for w in ("host", "csd")
     }
     return min(costs, key=lambda w: costs[w].latency_s), costs
 

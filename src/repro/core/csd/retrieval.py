@@ -1,0 +1,182 @@
+"""Salience-driven retrieval planner — the query half of Salient Store.
+
+The write path (PRs 1-3) seals data where it lives; this module plans the
+READ path: given the trainer's current exemplar centroids and a byte
+budget, decide WHICH archived GOPs to pull back for replay and WHAT that
+costs, without touching a single payload byte.  Three inputs meet here:
+
+  * the :class:`~repro.core.archival.catalog.StripeCatalog` — per-GOP
+    salience descriptors recorded at archive time, so ranking is a pure
+    metadata operation;
+  * the failure tier — shards whose CSD the ``StragglerMonitor`` flagged
+    dead are still retrievable, but only through a parity-based degraded
+    read that touches the surviving shards + parity (``dead_shards``
+    makes the planner bill that amplification honestly);
+  * the cost model — ``best_retrieval_placement`` prices the decode on
+    the host (ship compressed, spend host CPU) vs on the CSD (spend the
+    faster kernel, ship the expanded payload) and the plan records the
+    winner.
+
+The emitted :class:`ReadPlan` maps each touched stripe to the shard subset
+to decode — exactly the ``shards=`` argument of ``restore_stripe`` /
+``restore_stripe_sharded`` — so executing a plan moves only the bytes the
+plan accounted for.  ``bytes_full_restore`` keeps the no-index baseline
+(restore every stripe, score after decode) alongside for the paper's
+data-volume-reduction claim; the ``retrieval`` bench gates on the ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+from repro.core.csd import costmodel
+
+__all__ = ["ShardRead", "ReadPlan", "plan_retrieval"]
+
+
+class ShardRead(NamedTuple):
+    """One planned GOP read: where it lives and what pulling it costs."""
+
+    stripe_id: str
+    shard: int
+    stream_id: int
+    novelty: float      # score vs the QUERY centroids (not archive-time)
+    body_bytes: int     # sealed body bytes of this shard
+    n_comp: int         # entropy-coded bytes inside the body
+    n_i8: int           # decoded codec payload bytes
+    degraded: bool      # CSD dead -> parity rebuild (reads peers + parity)
+    read_bytes: int     # marginal flash bytes this read adds to the plan
+
+
+class ReadPlan(NamedTuple):
+    reads: List[ShardRead]                  # ranked, most novel first
+    shards_by_stripe: Dict[str, List[int]]  # restore_stripe(shards=...) input
+    bytes_planned: int       # flash bytes read (incl. degraded amplification)
+    bytes_full_restore: int  # no-index baseline: read every cataloged body
+    placement: str           # "host" | "csd" decode placement (cheapest)
+    costs: Dict[str, costmodel.ArchiveCost]  # both placements, priced
+    skipped: int             # ranked candidates the byte budget rejected
+
+
+def _degraded_read_bytes(
+    stripe_entries: List, touched: Set[int], dead: Set[int],
+    parity_shards: int,
+) -> int:
+    """Marginal bytes a parity rebuild adds: every not-yet-read SURVIVING
+    body (dead shards cannot be read, they are what gets reconstructed)
+    plus the parity strips (sized like the widest body)."""
+    peers = sum(
+        e.body_bytes
+        for e in stripe_entries
+        if e.shard not in touched and e.shard not in dead
+    )
+    pad = max(e.body_bytes for e in stripe_entries)
+    return peers + parity_shards * pad
+
+
+def plan_retrieval(
+    catalog,
+    centroids=None,
+    budget_bytes: Optional[int] = None,
+    *,
+    k: Optional[int] = None,
+    sys: costmodel.SystemModel = costmodel.SystemModel(),
+    dead_shards: Sequence[int] = (),
+    parity_shards: int = 2,
+) -> ReadPlan:
+    """Rank the catalog by novelty and emit a budgeted per-shard read plan.
+
+    ``centroids``: the trainer's CURRENT exemplar centroids ((K, D); None
+    falls back to archive-time novelty).  ``budget_bytes`` caps the flash
+    bytes the plan may touch; ``k`` caps the GOP count (both optional —
+    give neither and the plan covers the whole catalog, ranked).
+    ``dead_shards``: stripe-shard indices whose CSD the StragglerMonitor
+    declared dead — wanted GOPs there are planned as degraded reads and
+    their parity-rebuild amplification is billed against the budget.
+    ``parity_shards``: parity strips per stripe (2 for RAID-6, 1 for
+    RAID-5) used to size that bill.
+    """
+    entries = catalog.entries
+    scores = catalog.score(centroids)
+    order = sorted(range(len(entries)), key=lambda i: -float(scores[i]))
+    if k is not None:
+        order = order[: max(int(k), 0)]
+    dead = set(int(d) for d in dead_shards)
+
+    by_stripe: Dict[str, List] = {}
+    for e in entries:
+        by_stripe.setdefault(e.stripe_id, []).append(e)
+
+    reads: List[ShardRead] = []
+    touched: Dict[str, Set[int]] = {}
+    rebuilt: Set[str] = set()  # stripes whose parity rebuild already ran
+    planned = 0
+    skipped = 0
+    for i in order:
+        e = entries[i]
+        got = touched.setdefault(e.stripe_id, set())
+        degraded = e.shard in dead
+        if degraded:
+            # a stripe with more dead shards than parity strips cannot be
+            # rebuilt — planning that read would bill bytes for a rebuild
+            # that must fail, so it is dropped instead of promised
+            stripe_dead = dead & {x.shard for x in by_stripe[e.stripe_id]}
+            if len(stripe_dead) > parity_shards:
+                skipped += 1
+                continue
+            # one rebuild reconstructs every lost shard of the stripe at
+            # once; a second dead-shard read there adds no new bytes
+            cost = (
+                0
+                if e.stripe_id in rebuilt
+                else _degraded_read_bytes(
+                    by_stripe[e.stripe_id], got, dead, parity_shards
+                )
+            )
+        else:
+            cost = 0 if e.shard in got else e.body_bytes
+        if budget_bytes is not None and planned + cost > budget_bytes:
+            skipped += 1
+            continue
+        planned += cost
+        if degraded:
+            # the rebuild read every surviving body in the stripe
+            rebuilt.add(e.stripe_id)
+            got.update(x.shard for x in by_stripe[e.stripe_id])
+        else:
+            got.add(e.shard)
+        reads.append(
+            ShardRead(
+                stripe_id=e.stripe_id,
+                shard=e.shard,
+                stream_id=e.stream_id,
+                novelty=float(scores[i]),
+                body_bytes=e.body_bytes,
+                n_comp=e.n_comp,
+                n_i8=e.n_i8,
+                degraded=degraded,
+                read_bytes=cost,
+            )
+        )
+
+    shards_by_stripe = {
+        sid: sorted({r.shard for r in reads if r.stripe_id == sid})
+        for sid in {r.stripe_id for r in reads}
+    }
+    comp = float(sum(r.n_comp for r in reads))
+    raw = float(sum(r.n_i8 for r in reads))
+    if reads:
+        placement, costs = costmodel.best_retrieval_placement(sys, comp, raw)
+    else:
+        placement, costs = "host", {
+            w: costmodel.ArchiveCost(0.0, 0.0) for w in ("host", "csd")
+        }
+    return ReadPlan(
+        reads=reads,
+        shards_by_stripe=shards_by_stripe,
+        bytes_planned=planned,
+        bytes_full_restore=catalog.bytes_indexed,
+        placement=placement,
+        costs=costs,
+        skipped=skipped,
+    )

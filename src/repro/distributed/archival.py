@@ -191,16 +191,19 @@ def seal_stripe_sharded(payloads, keys, nonces, *, mesh: Mesh,
 def unseal_stripe_sharded(stripe: SealedStripe, keys, nonces, *, mesh: Mesh,
                           axis: str = "data", parity: str = "raid6",
                           use_pallas: bool = True,
-                          interpret: Optional[bool] = None):
+                          interpret: Optional[bool] = None,
+                          shard_ids: Optional[Tuple[int, ...]] = None):
     """Sharded twin of ``seal_ops.unseal_stripe`` (same outputs).
 
     Parity is recomputed from the stored bodies per mesh shard and
     XOR-reduced, so the integrity check covers the whole stripe while each
-    device only reads its own slice.
+    device only reads its own slice.  ``shard_ids`` carries global stripe
+    shard indices for subset reads (a retrieval plan's shards land on the
+    mesh devices that own them; the rest of the stripe never moves).
     """
     if not stripe.n_words:
         raise ValueError("stripe must contain at least one shard payload")
-    meta = seal_ops._meta_arrays(keys, nonces, stripe.n_words)
+    meta = seal_ops._meta_arrays(keys, nonces, stripe.n_words, shard_ids)
     S = stripe.sealed.shape[0]
     D = int(mesh.shape[axis])
     s_pad = -(-S // D) * D
@@ -351,12 +354,16 @@ def restore_stripe_sharded(
     axis: str = "data",
     use_pallas: bool = True,
     verify_parity: bool = True,
+    shards: Optional[List[int]] = None,
+    manifests: Optional[List[Dict]] = None,
 ) -> List[jax.Array]:
     """``restore_stripe`` with the unseal + entropy-decode launches
-    shard_map'd over ``mesh``."""
+    shard_map'd over ``mesh`` — including shard-subset retrieval reads
+    (``shards``) and parity-based degraded reads (``manifests``; see
+    ``restore_stripe_payloads``)."""
     return restore_stripe(
         codec_params, s, stripe, cfg, use_pallas=use_pallas,
-        verify_parity=verify_parity,
+        verify_parity=verify_parity, shards=shards, manifests=manifests,
         unseal_fn=functools.partial(
             unseal_stripe_sharded, mesh=mesh, axis=axis
         ),

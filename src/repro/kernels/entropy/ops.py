@@ -213,13 +213,22 @@ def encode_payloads(
     words, mask, freq, states = core_fn(codes, n_valid)
     comp_pad, n_comp_dev = _pack_streams(words, mask, freq, states)
     n_comp = [int(n) for n in np.asarray(n_comp_dev)]        # tiny host metadata
-    comps = [
-        comp_pad[s, :n].astype(jnp.int8) for s, n in enumerate(n_comp)
-    ]
-    metas = [
-        {"codec": "rans", "n_raw": nr, "n_comp": nc, "rows": T}
-        for nr, nc in zip(n_raw, n_comp)
-    ]
+    comps, metas = [], []
+    for s, (nr, nc) in enumerate(zip(n_raw, n_comp)):
+        if nc >= nr:
+            # adaptive raw-skip: an incompressible shard (or one smaller
+            # than the 1280-byte stream header) is stored as-is; the
+            # manifest flag is what the decode path dispatches on
+            comps.append(flats[s].reshape(-1).astype(jnp.int8))
+            metas.append(
+                {"codec": "rans", "raw": True,
+                 "n_raw": nr, "n_comp": nr, "rows": T}
+            )
+        else:
+            comps.append(comp_pad[s, :nc].astype(jnp.int8))
+            metas.append(
+                {"codec": "rans", "n_raw": nr, "n_comp": nc, "rows": T}
+            )
     return comps, metas
 
 
@@ -231,7 +240,13 @@ def decode_payloads(
     interpret: Optional[bool] = None,
     core_fn=None,
 ) -> List[jax.Array]:
-    """Decode twin: compressed streams + metas -> exact original payloads."""
+    """Decode twin: compressed streams + metas -> exact original payloads.
+
+    Shards the encoder flagged ``raw`` (adaptive raw-skip: compressed would
+    have been >= raw) pass through untouched; only the genuinely coded
+    shards enter the kernel launch, so a stripe that mixes both still runs
+    one launch.  Works identically under the sharded ``core_fn``.
+    """
     if len(comps) != len(metas):
         raise ValueError(f"{len(comps)} streams vs {len(metas)} metas")
     if not comps:
@@ -240,29 +255,43 @@ def decode_payloads(
     if any(int(m["rows"]) != T for m in metas):
         raise ValueError("all shards of a stripe share one padded row count")
     flats = [jnp.asarray(c).reshape(-1).astype(jnp.uint8) for c in comps]
-    for f, m in zip(flats, metas):
+    out: List[Optional[jax.Array]] = [None] * len(flats)
+    coded: List[int] = []
+    for i, (f, m) in enumerate(zip(flats, metas)):
         if int(f.shape[0]) != int(m["n_comp"]):
             raise ValueError(
                 f"stream is {int(f.shape[0])} bytes, manifest says {m['n_comp']}"
             )
+        if m.get("raw"):
+            if int(m["n_comp"]) != int(m["n_raw"]):
+                raise ValueError(
+                    f"raw-skip shard must store n_raw bytes, manifest says "
+                    f"{m['n_comp']} vs {m['n_raw']}"
+                )
+            out[i] = f.astype(jnp.int8)
+            continue
         if int(f.shape[0]) < HEADER_BYTES:
             raise ValueError("compressed stream shorter than its header")
-    # common padded width, stream area even and >= one word (tails unread)
-    C = max(max(int(f.shape[0]) for f in flats), HEADER_BYTES + 2)
-    C += (C - HEADER_BYTES) % 2
-    comp = jnp.stack([jnp.pad(f, (0, C - f.shape[0])) for f in flats])
-    lane_words, freq, states = _parse_streams(comp, rows=T)
-    n_valid = jnp.asarray(
-        [int(m["n_raw"]) for m in metas], jnp.int32
-    ).reshape(-1, 1)
-    if core_fn is None:
-        core_fn = functools.partial(
-            _decode_core, use_pallas=use_pallas, interpret=use_interpret(interpret)
-        )
-    codes = core_fn(lane_words, freq, states, n_valid)
-    return [
-        codes[s].reshape(-1)[: int(m["n_raw"])] for s, m in enumerate(metas)
-    ]
+        coded.append(i)
+    if coded:
+        sub = [flats[i] for i in coded]
+        # common padded width, stream area even and >= one word (tails unread)
+        C = max(max(int(f.shape[0]) for f in sub), HEADER_BYTES + 2)
+        C += (C - HEADER_BYTES) % 2
+        comp = jnp.stack([jnp.pad(f, (0, C - f.shape[0])) for f in sub])
+        lane_words, freq, states = _parse_streams(comp, rows=T)
+        n_valid = jnp.asarray(
+            [int(metas[i]["n_raw"]) for i in coded], jnp.int32
+        ).reshape(-1, 1)
+        if core_fn is None:
+            core_fn = functools.partial(
+                _decode_core, use_pallas=use_pallas,
+                interpret=use_interpret(interpret),
+            )
+        codes = core_fn(lane_words, freq, states, n_valid)
+        for j, i in enumerate(coded):
+            out[i] = codes[j].reshape(-1)[: int(metas[i]["n_raw"])]
+    return out
 
 
 def entropy_traffic(n_raw: int, n_comp: int) -> dict:

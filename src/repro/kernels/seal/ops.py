@@ -96,13 +96,19 @@ def _stack_padded(
     return jnp.stack(rows), n_words, n_i8
 
 
-def _meta_arrays(keys, nonces, n_words) -> Tuple[jax.Array, ...]:
+def _meta_arrays(
+    keys, nonces, n_words, shard_ids: Optional[Sequence[int]] = None
+) -> Tuple[jax.Array, ...]:
+    """Per-shard kernel operands.  ``shard_ids`` carries each row's GLOBAL
+    stripe-shard index so the RAID-6 Q coefficient g^s stays correct when a
+    subset read hands the kernel only some of a stripe's shards."""
     S = len(n_words)
+    ids = range(S) if shard_ids is None else shard_ids
     keys = jnp.asarray(keys, jnp.uint32).reshape(S, 8)
     nonces = jnp.asarray(nonces, jnp.uint32).reshape(S, 3)
     n_valid = jnp.asarray(n_words, jnp.int32).reshape(S, 1)
     q_coef = jnp.asarray(
-        [gf_pow_gen(s) for s in range(S)], jnp.uint32
+        [gf_pow_gen(int(s)) for s in ids], jnp.uint32
     ).reshape(S, 1)
     return keys, nonces, n_valid, q_coef
 
@@ -162,13 +168,20 @@ def seal_stripe(payloads, keys, nonces, *, parity: str = "raid6",
 
 def unseal_stripe(stripe: SealedStripe, keys, nonces, *,
                   parity: str = "raid6", use_pallas: bool = True,
-                  interpret: Optional[bool] = None):
+                  interpret: Optional[bool] = None,
+                  shard_ids: Optional[Sequence[int]] = None):
     """Fused decode: returns (payload list, P, Q) with parity recomputed
     from the stored bodies (compare against the seal-time parity to verify
-    stripe integrity before trusting the decode)."""
+    stripe integrity before trusting the decode).
+
+    ``shard_ids``: global stripe-shard index per row, for SUBSET reads —
+    a retrieval plan that wants shards {1, 3} of a 4-shard stripe stacks
+    just those two bodies and passes ``shard_ids=(1, 3)``; parity recompute
+    over a subset is meaningless, so such reads run ``parity="none"``.
+    """
     if not stripe.n_words:
         raise ValueError("stripe must contain at least one shard payload")
-    meta = _meta_arrays(keys, nonces, stripe.n_words)
+    meta = _meta_arrays(keys, nonces, stripe.n_words, shard_ids)
     codes, p, q = _unseal_core(
         stripe.sealed, *meta, parity=parity, use_pallas=use_pallas,
         interpret=use_interpret(interpret),

@@ -16,9 +16,17 @@ on-device interleaved-rANS kernel and sealed, one fused launch per stage —
 shard_map'd over the storage mesh's ``data`` axis when a mesh is attached,
 so every mesh shard codes + seals its local slice (the CSD-array mapping;
 see ``repro.distributed.archival``).  ``IngestConfig.archive.codec_name``
-falls back to the host zstd/zlib codec for compatibility; ``stats()``
-reports the measured entropy ratio and how many payload bytes the entropy
-stage shipped host-side (zero for the on-device coder).
+falls back to the host zstd/zlib codec for compatibility.
+
+The ingest tier also fronts the archive's READ side: every sealed stripe is
+indexed into a :class:`StripeCatalog` with the per-GOP salience descriptors
+callers pass to ``submit`` (feature vector + novelty — computed where the
+frames were already hot), and ``query`` turns a trainer's centroids into a
+budgeted :class:`ReadPlan` over the catalog without decoding anything.
+``stats()`` reports the measured entropy ratio, host-side entropy bytes
+(zero for the on-device coder), and the retrieval counters: cataloged GOPs/
+bytes and how many bytes the plans served actually touched vs the no-index
+full-restore baseline.
 """
 
 from __future__ import annotations
@@ -29,11 +37,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.archival.catalog import StripeCatalog, gop_descriptors
 from repro.core.archival.pipeline import (
     ArchiveConfig,
     StripeArchive,
     encode_gop_payload,
 )
+from repro.core.csd.retrieval import ReadPlan, plan_retrieval
 from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
@@ -151,6 +161,7 @@ class ServingEngine:
 class IngestConfig(NamedTuple):
     n_shards: int = 4  # GOPs per stripe == storage shards per parity group
     archive: ArchiveConfig = ArchiveConfig()
+    feature_dim: int = 8  # salience descriptor width (zeros when not given)
 
 
 class ArchiveIngest:
@@ -158,10 +169,13 @@ class ArchiveIngest:
 
     ``submit`` accepts one GOP from one camera stream: the clip is
     codec-encoded immediately (features are hot — same frames the serving/
-    training tier just saw) and the flat payload joins the coalescer.  The
-    returned list holds every :class:`StripeArchive` whose stripe this GOP
-    completed — sealed, parity-coded, ready for the journal/placement tier.
-    ``flush`` drains stragglers (end of epoch, shutdown) the same way.
+    training tier just saw) and the flat payload joins the coalescer; the
+    optional ``feature``/``novelty`` salience descriptor rides along and is
+    catalog-indexed when the stripe seals.  The returned list holds every
+    :class:`StripeArchive` whose stripe this GOP completed — sealed,
+    parity-coded, ready for the journal/placement tier.  ``flush`` drains
+    stragglers (end of epoch, shutdown) the same way.  ``query`` serves the
+    retrieval side: centroids in, budgeted per-shard read plan out.
     """
 
     def __init__(
@@ -173,6 +187,7 @@ class ArchiveIngest:
         mesh=None,
         axis: str = "data",
         seed: int = 0,
+        journal=None,
     ):
         self.codec_params = codec_params
         self.pub = pub
@@ -180,15 +195,32 @@ class ArchiveIngest:
         self.mesh = mesh
         self.axis = axis
         self.coalescer = StripeCoalescer(cfg.n_shards)
+        self.catalog = StripeCatalog(journal)
+        if journal is not None:
+            # a restart must see the old index AND resume the stripe id
+            # sequence past it — otherwise new seals would overwrite old
+            # catalog records (and reuse key material) under colliding ids
+            self.catalog.load()
         self._key = jax.random.PRNGKey(seed * 9176 + 29)
-        self._stripe_seq = 0
+        self._stripe_seq = max(
+            (
+                int(e.stripe_id[len("ingest_"):]) + 1
+                for e in self.catalog.entries
+                if e.stripe_id.startswith("ingest_")
+            ),
+            default=0,
+        )
         self._entropy_raw = 0
         self._entropy_comp = 0
+        self._plans_served = 0
+        self._planned_bytes = 0
+        self._planned_full_bytes = 0
 
     def _seal(self, ready) -> List[StripeArchive]:
         out = []
         for cs in ready:
             key = jax.random.fold_in(self._key, self._stripe_seq)
+            stripe_id = f"ingest_{self._stripe_seq:08d}"
             self._stripe_seq += 1
             stripe = seal_coalesced_stripe(
                 self.pub, cs, key, self.cfg.archive,
@@ -199,20 +231,68 @@ class ArchiveIngest:
                 if em and em.get("codec") != "none":
                     self._entropy_raw += int(em["n_raw"])
                     self._entropy_comp += int(em["n_comp"])
+            self.catalog.add_stripe(
+                stripe_id,
+                stripe,
+                gop_descriptors(
+                    cs.gops,
+                    self.catalog.feature_dim or self.cfg.feature_dim,
+                ),
+            )
             out.append(stripe)
         return out
 
-    def submit(self, stream_id: int, frames: jax.Array) -> List[StripeArchive]:
-        """frames: (T, B, H, W, 3) one GOP. Returns stripes it completed."""
+    def submit(
+        self,
+        stream_id: int,
+        frames: jax.Array,
+        *,
+        feature=None,
+        novelty: float = 0.0,
+    ) -> List[StripeArchive]:
+        """frames: (T, B, H, W, 3) one GOP. Returns stripes it completed.
+
+        ``feature``: (feature_dim,) pooled salience descriptor from the
+        serving/training tier (the frames are hot there); ``novelty``: its
+        score vs the current exemplar centroids.  Both are optional — GOPs
+        without them are cataloged with zero descriptors and simply rank
+        last in retrieval queries.
+        """
         flat, manifest, _ = encode_gop_payload(
             self.codec_params, frames, self.cfg.archive
         )
-        ready = self.coalescer.add(stream_id, flat, manifest)
+        meta = {"novelty": float(novelty)}
+        if feature is not None:
+            meta["feature"] = np.asarray(feature, np.float32).reshape(-1)
+        ready = self.coalescer.add(stream_id, flat, manifest, meta=meta)
         return self._seal(ready)
 
     def flush(self) -> List[StripeArchive]:
         """Seal all pending GOPs into (possibly short) stripes."""
         return self._seal(self.coalescer.flush())
+
+    def query(
+        self,
+        centroids=None,
+        *,
+        budget_bytes: Optional[int] = None,
+        k: Optional[int] = None,
+        dead_shards=(),
+    ) -> ReadPlan:
+        """Plan a retrieval over everything this ingest tier has sealed:
+        rank cataloged GOPs by novelty vs ``centroids``, price host-vs-CSD
+        decode, and emit the per-stripe shard subsets to restore."""
+        plan = plan_retrieval(
+            self.catalog, centroids, budget_bytes, k=k,
+            dead_shards=dead_shards,
+            parity_shards={"raid6": 2, "raid5": 1, "none": 0}[
+                self.cfg.archive.parity
+            ],
+        )
+        self._plans_served += 1
+        self._planned_bytes += plan.bytes_planned
+        self._planned_full_bytes += plan.bytes_full_restore
+        return plan
 
     def stats(self) -> Dict[str, float]:
         s = self.coalescer.stats()
@@ -225,4 +305,15 @@ class ArchiveIngest:
         # on-device coder ships none, the zstd/zlib fallback ships them all
         on_device = self.cfg.archive.codec_name in ("rans", "none")
         s["host_entropy_bytes"] = 0 if on_device else self._entropy_raw
+        # retrieval side: what the salience index is saving on reads
+        s["catalog_gops"] = len(self.catalog)
+        s["catalog_bytes"] = self.catalog.bytes_indexed
+        s["plans_served"] = self._plans_served
+        s["planned_read_bytes"] = self._planned_bytes
+        s["planned_full_bytes"] = self._planned_full_bytes
+        s["retrieval_bytes_ratio"] = (
+            self._planned_bytes / self._planned_full_bytes
+            if self._planned_full_bytes
+            else float("nan")
+        )
         return s

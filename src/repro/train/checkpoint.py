@@ -40,7 +40,8 @@ from repro.core.csd.failure import Journal
 from repro.kernels.entropy import ops as entropy_ops
 from repro.kernels.seal import ops as seal_ops
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "CheckpointError"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_meta",
+           "latest_step", "CheckpointError"]
 
 
 class CheckpointError(RuntimeError):
@@ -111,6 +112,7 @@ def save_checkpoint(
     rng: Optional[jax.Array] = None,
     zstd_level: int = 3,
     codec_name: str = "rans",
+    extra_meta: Optional[Dict[str, Any]] = None,
 ) -> Dict:
     """state: arbitrary pytree (params/opt/extra). Returns the manifest.
 
@@ -119,6 +121,12 @@ def save_checkpoint(
     fused seal launch — the checkpoint bytes never visit a host codec.
     ``"zstd"``/``"zlib"`` keeps the legacy host path (must match what this
     host's ``repro.common.compress`` actually provides).
+
+    ``extra_meta``: JSON-able caller payload stored under ``meta["extra"]``
+    — the trainer persists its exemplar centroids here so novelty scoring
+    (and catalog queries) survive a restart instead of re-learning the
+    known distribution from scratch.  Read it back with
+    ``load_checkpoint_meta``.
     """
     j = Journal(root)
     raw = _serialize_tree(state)
@@ -130,6 +138,7 @@ def save_checkpoint(
         "raw_len": len(raw),
         "sealed": bool(seal_key is not None),
         "codec": codec_name,
+        "extra": extra_meta or {},
     }
 
     if codec_name == "rans":
@@ -190,6 +199,17 @@ def save_checkpoint(
     meta["shards"] = names
     j.commit(f"ckpt_{step:08d}_manifest.json", json.dumps(meta).encode(), {"step": step})
     return meta
+
+
+def load_checkpoint_meta(root: str, step: Optional[int] = None) -> Dict:
+    """The manifest of a checkpoint (``step=None`` -> latest) WITHOUT
+    decoding the stripe — the host-metadata tier (incl. ``extra``)."""
+    j = Journal(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise CheckpointError(f"no checkpoint in {root}")
+    return json.loads(j.read(f"ckpt_{step:08d}_manifest.json"))
 
 
 def latest_step(root: str) -> Optional[int]:

@@ -1,21 +1,27 @@
-"""Continuous-learning trainer with the Salient Store archival loop.
+"""Continuous-learning trainer with the full Salient Store archival loop.
 
-Per step (Fig. 1's dual-stream dataflow):
+Per step (Fig. 1's dual-stream dataflow, now closed into a cycle):
   1. ingest a clip batch per stream (placement engine decides which storage
      shard owns each stream — Table 2 load balancing);
   2. run the frozen backbone ONCE: its features feed both exemplar selection
      (k-means++ novelty -> train-or-archive) and the codec (compute reuse);
-  3. novel samples -> codec training step (Alg. 2);
-  4. known samples -> archive ingest: layered-codec encode, then the GOP
-     joins the multi-stream ``StripeCoalescer`` — ragged GOPs from many
-     cameras are bucketed into full stripes so one fused seal launch (per
-     mesh shard, when a storage mesh is attached) covers S GOPs instead of
-     one launch each; completed stripes are sealed + parity-coded and
-     journal-committed;
-  5. heartbeat the straggler monitor; rebalance placement when flagged;
-  6. periodic checkpoint (pending stripes drain first; the checkpoint itself
-     runs compressed+sealed+parity through the same fused kernel,
-     train/checkpoint).
+  3. REPLAY: every ``replay_every`` steps the trainer queries the salience
+     catalog for the most-novel archived GOPs (``plan_retrieval`` against
+     the current centroids, byte-budgeted), restores ONLY the planned shard
+     subsets (degraded parity reads when a shard's CSD is flagged dead),
+     and folds the decoded GOPs into the training batch — the archive
+     participates in learning instead of being write-only;
+  4. novel samples + replayed exemplars -> codec training step (Alg. 2);
+  5. known samples -> archive ingest: layered-codec encode, then the GOP
+     joins the multi-stream ``StripeCoalescer``; completed stripes are
+     sealed + parity-coded, journal-committed (bodies, parity AND the
+     replicated manifest record), and indexed into the ``StripeCatalog``
+     with the GOP's pooled feature + novelty (descriptors are computed
+     pre-seal, so later queries never decode a payload);
+  6. heartbeat the straggler monitor; rebalance placement when flagged and
+     remember dead shards so the next replay plans degraded reads;
+  7. periodic checkpoint (pending stripes drain first; exemplar centroids
+     ride in the checkpoint meta so novelty scoring survives a restart).
 
 Everything is pure JAX + the core modules; the same loop drives the LM path
 through ``lm_train_step`` (distributed/steps.py) with codec-based gradient
@@ -24,6 +30,7 @@ compression as an option.
 
 from __future__ import annotations
 
+import json
 import re
 import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -32,8 +39,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.archival.catalog import StripeCatalog, gop_descriptors
 from repro.core.archival.exemplar import select_exemplars
-from repro.core.archival.pipeline import ArchiveConfig, encode_gop_payload
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    ArchivedBlock,
+    StripeArchive,
+    encode_gop_payload,
+    restore_stripe,
+    stripe_manifests,
+    stripe_manifests_from_json,
+    stripe_manifests_to_json,
+)
 from repro.core.codec.feature_extractor import extract_features
 from repro.core.codec.layered_codec import CodecConfig, init_codec, psnr
 from repro.core.codec.training import (
@@ -42,11 +59,18 @@ from repro.core.codec.training import (
     init_codec_trainer,
 )
 from repro.core.crypto import rlwe
+from repro.core.crypto.hybrid import SealedBlock
 from repro.core.csd.failure import Journal, StragglerMonitor
 from repro.core.csd.placement import Placement, balance_streams, rebalance
+from repro.core.csd.retrieval import ReadPlan, plan_retrieval
 from repro.data.video import VideoStream, render_clip
 from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
-from repro.train.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.train.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    load_checkpoint_meta,
+    save_checkpoint,
+)
 
 __all__ = ["SalientTrainer", "TrainerConfig", "StepReport"]
 
@@ -60,6 +84,12 @@ class TrainerConfig(NamedTuple):
     n_train_exemplars: int = 2
     checkpoint_every: int = 5
     parity: str = "raid6"
+    # replay: every N steps pull the top-k most-novel archived GOPs (within
+    # the byte budget) back through the retrieval planner into the batch;
+    # replay_every=0 disables the stage
+    replay_every: int = 2
+    replay_k: int = 2
+    replay_budget_bytes: int = 1 << 20
 
 
 class StepReport(NamedTuple):
@@ -72,6 +102,10 @@ class StepReport(NamedTuple):
     rebalanced: bool
     stripes_sealed: int = 0  # fused launches this step (coalesced stripes)
     pending_gops: int = 0  # encoded GOPs still waiting for stripe-mates
+    replayed_gops: int = 0  # archived GOPs pulled back into the batch
+    replay_read_bytes: int = 0  # sealed bytes the retrieval plan touched
+    replay_full_bytes: int = 0  # no-index baseline (whole catalog restore)
+    replay_degraded: int = 0  # replayed GOPs that needed a parity rebuild
 
 
 class SalientTrainer:
@@ -107,6 +141,12 @@ class SalientTrainer:
         self.monitor = StragglerMonitor(cfg.n_shards)
         self.journal = Journal(workdir)
         self.coalescer = StripeCoalescer(cfg.n_shards)
+        # salience index over every sealed stripe; rebuilt from the journal
+        # on restart so old archives stay queryable
+        self.catalog = StripeCatalog(self.journal)
+        self.catalog.load()
+        self._stripes: Dict[str, StripeArchive] = {}  # hot in-memory bodies
+        self._dead_shards: List[int] = []  # monitor-flagged, for replay plans
         self._archive_key = jax.random.PRNGKey(seed * 31 + 7)
         # resume the stripe sequence from the journal: a restart must not
         # overwrite committed stripes or re-derive their key/nonce material
@@ -142,10 +182,23 @@ class SalientTrainer:
         self.trainable = state["trainable"]
         self.opt_state = state["opt"]
         self.step = int(state["step"])
+        # exemplar centroids ride in the checkpoint meta: novelty scoring
+        # (and catalog queries) resume against the learned distribution
+        # instead of re-fitting it from scratch
+        cents = load_checkpoint_meta(self.workdir, st).get("extra", {}).get(
+            "centroids"
+        )
+        if cents is not None:
+            self.known_centroids = jnp.asarray(cents, jnp.float32)
 
     def checkpoint(self):
         # drain pending ragged stripes first so a restart loses no GOP
         self._seal_and_commit(self.coalescer.flush())
+        extra = {}
+        if self.known_centroids is not None:
+            extra["centroids"] = np.asarray(
+                self.known_centroids, np.float32
+            ).tolist()
         save_checkpoint(
             self.workdir,
             self.step,
@@ -156,12 +209,15 @@ class SalientTrainer:
             },
             n_shards=self.cfg.n_shards,
             parity=self.cfg.parity,
+            extra_meta=extra,
         )
 
     # ----------------------------------------------------------- archival
     def _seal_and_commit(self, stripes) -> Tuple[int, int]:
         """Seal coalesced stripes (one fused launch each, sharded over the
-        storage mesh when attached) and journal-commit bodies + parity.
+        storage mesh when attached), journal-commit bodies + parity + the
+        replicated manifest record, and index the stripe into the salience
+        catalog so retrieval plans can find its GOPs.
 
         Returns (GOPs sealed, sealed bytes).
         """
@@ -192,6 +248,16 @@ class SalientTrainer:
                     ],
                 },
             )
+            # replicated metadata tier: KEM polys, nonces and the packing
+            # manifest, so a restarted trainer (or a degraded read) can
+            # rebuild and decode this stripe from the journal alone
+            self.journal.commit(
+                rec_name + ".manifest.json",
+                json.dumps(
+                    stripe_manifests_to_json(stripe_manifests(stripe))
+                ).encode(),
+                {"step": self.step, "kind": "stripe_manifest"},
+            )
             if stripe.parity is not None:
                 # persist P/Q so shard loss in the .bin is actually recoverable
                 p_u8 = np.asarray(stripe.parity["p"])
@@ -207,11 +273,129 @@ class SalientTrainer:
                         "has_q": q_u8 is not None,
                     },
                 )
+            # salience index: pooled feature + novelty recorded PRE-seal by
+            # the exemplar stage rode along in the coalescer meta
+            self.catalog.add_stripe(
+                rec_name,
+                stripe,
+                gop_descriptors(cs.gops, self.catalog.feature_dim),
+            )
+            self._cache_stripe(rec_name, stripe)
             n_gops += len(stripe.blocks)
             total_bytes += sum(
                 int(b.sealed.body.size) * 4 for b in stripe.blocks
             )
         return n_gops, total_bytes
+
+    # ---------------------------------------------------------- retrieval
+    # sealed bodies are already durable in the journal; the in-memory copy
+    # is only a hot cache for replay, so it stays bounded
+    STRIPE_CACHE_MAX = 16
+
+    def _cache_stripe(self, rec_name: str, stripe: StripeArchive) -> None:
+        self._stripes[rec_name] = stripe
+        while len(self._stripes) > self.STRIPE_CACHE_MAX:
+            self._stripes.pop(next(iter(self._stripes)))  # oldest first
+
+    def _load_stripe(
+        self, rec_name: str, recs: Optional[Dict[str, Dict]] = None
+    ) -> StripeArchive:
+        """Rebuild a sealed stripe from the journal (restart path): body
+        words from the .bin record, KEM/nonce/manifest from the replicated
+        manifest record, parity strips from the .parity.bin record.
+        ``recs``: pre-scanned ``{name: record}`` journal map, so one replay
+        round doing many loads scans the journal once."""
+        if recs is None:
+            recs = {r["name"]: r for r in self.journal.replay()}
+        body_rec = recs.get(rec_name + ".bin")
+        if body_rec is None:
+            raise KeyError(f"stripe {rec_name} not in journal")
+        mfs = stripe_manifests_from_json(
+            json.loads(self.journal.read(rec_name + ".manifest.json"))
+        )
+        words = np.frombuffer(self.journal.read(rec_name + ".bin"), "<u4")
+        blocks, off = [], 0
+        for m, n in zip(mfs, body_rec["meta"]["body_words"]):
+            blocks.append(
+                ArchivedBlock(
+                    SealedBlock(
+                        m["kem_c1"], m["kem_c2"], m["nonce"],
+                        jnp.asarray(words[off : off + n].copy()), int(n),
+                    ),
+                    m["manifest"],
+                )
+            )
+            off += int(n)
+        parity = None
+        prec = recs.get(rec_name + ".parity.bin")
+        if prec is not None:
+            raw = np.frombuffer(
+                self.journal.read(rec_name + ".parity.bin"), np.uint8
+            )
+            p_len = int(prec["meta"]["p_len"])
+            parity = {
+                "p": jnp.asarray(raw[:p_len]),
+                "pad_to": int(prec["meta"]["pad_to"]),
+            }
+            if prec["meta"].get("has_q"):
+                parity["q"] = jnp.asarray(raw[p_len:])
+        return StripeArchive(blocks, parity)
+
+    def _get_stripe(
+        self, rec_name: str, recs: Optional[Dict[str, Dict]] = None
+    ) -> StripeArchive:
+        stripe = self._stripes.get(rec_name)
+        if stripe is None:
+            stripe = self._load_stripe(rec_name, recs)
+            self._cache_stripe(rec_name, stripe)
+        return stripe
+
+    def _replay_from_archive(self) -> Tuple[List[jax.Array], Optional[ReadPlan]]:
+        """Query the catalog for the most-novel archived GOPs and restore
+        ONLY the shard subsets the plan names (degraded parity reads for
+        shards whose CSD the monitor flagged dead)."""
+        if not len(self.catalog):
+            return [], None
+        plan = plan_retrieval(
+            self.catalog,
+            self.known_centroids,
+            budget_bytes=self.cfg.replay_budget_bytes,
+            k=self.cfg.replay_k,
+            dead_shards=self._dead_shards,
+            parity_shards={"raid6": 2, "raid5": 1, "none": 0}[
+                self.archive_cfg.parity
+            ],
+        )
+        params = self._params()
+        clips: List[jax.Array] = []
+        recs = None
+        if any(n not in self._stripes for n in plan.shards_by_stripe):
+            # one journal scan shared by every cold stripe load this round
+            recs = {r["name"]: r for r in self.journal.replay()}
+        for rec_name in sorted(plan.shards_by_stripe):
+            shard_ids = plan.shards_by_stripe[rec_name]
+            stripe = self._get_stripe(rec_name, recs)
+            manifests = stripe_manifests(stripe)
+            dead = [
+                i for i in self._dead_shards if 0 <= i < len(stripe.blocks)
+            ]
+            if dead and stripe.parity is not None:
+                # the flagged CSDs' bodies are unreachable: null them out so
+                # the read is truly degraded.  The planner already refuses
+                # degraded reads beyond the parity tolerance, so any WANTED
+                # dead shard here is rebuildable; unwanted holes never
+                # trigger a rebuild at all.
+                holes = list(stripe.blocks)
+                for i in dead:
+                    holes[i] = None
+                stripe = StripeArchive(holes, stripe.parity)
+            clips.extend(
+                restore_stripe(
+                    params, self.secret, stripe, self.archive_cfg,
+                    shards=shard_ids, manifests=manifests,
+                )
+            )
+        return clips, plan
 
     # -------------------------------------------------------------- step
     def run_step(self, shard_times: Optional[List[float]] = None) -> StepReport:
@@ -243,18 +427,39 @@ class SalientTrainer:
         train_ids = [int(i) for i in np.asarray(split.train_idx)]
         archive_ids = [int(i) for i in np.asarray(split.archive_idx)]
 
-        # 3. codec training on the novel clips (Alg. 2)
-        train_clips = jnp.stack(
-            [clips[self.streams[i].stream_id] for i in train_ids], axis=1
-        )  # (T, B, H, W, 3)
+        # 3. replay: pull the most-novel archived GOPs (vs the CURRENT
+        # centroids) back through the retrieval planner — only the planned
+        # shard subsets are restored, so replay moves catalog-priced bytes,
+        # not whole stripes
+        replay_clips: List[jax.Array] = []
+        plan = None
+        if (
+            cfg.replay_every
+            and self.step % cfg.replay_every == cfg.replay_every - 1
+        ):
+            replay_clips, plan = self._replay_from_archive()
+
+        # 4. codec training on the novel clips + replayed exemplars (Alg. 2)
+        batch = [clips[self.streams[i].stream_id] for i in train_ids]
+        want_shape = batch[0].shape if batch else None
+        n_replayed = 0  # only GOPs that actually joined the batch count
+        for g in replay_clips:
+            g = jnp.squeeze(g, axis=1)  # (T, 1, H, W, 3) -> (T, H, W, 3)
+            # GOPs archived under a different clip geometry can't join this
+            # batch; they were still read, so the byte counters keep them
+            if want_shape is None or g.shape == want_shape:
+                batch.append(g)
+                n_replayed += 1
+        train_clips = jnp.stack(batch, axis=1)  # (T, B, H, W, 3)
         self.trainable, self.opt_state, metrics = codec_train_step(
             self.trainable, self.frozen, self.opt_state, self.train_cfg, train_clips
         )
 
-        # 4. archive ingest: codec-encode the known clips, coalesce ragged
+        # 5. archive ingest: codec-encode the known clips, coalesce ragged
         # GOPs across streams into full stripes; every completed stripe is
         # packed + sealed + parity-coded in ONE fused kernel launch (per
-        # mesh shard when a storage mesh is attached)
+        # mesh shard when a storage mesh is attached) and catalog-indexed
+        # with the exemplar stage's feature/novelty descriptors
         params = self._params()
         recon_psnrs = []
         ready = []
@@ -267,14 +472,19 @@ class SalientTrainer:
             recon_psnrs.append(float(psnr(recons, frames)))
             ready += self.coalescer.add(
                 sid, flat, manifest,
-                meta={"shard": self.placement.assignment[i]},
+                meta={
+                    "shard": self.placement.assignment[i],
+                    "feature": np.asarray(fmat[i], np.float32),
+                    "novelty": float(np.asarray(split.novelty)[i]),
+                },
             )
         n_sealed, total_bytes = self._seal_and_commit(ready)
 
-        # 5. straggler handling
+        # 6. straggler handling (dead shards feed the next replay's plan)
         rebalanced = False
         if shard_times is not None:
             status = self.monitor.update(shard_times)
+            self._dead_shards = list(status.dead)
             if status.stragglers or status.dead:
                 self.placement = rebalance(
                     self.placement,
@@ -283,7 +493,7 @@ class SalientTrainer:
                 )
                 rebalanced = True
 
-        # 6. checkpoint
+        # 7. checkpoint
         self.step += 1
         if self.step % cfg.checkpoint_every == 0:
             self.checkpoint()
@@ -298,4 +508,10 @@ class SalientTrainer:
             rebalanced=rebalanced,
             stripes_sealed=len(ready),
             pending_gops=self.coalescer.n_pending,
+            replayed_gops=n_replayed,
+            replay_read_bytes=plan.bytes_planned if plan else 0,
+            replay_full_bytes=plan.bytes_full_restore if plan else 0,
+            replay_degraded=(
+                sum(1 for r in plan.reads if r.degraded) if plan else 0
+            ),
         )

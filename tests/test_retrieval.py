@@ -1,0 +1,569 @@
+"""Retrieval datapath tests: salience catalog, query planner, shard-subset
+and degraded reads, entropy raw-skip, and the trainer replay loop."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.archival.catalog import StripeCatalog
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    StripeArchive,
+    archive_stripe,
+    recover_stripe,
+    restore_stripe,
+    restore_stripe_payloads,
+    seal_payload_stripe,
+    stripe_manifests,
+    stripe_manifests_from_json,
+    stripe_manifests_to_json,
+)
+from repro.core.codec.layered_codec import CodecConfig, init_codec
+from repro.core.crypto import rlwe
+from repro.core.csd import costmodel as cm
+from repro.core.csd.failure import Journal
+from repro.core.csd.retrieval import plan_retrieval
+from repro.kernels.entropy import ops as eops
+
+CFG = CodecConfig(n_layers=2, latent_ch=4, feat_ch=16, mv_cond_ch=4)
+
+
+def _payload_stripe(seed, lens, cfg=None, peaked=True):
+    """Seal synthetic int8 payloads as one stripe (no neural codec)."""
+    rng = np.random.default_rng(seed)
+    cfg = cfg or ArchiveConfig()
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(seed + 1))
+    flats = []
+    for n in lens:
+        if peaked:
+            x = np.clip(np.round(rng.normal(0, 2.0, n)), -128, 127)
+        else:
+            x = rng.integers(-128, 128, n)
+        flats.append(jnp.asarray(x, jnp.int8))
+    mans = [{"n_i8": int(f.shape[0]), "spec": []} for f in flats]
+    stripe = seal_payload_stripe(
+        pub, flats, mans, jax.random.PRNGKey(seed + 2), cfg
+    )
+    return stripe, flats, sec, cfg
+
+
+def _eq(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------- catalog
+def test_catalog_add_persist_reload(tmp_path):
+    stripe, flats, _, _ = _payload_stripe(0, [4096, 5000, 6100])
+    cat = StripeCatalog(Journal(str(tmp_path)))
+    rng = np.random.default_rng(1)
+    cat.add_stripe(
+        "s0", stripe,
+        [{"stream_id": i, "feature": rng.normal(size=8), "novelty": 0.5 * i}
+         for i in range(3)],
+    )
+    assert len(cat) == 3 and cat.n_stripes == 1
+    assert cat.bytes_indexed == sum(
+        4 * int(b.sealed.n_valid_u32) for b in stripe.blocks
+    )
+    # byte geometry comes from the stripe, not the caller
+    assert cat.entries[1].n_comp == stripe.blocks[1].manifest["entropy"]["n_comp"]
+    # replay from the journal reproduces the index
+    cat2 = StripeCatalog(Journal(str(tmp_path)))
+    assert cat2.load() == 1
+    assert len(cat2) == 3
+    np.testing.assert_allclose(cat2.features(), cat.features())
+    assert [e.novelty for e in cat2.entries] == [0.0, 0.5, 1.0]
+    # duplicate stripe ids are rejected
+    with pytest.raises(ValueError, match="already cataloged"):
+        cat.add_stripe("s0", stripe, [{"feature": np.zeros(8)}] * 3)
+    # descriptor dimension is locked to the catalog's embedding space
+    assert cat.feature_dim == 8
+    with pytest.raises(ValueError, match="dim"):
+        cat.add_stripe("s1", stripe, [{"feature": np.zeros(16)}] * 3)
+
+
+def test_catalog_scores_against_current_centroids():
+    stripe, _, _, _ = _payload_stripe(3, [4096, 4096])
+    cat = StripeCatalog()
+    cat.add_stripe(
+        "s0", stripe,
+        [
+            {"stream_id": 0, "feature": np.zeros(4), "novelty": 9.0},
+            {"stream_id": 1, "feature": np.full(4, 5.0), "novelty": 0.1},
+        ],
+    )
+    # without centroids: archive-time novelty wins
+    assert cat.topk(1)[0].shard == 0
+    # with centroids at the origin: the far feature is the novel one
+    assert cat.topk(1, centroids=np.zeros((1, 4)))[0].shard == 1
+    scores = cat.score(np.zeros((1, 4)))
+    np.testing.assert_allclose(scores, [0.0, np.sqrt(4 * 25.0)], atol=1e-5)
+
+
+# ----------------------------------------------------------------- planner
+def _three_stripe_catalog(tmp_path=None):
+    cat = StripeCatalog()
+    stripes = {}
+    rng = np.random.default_rng(7)
+    for t in range(3):
+        stripe, flats, sec, cfg = _payload_stripe(10 + t, [4096 + 512 * s for s in range(4)])
+        descs = [
+            {"stream_id": s, "feature": rng.normal(3.0 * t, 0.05, 8)}
+            for s in range(4)
+        ]
+        cat.add_stripe(f"st{t}", stripe, descs)
+        stripes[f"st{t}"] = (stripe, flats, sec, cfg)
+    return cat, stripes
+
+
+def test_plan_ranks_by_novelty_and_respects_budget():
+    cat, _ = _three_stripe_catalog()
+    # known distribution = clusters 0 and 1 -> stripe st2 is the novel one
+    cents = np.stack([np.zeros(8), np.full(8, 3.0)]).astype(np.float32)
+    plan = plan_retrieval(cat, cents, k=4)
+    assert {r.stripe_id for r in plan.reads} == {"st2"}
+    assert plan.shards_by_stripe == {"st2": [0, 1, 2, 3]}
+    assert plan.bytes_planned == sum(r.body_bytes for r in plan.reads)
+    assert plan.bytes_full_restore == cat.bytes_indexed
+    assert plan.bytes_planned < plan.bytes_full_restore / 2
+    # budget cuts the tail, most-novel reads survive
+    tight = plan_retrieval(
+        cat, cents, budget_bytes=plan.reads[0].read_bytes + 1, k=4
+    )
+    assert len(tight.reads) == 1 and tight.skipped == 3
+    assert tight.reads[0].novelty >= plan.reads[-1].novelty
+    # both decode placements are priced; the plan picks the cheaper
+    assert set(plan.costs) == {"host", "csd"}
+    assert (
+        plan.costs[plan.placement].latency_s
+        == min(c.latency_s for c in plan.costs.values())
+    )
+
+
+def test_plan_bills_degraded_reads():
+    cat, _ = _three_stripe_catalog()
+    cents = np.stack([np.zeros(8), np.full(8, 3.0)]).astype(np.float32)
+    normal = plan_retrieval(cat, cents, k=1)
+    dead = normal.reads[0].shard
+    deg = plan_retrieval(cat, cents, k=1, dead_shards=[dead])
+    assert deg.reads[0].degraded
+    # rebuild reads the surviving peers + parity: strictly more bytes
+    assert deg.bytes_planned > normal.bytes_planned
+    # ... and exactly them: the dead body itself is unreadable, parity is
+    # sized like the widest body (RAID-6: two strips)
+    sid = deg.reads[0].stripe_id
+    peers = [e for e in cat.entries if e.stripe_id == sid and e.shard != dead]
+    widest = max(e.body_bytes for e in cat.entries if e.stripe_id == sid)
+    assert deg.bytes_planned == sum(e.body_bytes for e in peers) + 2 * widest
+    # a second read from the same stripe after the rebuild is free
+    deg2 = plan_retrieval(cat, cents, k=2, dead_shards=[dead])
+    same_stripe = [r for r in deg2.reads if r.stripe_id == deg2.reads[0].stripe_id]
+    assert len(same_stripe) >= 2 and same_stripe[1].read_bytes == 0
+    # two dead shards in one stripe (both wanted): one rebuild
+    # reconstructs both, parity billed once
+    other = plan_retrieval(cat, cents, k=2).reads[1].shard
+    deg3 = plan_retrieval(cat, cents, k=2, dead_shards=[dead, other])
+    dd = [r for r in deg3.reads if r.degraded]
+    assert len(dd) == 2 and dd[1].read_bytes == 0
+    surv = [e for e in peers if e.shard != other]
+    assert deg3.bytes_planned == sum(e.body_bytes for e in surv) + 2 * widest
+    # more dead shards than parity strips: the rebuild cannot happen, so
+    # the read is dropped from the plan instead of billed as a promise
+    deg4 = plan_retrieval(
+        cat, cents, k=2, dead_shards=[dead, other], parity_shards=1
+    )
+    assert not any(r.degraded for r in deg4.reads)
+    assert deg4.skipped >= 2
+
+
+# ------------------------------------------------------- shard-subset reads
+def test_partial_read_bit_identical_and_ordered():
+    stripe, flats, sec, cfg = _payload_stripe(20, [5000, 4096, 7777, 6000])
+    part, blocks = restore_stripe_payloads(sec, stripe, cfg, shards=[2, 0])
+    assert _eq(part[0], flats[2]) and _eq(part[1], flats[0])
+    assert [int(b.sealed.n_valid_u32) for b in blocks] == [
+        int(stripe.blocks[2].sealed.n_valid_u32),
+        int(stripe.blocks[0].sealed.n_valid_u32),
+    ]
+
+
+def test_partial_read_rejects_bad_subsets():
+    stripe, _, sec, cfg = _payload_stripe(21, [4096, 4096])
+    with pytest.raises(ValueError, match="at least one"):
+        restore_stripe_payloads(sec, stripe, cfg, shards=[])
+    with pytest.raises(ValueError, match="out of range"):
+        restore_stripe_payloads(sec, stripe, cfg, shards=[2])
+    with pytest.raises(ValueError, match="duplicate"):
+        restore_stripe_payloads(sec, stripe, cfg, shards=[1, 1])
+
+
+def test_degraded_read_single_and_double_loss():
+    stripe, flats, sec, cfg = _payload_stripe(22, [5000, 4096, 7777, 6000])
+    mfs = stripe_manifests(stripe)
+    # one wanted shard missing
+    holes = list(stripe.blocks)
+    holes[2] = None
+    got, _ = restore_stripe_payloads(
+        sec, StripeArchive(holes, stripe.parity), cfg,
+        shards=[2], manifests=mfs,
+    )
+    assert _eq(got[0], flats[2])
+    # RAID-6 double loss, both wanted
+    holes = [None, stripe.blocks[1], None, stripe.blocks[3]]
+    got, _ = restore_stripe_payloads(
+        sec, StripeArchive(holes, stripe.parity), cfg,
+        shards=[0, 2], manifests=mfs,
+    )
+    assert _eq(got[0], flats[0]) and _eq(got[1], flats[2])
+    # missing shard that is NOT wanted requires no rebuild
+    holes = [stripe.blocks[0], None, stripe.blocks[2], stripe.blocks[3]]
+    got, _ = restore_stripe_payloads(
+        sec, StripeArchive(holes, stripe.parity), cfg, shards=[0, 3]
+    )
+    assert _eq(got[0], flats[0]) and _eq(got[1], flats[3])
+    # degraded read without the replicated metadata fails loudly
+    holes = [None] + list(stripe.blocks[1:])
+    with pytest.raises(ValueError, match="replicated metadata"):
+        restore_stripe_payloads(
+            sec, StripeArchive(holes, stripe.parity), cfg, shards=[0]
+        )
+
+
+def test_manifest_json_roundtrip_enables_degraded_read():
+    """The journaled (JSON) replicated-metadata tier must be enough to
+    rebuild and decode a lost shard after a restart."""
+    stripe, flats, sec, cfg = _payload_stripe(23, [4444, 6000, 5000])
+    mfs = stripe_manifests_from_json(
+        json.loads(json.dumps(stripe_manifests_to_json(stripe_manifests(stripe))))
+    )
+    holes = [stripe.blocks[0], None, stripe.blocks[2]]
+    got, _ = restore_stripe_payloads(
+        sec, StripeArchive(holes, stripe.parity), cfg,
+        shards=[1], manifests=mfs,
+    )
+    assert _eq(got[0], flats[1])
+
+
+# ------------------------------ recover_stripe on entropy-coded stripes
+def test_recover_stripe_raid6_double_loss_on_rans_stripe():
+    """The original recover tests predate the entropy stage: this one loses
+    two shards of an rANS-coded stripe (one of them raw-skip flagged) and
+    requires bit-exact payloads back through the full restore path."""
+    # shard 1 is incompressible -> raw-skip; shards 0, 2, 3 rANS-coded
+    rng = np.random.default_rng(30)
+    lens = [6000, 5000, 7777, 4096]
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(31))
+    cfg = ArchiveConfig()
+    flats = [
+        jnp.asarray(
+            rng.integers(-128, 128, lens[i])
+            if i == 1
+            else np.clip(np.round(rng.normal(0, 2.0, lens[i])), -128, 127),
+            jnp.int8,
+        )
+        for i in range(4)
+    ]
+    mans = [{"n_i8": int(f.shape[0]), "spec": []} for f in flats]
+    stripe = seal_payload_stripe(pub, flats, mans, jax.random.PRNGKey(32), cfg)
+    assert stripe.blocks[1].manifest["entropy"].get("raw") is True
+    assert not stripe.blocks[0].manifest["entropy"].get("raw")
+    mfs = stripe_manifests(stripe)
+    lens_w = [m["n_words"] for m in mfs]
+    holes = [None, stripe.blocks[1], None, stripe.blocks[3]]
+    rebuilt = recover_stripe(holes, stripe.parity, [0, 2], mfs, lens_w)
+    got, _ = restore_stripe_payloads(
+        sec, StripeArchive(rebuilt, stripe.parity), cfg
+    )
+    for g, f in zip(got, flats):
+        assert _eq(g, f)
+
+
+# ---------------------------------------------------------------- raw-skip
+def test_raw_skip_flagged_and_roundtrips():
+    rng = np.random.default_rng(40)
+    comp = jnp.asarray(
+        np.clip(np.round(rng.normal(0, 2.0, 8000)), -128, 127), jnp.int8
+    )
+    incomp = jnp.asarray(rng.integers(-128, 128, 8000), jnp.int8)
+    tiny = jnp.asarray(rng.integers(-128, 128, 64), jnp.int8)
+    comps, metas = eops.encode_payloads([comp, incomp, tiny])
+    assert not metas[0].get("raw")
+    assert metas[1]["raw"] and metas[1]["n_comp"] == metas[1]["n_raw"]
+    assert metas[2]["raw"]  # smaller than the stream header
+    assert int(comps[1].shape[0]) == 8000
+    back = eops.decode_payloads(comps, metas)
+    for b, p in zip(back, [comp, incomp, tiny]):
+        assert _eq(b, p)
+    # pallas and staged ref agree bit-for-bit, flags included
+    comps_r, metas_r = eops.encode_payloads(
+        [comp, incomp, tiny], use_pallas=False
+    )
+    assert metas == metas_r
+    for a, b in zip(comps, comps_r):
+        assert _eq(a, b)
+    # an all-raw stripe decodes without any coded shard
+    c2, m2 = eops.encode_payloads([incomp, tiny])
+    assert all(m["raw"] for m in m2)
+    for b, p in zip(eops.decode_payloads(c2, m2), [incomp, tiny]):
+        assert _eq(b, p)
+
+
+def test_raw_skip_corrupt_meta_rejected():
+    rng = np.random.default_rng(41)
+    incomp = jnp.asarray(rng.integers(-128, 128, 4096), jnp.int8)
+    comps, metas = eops.encode_payloads([incomp])
+    bad = [dict(metas[0], n_comp=4095)]
+    with pytest.raises(ValueError, match="manifest says"):
+        eops.decode_payloads(comps, bad)
+    bad = [dict(metas[0], n_raw=4000)]
+    with pytest.raises(ValueError, match="raw-skip"):
+        eops.decode_payloads(comps, bad)
+
+
+def test_raw_skip_through_seal_and_zlib_host_codec():
+    # rans path through the fused seal datapath
+    stripe, flats, sec, cfg = _payload_stripe(
+        42, [6000, 6000], peaked=False
+    )
+    assert all(b.manifest["entropy"]["raw"] for b in stripe.blocks)
+    got, _ = restore_stripe_payloads(sec, stripe, cfg)
+    for g, f in zip(got, flats):
+        assert _eq(g, f)
+    # host-codec path flags raw the same way
+    cfg_z = ArchiveConfig(codec_name="zlib")
+    stripe_z, flats_z, sec_z, _ = _payload_stripe(
+        43, [6000, 6000], cfg=cfg_z, peaked=False
+    )
+    assert all(b.manifest["entropy"]["raw"] for b in stripe_z.blocks)
+    got_z, _ = restore_stripe_payloads(sec_z, stripe_z, cfg_z)
+    for g, f in zip(got_z, flats_z):
+        assert _eq(g, f)
+
+
+# ------------------------------------------------------------ sharded reads
+@pytest.mark.parametrize("d", [2, 4])
+def test_sharded_subset_and_rawskip_match_single_device(d):
+    if jax.device_count() < d:
+        pytest.skip(
+            f"need {d} devices, have {jax.device_count()} "
+            "(run with XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    from repro.distributed.archival import restore_stripe_sharded
+
+    mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+    rng = np.random.default_rng(50)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(51))
+    cfg = ArchiveConfig()
+    # mix compressible and raw-skip shards so the sharded decode path has
+    # to honor the manifest flag too
+    flats = [
+        jnp.asarray(
+            rng.integers(-128, 128, 5000)
+            if s % 2
+            else np.clip(np.round(rng.normal(0, 2.0, 5000 + 64 * s)), -128, 127),
+            jnp.int8,
+        )
+        for s in range(4)
+    ]
+    mans = [{"n_i8": int(f.shape[0]), "spec": []} for f in flats]
+    stripe = seal_payload_stripe(pub, flats, mans, jax.random.PRNGKey(52), cfg)
+    codec_params = init_codec(jax.random.PRNGKey(0), CFG)
+
+    single, _ = restore_stripe_payloads(sec, stripe, cfg, shards=[1, 3])
+    from repro.distributed.archival import (
+        entropy_decode_sharded,
+        unseal_stripe_sharded,
+    )
+    import functools
+
+    shard_par, _ = restore_stripe_payloads(
+        sec, stripe, cfg, shards=[1, 3],
+        unseal_fn=functools.partial(unseal_stripe_sharded, mesh=mesh),
+        entropy_decode_fn=functools.partial(entropy_decode_sharded, mesh=mesh),
+    )
+    for a, b in zip(single, shard_par):
+        assert _eq(a, b)
+    for a, want in zip(shard_par, [flats[1], flats[3]]):
+        assert _eq(a, want)
+
+
+# -------------------------------------------------------------- cost model
+def test_retrieval_placement_tradeoff():
+    sys = cm.SystemModel()
+    comp, raw = 1e8, 2.5e8
+    host = cm.retrieval_placement_cost(sys, comp, raw, "host")
+    csd = cm.retrieval_placement_cost(sys, comp, raw, "csd")
+    # host decode moves the compressed stream; CSD decode the expanded one
+    assert host.moved_bytes == comp and csd.moved_bytes == raw
+    # the CSD kernel outruns the host CPU on decode compute
+    assert raw / (sys.csd_rate_GBps * 1e9) < raw / (sys.cpu_rate_GBps * 1e9)
+    best, costs = cm.best_retrieval_placement(sys, comp, raw)
+    assert best in costs
+    assert costs[best].latency_s == min(c.latency_s for c in costs.values())
+    with pytest.raises(ValueError):
+        cm.retrieval_placement_cost(sys, comp, raw, "moon")
+
+
+# ------------------------------------------------- end-to-end (real codec)
+def test_codec_partial_restore_matches_full_and_degraded(tmp_path):
+    """Acceptance: top-k retrieval restores only the planned shards, the
+    GOPs are bit-identical to a full restore, and one dropped shard still
+    succeeds via the parity rebuild."""
+    cfg = ArchiveConfig(codec=CFG)
+    codec_params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(1))
+
+    from repro.data.video import VideoStream, render_clip
+
+    frames = [
+        render_clip(VideoStream(i, 100 + i, 32, 32, 30.0, 64), 0, 2)[:, None]
+        for i in range(3)
+    ]
+    stripe, _ = archive_stripe(
+        codec_params, pub, frames, jax.random.PRNGKey(2), cfg
+    )
+    cat = StripeCatalog(Journal(str(tmp_path)))
+    feats = np.stack([np.zeros(4), np.full(4, 6.0), np.zeros(4)])
+    cat.add_stripe(
+        "s0", stripe,
+        [{"stream_id": i, "feature": feats[i]} for i in range(3)],
+    )
+    plan = plan_retrieval(cat, np.zeros((1, 4), np.float32), k=1)
+    assert plan.shards_by_stripe == {"s0": [1]}
+    assert plan.bytes_planned == 4 * int(stripe.blocks[1].sealed.n_valid_u32)
+
+    full = restore_stripe(codec_params, sec, stripe, cfg)
+    part = restore_stripe(
+        codec_params, sec, stripe, cfg, shards=plan.shards_by_stripe["s0"]
+    )
+    assert len(part) == 1
+    assert _eq(part[0], full[1])
+
+    # degraded: the planned shard's body is gone; parity rebuild, same GOP
+    holes = list(stripe.blocks)
+    holes[1] = None
+    deg = restore_stripe(
+        codec_params, sec, StripeArchive(holes, stripe.parity), cfg,
+        shards=[1], manifests=stripe_manifests(stripe),
+    )
+    assert _eq(deg[0], full[1])
+
+
+# ------------------------------------------------------------ trainer loop
+def test_trainer_replay_consumes_planner_output(tmp_path):
+    from repro.data.video import make_streams
+    from repro.train.trainer import SalientTrainer, TrainerConfig
+
+    streams = make_streams(4, height=32, width=32)
+    cfg = TrainerConfig(
+        n_shards=2, checkpoint_every=4, replay_every=2, replay_k=2,
+    )
+    tr = SalientTrainer(streams, str(tmp_path), cfg)
+    reports = [tr.run_step(shard_times=[1.0, 1.0]) for _ in range(4)]
+    assert len(tr.catalog) > 0
+    replayed = [r for r in reports if r.replayed_gops]
+    assert replayed, "replay stage never fired"
+    for r in replayed:
+        assert r.replay_read_bytes <= r.replay_full_bytes
+    # subset reads: by the last replay the catalog outgrew the budgeted plan
+    assert replayed[-1].replay_read_bytes < replayed[-1].replay_full_bytes
+
+    # restart: centroids come back from the checkpoint meta, the catalog
+    # from the journal, and replay still works (stripes reload from disk)
+    tr2 = SalientTrainer(streams, str(tmp_path), cfg._replace(replay_every=1))
+    assert tr2.known_centroids is not None
+    assert len(tr2.catalog) == len(tr.catalog)
+    assert tr2._stripes == {}  # nothing hot in memory yet
+    rep = tr2.run_step(shard_times=[1.0, 1.0])
+    assert rep.replayed_gops > 0
+    assert rep.replay_read_bytes > 0
+
+
+def test_trainer_replay_degraded_on_dead_shard(tmp_path):
+    from repro.data.video import make_streams
+    from repro.train.trainer import SalientTrainer, TrainerConfig
+
+    streams = make_streams(6, height=32, width=32)
+    cfg = TrainerConfig(
+        n_shards=4, checkpoint_every=10, replay_every=1, replay_k=2,
+    )
+    tr = SalientTrainer(streams, str(tmp_path), cfg)
+    for _ in range(2):  # seed the archive (stripes of 4 need two steps)
+        tr.run_step(shard_times=[1.0, 1.0, 1.0, 1.0])
+    assert len(tr.catalog) > 0
+    # shard 0's CSD goes dead (>10x the median): the monitor flags it and
+    # the next replay must plan (and execute) a parity-degraded read
+    rep = None
+    for _ in range(4):
+        rep = tr.run_step(shard_times=[60.0, 1.0, 1.0, 1.0])
+        if rep.replay_degraded:
+            break
+    assert rep.replay_degraded > 0
+    assert rep.replayed_gops > 0
+
+
+def test_checkpoint_extra_meta_roundtrip(tmp_path):
+    from repro.train.checkpoint import (
+        load_checkpoint_meta,
+        save_checkpoint,
+    )
+
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    save_checkpoint(
+        str(tmp_path), 3, state, n_shards=2,
+        extra_meta={"centroids": [[1.0, 2.0]]},
+    )
+    meta = load_checkpoint_meta(str(tmp_path))
+    assert meta["step"] == 3
+    assert meta["extra"]["centroids"] == [[1.0, 2.0]]
+
+
+# ---------------------------------------------------------- serving ingest
+def test_serving_ingest_catalogs_plans_and_restarts(tmp_path):
+    from repro.serving.engine import ArchiveIngest, IngestConfig
+
+    cfg = ArchiveConfig(codec=CFG)
+    codec_params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, _ = rlwe.keygen(jax.random.PRNGKey(1))
+    icfg = IngestConfig(n_shards=2, archive=cfg, feature_dim=4)
+    ing = ArchiveIngest(codec_params, pub, icfg, journal=Journal(str(tmp_path)))
+    from repro.data.video import VideoStream, render_clip
+
+    def _frames(i):
+        return render_clip(
+            VideoStream(i, 200 + i, 32, 32, 30.0, 64), 0, 2
+        )[:, None]
+
+    for i in range(4):
+        ing.submit(
+            i, _frames(i),
+            feature=np.full(4, 5.0 if i == 3 else 0.0),
+            novelty=float(i == 3),
+        )
+    ing.flush()
+    s = ing.stats()
+    assert s["catalog_gops"] == 4
+    assert s["catalog_bytes"] > 0
+    plan = ing.query(np.zeros((1, 4), np.float32), k=1)
+    assert plan.reads[0].stream_id == 3
+    s = ing.stats()
+    assert s["plans_served"] == 1
+    assert 0 < s["retrieval_bytes_ratio"] < 1
+
+    # restart on the same journal: the old index is visible again and the
+    # stripe id sequence resumes past it (no catalog record overwrite)
+    ing2 = ArchiveIngest(
+        codec_params, pub, icfg, journal=Journal(str(tmp_path))
+    )
+    assert ing2.stats()["catalog_gops"] == 4
+    old_ids = {e.stripe_id for e in ing2.catalog.entries}
+    for i in range(2):
+        ing2.submit(i, _frames(i))
+    ing2.flush()
+    assert ing2.stats()["catalog_gops"] == 6
+    new_ids = {e.stripe_id for e in ing2.catalog.entries} - old_ids
+    assert new_ids and new_ids.isdisjoint(old_ids)
