@@ -329,7 +329,7 @@ def entropy_coder() -> List[Row]:
     """
     from repro.common import compress as host_entropy
     from repro.kernels.entropy import ops as eops
-    from repro.kernels.entropy.rans import N_LANES
+    from repro.kernels.entropy.rans import N_GROUPS, N_LANES, STREAM_VERSION
 
     rng = np.random.default_rng(4)
     S, n = 4, 64 * 1024
@@ -349,6 +349,14 @@ def entropy_coder() -> List[Row]:
     ok = metas == metas_r and all(
         np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(comp, comp_r)
+    )
+    # the precomputed-reciprocal division strategies (what Mosaic runs —
+    # no integer divide on TPU) must produce bit-identical streams
+    comp_rcp, metas_rcp = eops.encode_payloads(payloads, division="rcp32")
+    us_rcp = timeit(lambda: eops.encode_payloads(payloads, division="rcp32"))
+    ok = ok and metas_rcp == metas and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(comp_rcp, comp)
     )
     back = eops.decode_payloads(comp, metas, use_pallas=True)
     ok = ok and all(
@@ -375,19 +383,31 @@ def entropy_coder() -> List[Row]:
     blobs = [np.asarray(p, np.int8).tobytes() for p in payloads]
     us_h = timeit(lambda: [host_entropy.compress(b) for b in blobs])
     host_comp = sum(len(host_entropy.compress(b)) for b in blobs)
+    vs_host = us_h / us_k if us_k else float("nan")
 
     record_json(
         "entropy_fused",
         us_per_call=us_k,
         us_decode=us_d,
         gbps=_gbps(raw_bytes, us_k),
+        gbps_decode=_gbps(raw_bytes, us_d),
         launches=launches,
         device_count=1,
         exact=ok,
         ratio=t["ratio"],
         lanes=N_LANES,
+        groups=N_GROUPS,
+        stream_version=STREAM_VERSION,
+        vs_host_speed=vs_host,
         host_entropy_bytes=t["host_entropy_bytes"],
         host_bytes_eliminated=t["host_bytes_eliminated"],
+    )
+    record_json(
+        "entropy_fused_recip",
+        us_per_call=us_rcp,
+        gbps=_gbps(raw_bytes, us_rcp),
+        device_count=1,
+        exact=ok,
     )
     record_json(
         "entropy_staged_ref",
@@ -407,13 +427,20 @@ def entropy_coder() -> List[Row]:
     return [
         ("kernel/entropy_rans_4x64KiB", us_k,
          f"exact={ok} launches={launches} ratio={t['ratio']:.2f}x"
-         f" host_entropy_bytes=0 lanes={N_LANES}"),
-        ("kernel/entropy_rans_decode", us_d, "fused decode twin"),
+         f" enc={_gbps(raw_bytes, us_k):.4f}GB/s"
+         f" dec={_gbps(raw_bytes, us_d):.4f}GB/s"
+         f" G={N_GROUPS} lanes={N_LANES} v{STREAM_VERSION}"
+         f" vs_host_zlib={vs_host:.2f}x host_entropy_bytes=0"),
+        ("kernel/entropy_rans_decode", us_d,
+         f"fused decode twin dec={_gbps(raw_bytes, us_d):.4f}GB/s"),
+        ("kernel/entropy_rans_recip", us_rcp,
+         "reciprocal-division strategy (TPU path), bit-identical streams"),
         ("kernel/entropy_staged_ref", us_r,
          f"passes={eops._ref.N_STAGED_PASSES} pure-jnp oracle"),
         (f"kernel/entropy_host_{host_entropy.CODEC_NAME}", us_h,
          f"ratio={raw_bytes / host_comp:.2f}x host_entropy_bytes={raw_bytes}"
-         " (the stage the kernel replaces)"),
+         f" (the stage the kernel replaces; on-device is {vs_host:.2f}x its"
+         " speed)"),
     ]
 
 

@@ -7,8 +7,13 @@ longer codec-training variant of the Fig. 8/9 rate-distortion sweep.
 
 ``--check`` turns the committed BENCH_kernels.json into a regression gate:
 the fresh run is diffed against it per bench and the process exits nonzero
-if any ``us_per_call`` regressed by more than CHECK_THRESHOLD (2x — the
-timings are interpret-mode wall clock, so the gate is deliberately coarse).
+if any ``us_per_call`` or ``us_decode`` regressed by more than
+CHECK_THRESHOLD (2x — the timings are interpret-mode wall clock, so the
+gate is deliberately coarse), or any ``gbps`` / ``gbps_decode`` fell below
+1/CHECK_THRESHOLD of the committed value.  With today's fixed per-bench
+byte counts the throughput floor mirrors the latency ceiling; it exists
+so throughput stays gated if a future edit changes how many bytes a
+bench pushes per call.
 Benches that report ``bytes_moved_ratio`` (the retrieval bench's planned-
 bytes / full-restore fraction) are additionally gated on it with the tight
 BYTES_THRESHOLD: byte accounting is deterministic, so a retrieval plan that
@@ -30,7 +35,12 @@ BYTES_THRESHOLD = 1.1  # >10% more bytes_moved_ratio fails --check (exact metric
 
 def _force_multidevice_host() -> None:
     """Give the bench process an 8-device host platform (before jax init)
-    so the sharded_seal bench can build 1/2/8-device storage meshes."""
+    so the sharded_seal bench can build 1/2/8-device storage meshes.
+
+    (The legacy CPU runtime — ``--xla_cpu_use_thunk_runtime=false`` — was
+    evaluated for the tiny-op-dominated coding loops and rejected: it
+    miscompiles batched ``dot_general`` on forced multi-device hosts,
+    returning garbage histogram sums.  Do not re-add it.)"""
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
@@ -62,29 +72,40 @@ def _load_committed() -> dict:
 def _check_regressions(committed: dict, fresh: dict) -> int:
     """Print the per-bench delta table; return the number of regressions.
 
-    Two gates per bench (where both sides have the metric): ``us_per_call``
-    against the coarse CHECK_THRESHOLD, and ``bytes_moved_ratio`` against
-    the tight BYTES_THRESHOLD — data-movement accounting is deterministic,
-    so the retrieval plan growing its byte footprint is a real regression
-    even at identical wall clock.
+    Per bench (where both sides have the metric), ceilings AND floors:
+    ``us_per_call`` and ``us_decode`` may not grow past the coarse
+    CHECK_THRESHOLD (an unchecked decode made a decode regression
+    invisible before this gate existed), throughput floors ``gbps`` /
+    ``gbps_decode`` may not fall below 1/CHECK_THRESHOLD of the committed
+    value (so a perf win, once committed, is locked in from both sides),
+    and ``bytes_moved_ratio`` is gated against the tight BYTES_THRESHOLD —
+    data-movement accounting is deterministic, so the retrieval plan
+    growing its byte footprint is a real regression even at identical
+    wall clock.
     """
     gates = [
-        ("us_per_call", CHECK_THRESHOLD, "{:.1f}"),
-        ("bytes_moved_ratio", BYTES_THRESHOLD, "{:.4f}"),
+        ("us_per_call", "ceiling", CHECK_THRESHOLD, "{:.1f}"),
+        ("us_decode", "ceiling", CHECK_THRESHOLD, "{:.1f}"),
+        ("gbps", "floor", CHECK_THRESHOLD, "{:.5f}"),
+        ("gbps_decode", "floor", CHECK_THRESHOLD, "{:.5f}"),
+        ("bytes_moved_ratio", "ceiling", BYTES_THRESHOLD, "{:.4f}"),
     ]
     print("\n# bench delta vs committed BENCH_kernels.json")
     print("name,metric,old,new,ratio,verdict")
     bad = 0
     for name in sorted(set(committed) & set(fresh)):
-        for metric, threshold, fmt in gates:
+        for metric, kind, threshold, fmt in gates:
             old = committed[name].get(metric)
             new = fresh[name].get(metric)
             if not old or new is None or old != old or new != new:
                 continue  # missing/NaN/zero baseline
             ratio = new / old
             verdict = "ok"
-            if ratio > threshold:
+            if kind == "ceiling" and ratio > threshold:
                 verdict = f"REGRESSION(>{threshold:g}x)"
+                bad += 1
+            if kind == "floor" and ratio < 1.0 / threshold:
+                verdict = f"REGRESSION(<1/{threshold:g}x)"
                 bad += 1
             print(
                 f"{name},{metric},{fmt.format(old)},{fmt.format(new)},"
@@ -136,7 +157,13 @@ def main() -> None:
     if regressions:
         # keep the committed baseline intact so a rerun still gates against
         # the good numbers instead of ratcheting down to the regressed ones
-        print(f"# NOT overwriting {_JSON_PATH} (regression gate failed)")
+        # — but park the fresh numbers next to it so CI can upload what the
+        # failed run actually measured
+        with open(_JSON_PATH + ".fresh", "w") as f:
+            json.dump({"benches": kernels_bench.JSON_METRICS}, f, indent=2,
+                      sort_keys=True)
+        print(f"# NOT overwriting {_JSON_PATH} (regression gate failed); "
+              f"fresh metrics in {_JSON_PATH}.fresh")
     else:
         _write_kernels_json(kernels_bench.JSON_METRICS)
     if failures or regressions:

@@ -224,13 +224,17 @@ def unseal_stripe_sharded(stripe: SealedStripe, keys, nonces, *, mesh: Mesh,
 # --------------------------------------------------- sharded entropy stage
 @functools.lru_cache(maxsize=None)
 def _sharded_entropy_core(mesh: Mesh, axis: str, decode: bool,
-                          use_pallas: bool, interpret: bool):
-    """jit'd shard_map'd rANS core, cached per (mesh, mode).
+                          use_pallas: bool, interpret: bool,
+                          version: int = 0, rows: int = 0):
+    """jit'd shard_map'd rANS core, cached per (mesh, mode, stream version).
 
     The coder has no cross-shard term at all — each mesh shard runs the
     fused histogram+table+scan kernel on its local slice of the stripe
     (launches/stripe/device = 1), which is exactly the paper's per-CSD
     compression: only the seal stage's parity reduce ever crosses shards.
+    ``version``/``rows`` (pow2-bucketed, so the cache stays bounded) pick
+    the decode twin: row-major streams for version 1, the PR-4 lane-major
+    layout for version 0.
     """
 
     def local_encode(codes, n_valid):
@@ -238,9 +242,9 @@ def _sharded_entropy_core(mesh: Mesh, axis: str, decode: bool,
             codes, n_valid, use_pallas=use_pallas, interpret=interpret
         )
 
-    def local_decode(lane_words, freq, states, n_valid):
+    def local_decode(words, freq, states, n_valid):
         return entropy_ops._decode_core(
-            lane_words, freq, states, n_valid,
+            words, freq, states, n_valid, version=version, rows=rows,
             use_pallas=use_pallas, interpret=interpret,
         )
 
@@ -285,24 +289,27 @@ def entropy_encode_sharded(payloads, *, mesh: Mesh, axis: str = "data",
 def entropy_decode_sharded(comps, metas, *, mesh: Mesh, axis: str = "data",
                            use_pallas: bool = True,
                            interpret: Optional[bool] = None):
-    """Sharded twin of ``entropy_ops.decode_payloads`` (same outputs)."""
+    """Sharded twin of ``entropy_ops.decode_payloads`` (same outputs),
+    for both stream versions (the per-mesh-shard twin is picked from the
+    recorded ``version`` exactly like the single-device dispatch)."""
     D = int(mesh.shape[axis])
-    core = _sharded_entropy_core(
-        mesh, axis, True, use_pallas, use_interpret(interpret)
-    )
     # dummy shards decode against a degenerate-but-valid table (symbol 0
     # owns the whole range) so padded lanes cannot divide by zero or gather
     # out of range; n_valid = 0 masks their output anyway
     dummy_freq = jnp.zeros((256,), jnp.int32).at[0].set(PROB_SCALE)
 
-    def core_fn(lane_words, freq, states, n_valid):
-        S = lane_words.shape[0]
+    def core_fn(words, freq, states, n_valid, *, version: int, rows: int):
+        core = _sharded_entropy_core(
+            mesh, axis, True, use_pallas, use_interpret(interpret),
+            version, rows,
+        )
+        S = words.shape[0]
         s_pad = -(-S // D) * D
         freq_p = jnp.concatenate(
             [freq] + [dummy_freq[None]] * (s_pad - S), axis=0
         ) if s_pad != S else freq
         out = core(
-            _pad_shard_axis(lane_words, s_pad),
+            _pad_shard_axis(words, s_pad),
             freq_p,
             _pad_shard_axis(states, s_pad),
             _pad_shard_axis(n_valid, s_pad),

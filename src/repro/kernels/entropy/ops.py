@@ -9,17 +9,33 @@ the staged jnp oracle (``use_pallas=False``), and pack the result into a
 self-contained compressed byte stream per shard:
 
     [freq table: 256 x u16][lane lengths: 128 x u32][lane states: 128 x u32]
-    [per-lane word streams, lane-major, in decoder read order]
+    [16-bit words in global decoder-read order (row-major across lanes)]
 
-Everything a decoder needs except the raw/compressed lengths (tiny host
-metadata, recorded in the archive manifest like ``n_i8``) travels inside the
-stream, so the compression-ratio accounting is honest: ``n_comp`` includes
-the 1280-byte header.  The stream bytes are what the seal kernel encrypts
-and parity-codes — the entropy stage output never has to visit the host.
+Everything a decoder needs except the raw/compressed lengths and the stream
+``version`` (tiny host metadata, recorded in the archive manifest like
+``n_i8``) travels inside the stream, so the compression-ratio accounting is
+honest: ``n_comp`` includes the 1536-byte header.  The stream bytes are
+what the seal kernel encrypts and parity-codes — the entropy stage output
+never has to visit the host.
 
-``core_fn`` overrides the coder launch itself; the sharded path
-(``repro.distributed.archival``) passes a shard_map'd wrapper with the same
-signature, exactly like ``seal_fn``/``unseal_fn`` in the seal pipeline.
+Stream versions: version 1 (current) packs words row-major — the order a
+forward decode consumes them — so the decoder runs a single prefix-summed
+stream pointer and parsing is a straight byte split.  Version 0 (PR-4)
+packed per-lane-contiguous word runs; those streams still decode through
+``_parse_streams_v0`` + the lane-major kernel twin.  Both share one header
+layout (the lane-length table is self-description/integrity metadata for
+v1 — its offsets are only *required* for v0's re-gather), so a version
+bump never changes ``n_comp``: the compression ratio is identical by
+construction.
+
+Compaction of the dense emission buffer is a two-level rank-select *gather*
+(scatter-free: XLA scatters serialize on TPU and CPU alike): the k-th
+output word's row comes from a scatter-max + running-max over the 512-odd
+row offsets, and its lane from a 7-step branchless binary search over the
+in-row prefix sums.  ``core_fn`` overrides the coder launch itself; the
+sharded path (``repro.distributed.archival``) passes a shard_map'd wrapper
+with the same signature, exactly like ``seal_fn``/``unseal_fn`` in the
+seal pipeline.
 """
 
 from __future__ import annotations
@@ -35,8 +51,10 @@ from repro.kernels import as_payload_list, use_interpret
 from repro.kernels.entropy import ref as _ref
 from repro.kernels.entropy.rans import (
     N_LANES,
+    STREAM_VERSION,
     T_TILE,
     rans_decode_pallas,
+    rans_decode_pallas_v0,
     rans_encode_pallas,
 )
 
@@ -44,6 +62,7 @@ __all__ = [
     "HEADER_BYTES",
     "MAX_ROWS",
     "rows_for",
+    "cap_for",
     "encode_payloads",
     "decode_payloads",
     "entropy_traffic",
@@ -51,9 +70,11 @@ __all__ = [
 
 # freq u16[256] + lane_lens u32[128] + states u32[128]
 HEADER_BYTES = 2 * 256 + 4 * N_LANES + 4 * N_LANES
-# int32 global byte indices inside the kernels bound the shard size (the
-# practical bound: one stripe shard is a GOP or a checkpoint chunk, not GBs)
-MAX_ROWS = 1 << 23  # 1 GiB per shard
+# 2^17 lane rows = 16 MiB per shard: the practical bound (one stripe
+# shard is a GOP or a checkpoint chunk, not GBs), and it keeps the
+# histogram's one-hot operands and the coder's working set a size one
+# kernel residency can reasonably hold
+MAX_ROWS = 1 << 17
 
 
 def rows_for(n_bytes: int) -> int:
@@ -66,6 +87,16 @@ def rows_for(n_bytes: int) -> int:
     rows = max(1, -(-n_bytes // N_LANES))
     tiles = -(-rows // T_TILE)
     return T_TILE * (1 << (tiles - 1).bit_length())
+
+
+def cap_for(n_words: int) -> int:
+    """Pow2 word capacity bucket for the compaction stage (>= 1).
+
+    The rank-select pack is jit-specialized on its output width; bucketing
+    the emitted word count caps the trace count at log2(max_words), same
+    as ``rows_for`` does for the coder launch.
+    """
+    return 1 << max(0, int(n_words - 1).bit_length())
 
 
 def _u16_to_u8(w: jax.Array) -> jax.Array:
@@ -84,45 +115,104 @@ def _u32_to_u8(w: jax.Array) -> jax.Array:
     return jnp.stack(parts, axis=-1).reshape(*w.shape[:-1], -1)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def _encode_core(codes, n_valid, *, use_pallas: bool, interpret: bool):
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret", "division")
+)
+def _encode_core(codes, n_valid, *, use_pallas: bool, interpret: bool,
+                 division: Optional[str] = None):
+    if division is None:
+        # interpret/CPU: LLVM's udiv is the fewest ops; real TPU: Mosaic
+        # has no integer divide, the repaired-f32 reciprocal is the fast
+        # exact replacement (all three strategies are bit-identical)
+        division = "divide" if interpret else "rcp32"
     if use_pallas:
-        return rans_encode_pallas(codes, n_valid, interpret=interpret)
-    return _ref.rans_encode_ref(codes, n_valid)
+        return rans_encode_pallas(
+            codes, n_valid, division=division, interpret=interpret
+        )
+    return _ref.rans_encode_ref(codes, n_valid, division=division)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def _decode_core(lane_words, freq, states, n_valid, *,
+@functools.partial(
+    jax.jit, static_argnames=("version", "rows", "use_pallas", "interpret")
+)
+def _decode_core(words, freq, states, n_valid, *, version: int, rows: int,
                  use_pallas: bool, interpret: bool):
+    if version == 0:
+        if use_pallas:
+            return rans_decode_pallas_v0(
+                words, freq, states, n_valid, interpret=interpret
+            )
+        return _ref.rans_decode_ref_v0(words, freq, states, n_valid)
     if use_pallas:
         return rans_decode_pallas(
-            lane_words, freq, states, n_valid, interpret=interpret
+            words, freq, states, n_valid, rows=rows, interpret=interpret
         )
-    return _ref.rans_decode_ref(lane_words, freq, states, n_valid)
+    return _ref.rans_decode_ref(words, freq, states, n_valid, rows=rows)
 
 
 @jax.jit
-def _pack_streams(words, mask, freq, states):
-    """Dense emissions -> (padded compressed bytes (S, C), n_comp (S,)).
+def _emission_counts(mask):
+    """(S, T, 128) emission mask -> (S,) emitted word counts."""
+    return (mask != 0).sum(axis=(1, 2))
 
-    Compaction is a prefix-sum scatter in lane-major order: lane l's words
-    land at [off(l), off(l)+len(l)) in increasing row order — exactly the
-    order the decoder consumes them (rANS emits backwards, reads forwards;
-    the encode kernel already tagged each emission with its row).  Unemitted
-    slots are routed to one overflow slot past the end and dropped.
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _pack_rank(mask, *, cap: int):
+    """Stage 1 of the rank-select pack: per-output-slot source positions.
+
+    For each output slot k the source row is recovered from a scatter-max
+    of row ids at their stream offsets followed by a running max (the same
+    cumulative-bucket fill the decoder uses for its slot table), and the
+    source lane by a branchless bit-step lower bound over the u8 in-row
+    prefix sums — every wide op is a gather, which vectorizes where a
+    word-per-word scatter would serialize.
     """
-    S, T, L = words.shape
-    lm = jnp.swapaxes(mask, 1, 2).reshape(S, L * T) != 0
-    wm = jnp.swapaxes(words, 1, 2).reshape(S, L * T)
-    pos = jnp.cumsum(lm, axis=1) - 1
-    dest = jnp.where(lm, pos, L * T)
-    comp_words = (
-        jnp.zeros((S, L * T + 1), jnp.uint16)
-        .at[jnp.arange(S)[:, None], dest]
-        .set(wm)[:, : L * T]
+    S, T, L = mask.shape
+    lm = mask != 0                                           # (S, T, L)
+    # u8 in-row inclusive prefix (row counts <= 128 fit): 4x less traffic
+    # for the rank-select gathers below, and the per-row totals fall out
+    # of its last lane for free
+    icsum3 = jnp.cumsum(lm.astype(jnp.uint8), axis=2, dtype=jnp.uint8)
+    cnt = icsum3[:, :, L - 1].astype(jnp.int32)              # (S, T)
+    row_off = jnp.cumsum(cnt, axis=1) - cnt                  # exclusive
+    n_words = cnt.sum(axis=1)                                # (S,)
+    lane_lens = lm.sum(axis=1, dtype=jnp.int32)              # (S, L)
+
+    # source row of output k: last row whose offset is <= k
+    rows_iota = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (S, T))
+    marks = (
+        jnp.zeros((S, cap), jnp.int32)
+        .at[jnp.arange(S)[:, None], row_off]
+        .max(rows_iota, mode="drop")
     )
-    lane_lens = mask.astype(jnp.int32).sum(axis=1)           # (S, L)
-    n_words = lm.sum(axis=1)                                 # (S,)
+    row_id = jax.lax.cummax(marks, axis=1)                   # (S, cap)
+    k = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    j1 = (
+        k - jnp.take_along_axis(row_off, row_id, axis=1) + 1
+    ).astype(jnp.uint8)                                      # in-row rank + 1
+
+    # source lane: smallest l with icsum[row, l] >= j + 1 (branchless
+    # bit-step lower bound: 3 vector ops per round, 7 rounds = 128 lanes)
+    icsum = icsum3.reshape(S, T * L)
+    base = row_id * L
+    lane = jnp.zeros((S, cap), jnp.int32)
+    for b in (64, 32, 16, 8, 4, 2, 1):
+        t = lane | b
+        v = jnp.take_along_axis(icsum, base + t - 1, axis=1)
+        lane = jnp.where(v < j1, t, lane)
+    return base + lane, n_words, lane_lens
+
+
+@jax.jit
+def _pack_bytes(words, src, n_words, lane_lens, freq, states):
+    """Stage 2: gather the words into stream order and serialize header +
+    word area to bytes (kept as a separate dispatch so XLA cannot re-fuse
+    the rank-select producers into the byte pass and recompute them)."""
+    S, T, L = words.shape
+    cap = src.shape[1]
+    w = jnp.take_along_axis(words.reshape(S, T * L), src, axis=1)
+    k = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    comp_words = jnp.where(k < n_words[:, None], w, 0)
     header = jnp.concatenate(
         [
             _u16_to_u8(freq.astype(jnp.uint16)),
@@ -131,20 +221,22 @@ def _pack_streams(words, mask, freq, states):
         ],
         axis=1,
     )
-    comp = jnp.concatenate([header, _u16_to_u8(comp_words)], axis=1)
-    return comp, HEADER_BYTES + 2 * n_words
+    return jnp.concatenate([header, _u16_to_u8(comp_words)], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("rows",))
-def _parse_streams(comp, *, rows: int):
-    """Padded compressed bytes (S, C) uint8 -> decoder inputs.
+def _pack_streams(words, mask, freq, states, *, cap: int):
+    """Dense emissions -> padded compressed bytes (S, HEADER + 2*cap).
 
-    Re-gathers the flat word stream into the (S, T, 128) per-lane layout the
-    decode kernel scans: word j of lane l sits at stream[off(l) + j].
-    Positions past a lane's length gather a clamped index — never consumed,
-    because the decoder's renorm flags mirror the encoder's emissions.
+    Rank-select compaction in decoder-read (row-major) order, scatter-free
+    on the wide axis (see :func:`_pack_rank`).  ``cap`` must be >= the
+    largest per-shard word count (pow2-bucketed via :func:`cap_for`).
     """
-    S, C = comp.shape
+    src, n_words, lane_lens = _pack_rank(mask, cap=cap)
+    return _pack_bytes(words, src, n_words, lane_lens, freq, states)
+
+
+def _parse_header(comp):
+    """Padded compressed bytes (S, C) uint8 -> (freq, lane_lens, states)."""
     u = comp.astype(jnp.int32)
     freq = u[:, 0:512:2] | (u[:, 1:512:2] << 8)              # (S, 256)
     lane_lens = (
@@ -160,7 +252,35 @@ def _parse_streams(comp, *, rows: int):
         | (su[:, 1026:1536:4] << jnp.uint32(16))
         | (su[:, 1027:1536:4] << jnp.uint32(24))
     )                                                        # (S, 128)
-    body = u[:, HEADER_BYTES:]
+    return freq, lane_lens, states
+
+
+@jax.jit
+def _parse_streams(comp):
+    """Version-1 parse: header split + flat u16 word view, no re-gather.
+
+    The row-major word area is already in decoder-read order, so the
+    decode kernel consumes it directly with its prefix-summed pointer.
+    """
+    freq, _, states = _parse_header(comp)
+    body = comp[:, HEADER_BYTES:].astype(jnp.int32)
+    W = body.shape[1] // 2
+    stream = (body[:, 0 : 2 * W : 2] | (body[:, 1 : 2 * W : 2] << 8)).astype(
+        jnp.uint16
+    )
+    return stream, freq, states
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def _parse_streams_v0(comp, *, rows: int):
+    """Version-0 parse: re-gather the lane-major word runs into the
+    (S, T, 128) per-lane layout the legacy decode twin scans: word j of
+    lane l sits at stream[off(l) + j].  Positions past a lane's length
+    gather a clamped index — never consumed, because the decoder's renorm
+    flags mirror the encoder's emissions."""
+    S, C = comp.shape
+    freq, lane_lens, states = _parse_header(comp)
+    body = comp[:, HEADER_BYTES:].astype(jnp.int32)
     W = body.shape[1] // 2
     stream = (body[:, 0 : 2 * W : 2] | (body[:, 1 : 2 * W : 2] << 8)).astype(
         jnp.uint16
@@ -179,15 +299,18 @@ def encode_payloads(
     *,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    division: Optional[str] = None,
     core_fn=None,
 ) -> Tuple[List[jax.Array], List[Dict]]:
     """rANS-encode S ragged shard payloads in one fused launch.
 
     payloads: list of flat int8 arrays (ragged ok) or an (S, N) int8 array.
     Returns (compressed int8 streams — exact length, header included — and
-    per-shard metas ``{"codec", "n_raw", "n_comp", "rows"}``).  ``rows`` is
-    the padded lane-row count the whole stripe was coded at; decode needs it
-    back.  ``core_fn`` overrides the coder launch (sharded path).
+    per-shard metas ``{"codec", "version", "n_raw", "n_comp", "rows"}``).
+    ``rows`` is the padded lane-row count the whole stripe was coded at;
+    decode needs it back.  ``version`` is the stream format version the
+    decoder dispatches on.  ``core_fn`` overrides the coder launch (the
+    sharded path).
     """
     flats = as_payload_list(payloads)
     if not flats:
@@ -208,26 +331,31 @@ def encode_payloads(
     n_valid = jnp.asarray(n_raw, jnp.int32).reshape(-1, 1)
     if core_fn is None:
         core_fn = functools.partial(
-            _encode_core, use_pallas=use_pallas, interpret=use_interpret(interpret)
+            _encode_core, use_pallas=use_pallas,
+            interpret=use_interpret(interpret), division=division,
         )
     words, mask, freq, states = core_fn(codes, n_valid)
-    comp_pad, n_comp_dev = _pack_streams(words, mask, freq, states)
-    n_comp = [int(n) for n in np.asarray(n_comp_dev)]        # tiny host metadata
+    n_words = [int(n) for n in np.asarray(_emission_counts(mask))]
+    comp_pad = _pack_streams(
+        words, mask, freq, states, cap=cap_for(max(n_words))
+    )
+    n_comp = [HEADER_BYTES + 2 * nw for nw in n_words]
     comps, metas = [], []
     for s, (nr, nc) in enumerate(zip(n_raw, n_comp)):
         if nc >= nr:
             # adaptive raw-skip: an incompressible shard (or one smaller
-            # than the 1280-byte stream header) is stored as-is; the
+            # than the 1536-byte stream header) is stored as-is; the
             # manifest flag is what the decode path dispatches on
             comps.append(flats[s].reshape(-1).astype(jnp.int8))
             metas.append(
-                {"codec": "rans", "raw": True,
+                {"codec": "rans", "version": STREAM_VERSION, "raw": True,
                  "n_raw": nr, "n_comp": nr, "rows": T}
             )
         else:
             comps.append(comp_pad[s, :nc].astype(jnp.int8))
             metas.append(
-                {"codec": "rans", "n_raw": nr, "n_comp": nc, "rows": T}
+                {"codec": "rans", "version": STREAM_VERSION,
+                 "n_raw": nr, "n_comp": nc, "rows": T}
             )
     return comps, metas
 
@@ -242,6 +370,8 @@ def decode_payloads(
 ) -> List[jax.Array]:
     """Decode twin: compressed streams + metas -> exact original payloads.
 
+    Dispatches on the *recorded* stream ``version`` (absent = 0, the PR-4
+    lane-major format, so old archives and checkpoints stay readable).
     Shards the encoder flagged ``raw`` (adaptive raw-skip: compressed would
     have been >= raw) pass through untouched; only the genuinely coded
     shards enter the kernel launch, so a stripe that mixes both still runs
@@ -274,12 +404,21 @@ def decode_payloads(
             raise ValueError("compressed stream shorter than its header")
         coded.append(i)
     if coded:
+        versions = {int(metas[i].get("version", 0)) for i in coded}
+        if len(versions) != 1:
+            raise ValueError(
+                f"stripe mixes stream versions {sorted(versions)}"
+            )
+        version = versions.pop()
         sub = [flats[i] for i in coded]
         # common padded width, stream area even and >= one word (tails unread)
         C = max(max(int(f.shape[0]) for f in sub), HEADER_BYTES + 2)
         C += (C - HEADER_BYTES) % 2
         comp = jnp.stack([jnp.pad(f, (0, C - f.shape[0])) for f in sub])
-        lane_words, freq, states = _parse_streams(comp, rows=T)
+        if version == 0:
+            words, freq, states = _parse_streams_v0(comp, rows=T)
+        else:
+            words, freq, states = _parse_streams(comp)
         n_valid = jnp.asarray(
             [int(metas[i]["n_raw"]) for i in coded], jnp.int32
         ).reshape(-1, 1)
@@ -288,7 +427,7 @@ def decode_payloads(
                 _decode_core, use_pallas=use_pallas,
                 interpret=use_interpret(interpret),
             )
-        codes = core_fn(lane_words, freq, states, n_valid)
+        codes = core_fn(words, freq, states, n_valid, version=version, rows=T)
         for j, i in enumerate(coded):
             out[i] = codes[j].reshape(-1)[: int(metas[i]["n_raw"])]
     return out

@@ -1,36 +1,83 @@
 """Pallas TPU kernel: interleaved-rANS byte coder for the archival datapath.
 
-One grid step codes one shard of a stripe.  The shard's flat int8 payload is
-laid out as (T, 128) rows, and the 128 columns are 128 *independent* rANS
-lanes (lane l owns bytes l, 128+l, 256+l, ...), so every step of the
-sequential coding loop is one (128,)-wide VPU vector op — the interleaved
-layout from Giesen's SIMD rANS, with the lane axis mapped onto the TPU lane
-dimension.
+One launch codes all S shards of a stripe: the stripe is the kernel block,
+and the shards ride the batch axis of every vector op, so one loop step
+feeds S x 128 lanes to the vector unit instead of idling per shard.  A
+shard's flat int8 payload is laid out as (T, 128) rows whose 128 columns
+are 128 *independent* rANS lanes (lane l owns bytes l, 128+l, 256+l, ...),
+the interleaved layout from Giesen's SIMD rANS with the lane axis mapped
+onto the TPU lane dimension.  The loop *schedule* is a static knob
+(``rows_per_step``): on TPU each trip advances an (N_GROUPS=8, 128)
+lane-group tile — one full sublane-by-lane vreg — cutting the sequential
+trip count from T to T/8; under interpret (CPU CI) each trip advances one
+row, because many tiny ops schedule ~5x cheaper there than few fat fused
+bodies.  The schedule cannot change a single output bit — only which ops
+compute them — and the suite asserts both schedules bit-identical.
+(Widening the *state* interleave instead — G x 128 independent streams —
+was measured and rejected: every extra rANS stream wastes >= 16 bits of
+initial-state flush for zero entropy gain, ~2.7 KiB per 64 KiB shard,
+about a 10% compression-ratio loss.)
 
 Per shard the kernel runs three fused stages without leaving VMEM:
 
-  1. histogram pass over all T*128 bytes (scatter-add into 256 bins);
-  2. static frequency-table build (:func:`build_freq_table`): integer-exact
-     normalization to ``M = 2**PROB_BITS`` total, every present symbol kept
-     >= 1 — the table is emitted as an output (it ships in the compressed
-     stream header, so decode never re-derives it from data);
-  3. the interleaved encode loop, processed in *reverse* row order (rANS
-     encodes backwards so decode streams forwards), emitting at most one
-     16-bit word per lane per row (32-bit states, 16-bit renormalization:
-     state in [2^16, 2^32) means renorm fires at most once per symbol, which
-     is what makes the loop branchlessly vectorizable).
+  1. histogram over all T*128 bytes as a one-hot *matmul*: the byte splits
+     into hi/lo nibbles and hist.reshape(16, 16) = onehot(hi)^T @
+     onehot(lo), an (N, 16) x (N, 16) int8 contraction accumulated in
+     int32 — the MXU's native int8 matmul, exact by integer arithmetic —
+     no scatter-add anywhere (``.at[...].add`` serializes on TPU and CPU
+     alike; ``test_kernel_hygiene.py`` now bans it from kernel sources);
+  2. static table build: :func:`build_freq_table` (integer-exact
+     normalization to ``M = 2**PROB_BITS``, every present symbol >= 1)
+     plus :func:`build_enc_tables`, which precomputes per-symbol
+     reciprocals so the hot loop never divides: the Granlund-Montgomery
+     (mprime, shift) fixed-point pair, and an f32 reciprocal for the
+     error-repaired fast path.  The frequency table ships in the stream
+     header; the reciprocals are *derived* state — decode is
+     multiplication-only and provably never reads them, so shipping them
+     would inflate every stream by 1.25 KiB for nothing;
+  3. the coding loop, processed in *reverse* row order (rANS encodes
+     backwards so decode streams forwards), emitting at most one 16-bit
+     word per lane per row (32-bit states, 16-bit renormalization: state
+     in [2^16, 2^32) means renorm fires at most once per symbol, which is
+     what makes the loop branchlessly vectorizable).  Symbol tables are
+     pregathered per position before the loop, so the hot path reads only
+     aligned row slices; rows are coded in two phases split on the
+     n_valid boundary — rows fully inside every shard's payload skip the
+     per-lane valid masking entirely, and fully-empty padding rows (pow2
+     bucketing leaves up to half) are never visited.
 
-All arithmetic is integer (uint32 states, shifts, masked compares, one u32
-divide by the per-symbol frequency): there is no float anywhere in the
-coder, so kernel-vs-reference bit-exactness cannot be broken by XLA float
-rewrites (cf. the x/c -> x*(1/c) jit canonicalization that bites float
-kernels).
+The per-symbol division x // freq runs as one of three exact,
+bit-identical strategies (see :func:`_enc_step`): the hardware udiv
+(interpret default), the error-repaired f32 reciprocal multiply (TPU
+default — Mosaic has no integer division, which is what kept the PR-3
+coder off real hardware), or the all-integer Granlund-Montgomery mulhi.
+The f32 path is immune to the x/c -> x*(1/c) jit canonicalization that
+breaks naive float kernels: the renorm invariant bounds the quotient by
+2^20, so any faithful rounding stays within +-0.2 of the true quotient
+and the integer repair makes the result exact.  Everything else in the
+coder is u32/i32 (and the histogram's f32 counts are
+exact-by-construction), so kernel-vs-reference bit-exactness survives
+every backend.
+
+Stream format (``STREAM_VERSION = 1``): the header layout is unchanged
+from version 0 — freq u16[256] | lane_lens u32[128] | states u32[128] —
+but the word area is packed in *row-major decoder-read order* (the global
+order a forward decode consumes words: row by row, lanes in order within
+a row) instead of version 0's per-lane-contiguous runs.  Row-major
+packing is what the vectorized decoder wants: each step takes the next
+popcount(need) words off the stream front with an in-register prefix
+sum, so no per-lane offset table is parsed and no ``searchsorted`` exists
+anywhere — the slot->symbol table is a direct cumulative-bucket fill
+(:func:`slot_to_symbol`: scatter-max the symbol ids at their cumulative
+start slots, then a running max).  The version bump never changes
+``n_comp`` (same header bytes, same word count), so the compression ratio
+is identical by construction; version 0 streams still decode through the
+lane-major twin (``rans_decode_pallas_v0``), and the stream version rides
+in the archive manifest next to the codec name.
 
 The encoder does NOT compact its output: it writes a dense (T, 128) word
-buffer plus an emission mask, and ``ops.py`` runs the (shared, order-free)
-prefix-sum compaction into the final byte stream.  The decoder twin takes
-the per-lane word streams re-gathered to (T, 128) plus the header tables
-and states, and reproduces the exact input bytes.
+buffer plus an emission mask, and ``ops.py`` runs the (shared,
+order-free) rank-select compaction into the final byte stream.
 """
 
 from __future__ import annotations
@@ -43,21 +90,30 @@ from jax.experimental import pallas as pl
 
 __all__ = [
     "N_LANES",
+    "N_GROUPS",
     "PROB_BITS",
     "PROB_SCALE",
     "RANS_L",
     "T_TILE",
+    "STREAM_VERSION",
     "build_freq_table",
+    "build_enc_tables",
+    "build_dec_table",
     "slot_to_symbol",
     "rans_encode_pallas",
     "rans_decode_pallas",
+    "rans_decode_pallas_v0",
 ]
 
 N_LANES = 128                 # interleaved rANS lanes == TPU lane width
+N_GROUPS = 8                  # lane-group rows per tile == TPU sublane width
 PROB_BITS = 12                # frequency table quantization: sum(freq) = 4096
 PROB_SCALE = 1 << PROB_BITS
 RANS_L = 1 << 16              # state lower bound; 16-bit renormalization
-T_TILE = 8                    # sublane-aligned row granularity
+T_TILE = 8                    # sublane-aligned row granularity (== N_GROUPS)
+STREAM_VERSION = 1            # row-major word order; 0 = PR-4 lane-major
+
+_SYM_MASK = 0x1FFF            # 13 bits: freq and cum both reach 4096
 
 
 def build_freq_table(counts: jax.Array) -> jax.Array:
@@ -84,173 +140,457 @@ def build_freq_table(counts: jax.Array) -> jax.Array:
     extra = (c2 * budget) // n2        # c2 < 2^19, budget < 2^12: no overflow
     freq = present + extra
     rem = budget - extra.sum()
-    return freq.at[jnp.argmax(c2)].add(rem)
+    # remainder to the most frequent symbol, scatter-free (one-hot select)
+    sym = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+    return freq + jnp.where(sym == jnp.argmax(c2), rem, 0)
 
 
-def slot_to_symbol(freq: jax.Array, slots: jax.Array) -> jax.Array:
-    """Inverse cumulative lookup: slot in [0, PROB_SCALE) -> symbol id.
+def build_enc_tables(freq: jax.Array):
+    """(256,) int32 freqs -> per-symbol encode tables (packed, mprime, rcp).
 
-    ``side='right'`` on the inclusive cumsum skips zero-frequency symbols
-    (their cumsum entries duplicate the predecessor).
+    ``packed[s] = f | (shift-1) << 13 | cum_excl << 19`` (f clamped to
+    >= 1: only padding lanes ever look up an absent symbol, their update
+    is discarded, and the clamp keeps every division strategy defined).
+    ``mprime[s]`` is the Granlund-Montgomery round-up integer reciprocal
+    ``ceil(2^(32+shift)/f) - 2^32`` (fits u32), giving the exact quotient
+
+        t = mulhi(x, mprime);  q = (t + ((x - t) >> 1)) >> (shift - 1)
+
+    for every f in [2, PROB_SCALE] and x < 2^32 (f <= 1 short-circuits to
+    q = x in :func:`_enc_step`; brute-verified over all f in the tests).
+    ``rcp[s] = 1/f`` in f32 drives the fast error-repaired strategy (see
+    ``division="rcp32"`` in :func:`_enc_step`).  Built once per shard right
+    after :func:`build_freq_table` — the two table divides below run
+    256-wide once per shard, not per symbol, and never appear in the hot
+    loop.
     """
-    return jnp.searchsorted(
-        jnp.cumsum(freq), slots, side="right"
-    ).astype(jnp.int32)
+    f = freq.astype(jnp.uint32)
+    cum = (jnp.cumsum(freq) - freq).astype(jnp.uint32)
+    # shift = ceil_log2(f) = #{k in [0,13) : 2^k < f}
+    pows = jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32, (256, 13), 1)
+    shift = (pows < f[:, None]).astype(jnp.uint32).sum(axis=1)
+    s1 = jnp.maximum(shift, jnp.uint32(1)) - jnp.uint32(1)
+    # ceil(2^(32+shift)/f) - 2^32 via 16+16-bit long division, u32-only:
+    # hi2 = 2^(16+shift) <= 2^28; q_hi in [2^16, 2^17) so q_hi - 2^16 < 2^16
+    fq = jnp.maximum(f, jnp.uint32(1))
+    hi2 = jnp.uint32(1) << (jnp.uint32(16) + shift)
+    q_hi = hi2 // fq
+    num = (hi2 - q_hi * fq) << jnp.uint32(16)
+    q_lo = num // fq
+    r2 = num - q_lo * fq
+    mprime = (
+        ((q_hi - jnp.uint32(1 << 16)) << jnp.uint32(16))
+        + q_lo
+        + (r2 != 0).astype(jnp.uint32)
+    )
+    packed = fq | (s1 << jnp.uint32(13)) | (cum << jnp.uint32(19))
+    return packed, mprime, jnp.float32(1.0) / fq.astype(jnp.float32)
 
 
-def _histogram(vals: jax.Array, vmask: jax.Array) -> jax.Array:
-    """Exact byte histogram over the valid positions of a (T, 128) tile.
+def build_dec_table(freq: jax.Array) -> jax.Array:
+    """(256,) int32 freqs -> packed u32 decode table ``f | cum_excl << 13``."""
+    f = freq.astype(jnp.uint32)
+    cum = (jnp.cumsum(freq) - freq).astype(jnp.uint32)
+    return f | (cum << jnp.uint32(13))
 
-    Invalid (padding) positions are routed to a 257th overflow bin and
-    dropped, so pad zeros cannot distort the frequency table.
+
+def slot_to_symbol(freq: jax.Array) -> jax.Array:
+    """(256,) freqs -> (PROB_SCALE,) inverse cumulative table, slot -> symbol.
+
+    Direct cumulative-bucket fill: scatter-max each symbol id at its
+    cumulative start slot, then a running max floods it across the
+    symbol's [cum, cum + freq) bucket.  Zero-frequency symbols share a
+    start slot with their successor and lose the max (the last symbol at a
+    slot always has freq > 0 while any slot < PROB_SCALE remains), so no
+    ``searchsorted`` — a 4096-wide binary-search gather per table — is
+    needed anywhere in the decoder.
     """
-    idx = jnp.where(vmask, vals, 256)
-    return jnp.zeros((257,), jnp.int32).at[idx.reshape(-1)].add(1)[:256]
+    cum_excl = jnp.cumsum(freq) - freq
+    sym = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+    start = jnp.where(freq > 0, cum_excl, PROB_SCALE)  # absent: dropped
+    marks = jnp.zeros((PROB_SCALE,), jnp.int32).at[start].max(sym, mode="drop")
+    return jax.lax.cummax(marks)
 
 
-def _enc_step(x, f, c):
-    """One interleaved encode step: (states, freq, cum) -> (states', word, emit).
+def _mulhi_u32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """High 32 bits of the u32 x u32 product, from 16-bit partials (no u64:
+    x64 stays off, and the VPU has no 64-bit lanes either)."""
+    al = a & jnp.uint32(0xFFFF)
+    ah = a >> jnp.uint32(16)
+    bl = b & jnp.uint32(0xFFFF)
+    bh = b >> jnp.uint32(16)
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    mid = (ll >> jnp.uint32(16)) + (lh & jnp.uint32(0xFFFF)) + (hl & jnp.uint32(0xFFFF))
+    return ah * bh + (lh >> jnp.uint32(16)) + (hl >> jnp.uint32(16)) + (
+        mid >> jnp.uint32(16)
+    )
 
-    Renorm-before-update with the 16-bit word convention: emit the low half
-    when x >= f << 20 (written shift-compare so f = PROB_SCALE cannot
-    overflow the uint32 threshold).
+
+def _histogram(vals: jax.Array, n_valid) -> jax.Array:
+    """Exact byte histogram of a zero-padded (T, 128) shard -> (256,) int32.
+
+    One-hot matmul form: hist.reshape(16, 16) = onehot(hi)^T @ onehot(lo),
+    an (N, 16) x (N, 16) int8 contraction over N accumulated in int32 —
+    the MXU's native int8 matmul shape, and exact by integer arithmetic.
+    The one-hots are identity-row gathers (a serial gather materializes
+    the operands cheaper than broadcast compare+convert, and the
+    iota-equality identity is computed because pallas kernels cannot
+    capture materialized constants).  Padding positions past ``n_valid``
+    are *zero bytes* by the ``ops.py`` contract, so their whole
+    contribution lands in bin 0 and is subtracted back out — exact, and
+    cheaper than masking the one-hot.
     """
+    n = vals.shape[0] * vals.shape[1]
+    v = vals.reshape(n)
+    eye16 = (
+        jax.lax.broadcasted_iota(jnp.int32, (16, 16), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (16, 16), 1)
+    ).astype(jnp.int8)
+    h2 = jax.lax.dot_general(
+        eye16[v >> 4], eye16[v & 15], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    counts = h2.reshape(256)
+    sym = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+    return counts - jnp.where(sym == 0, n - n_valid, 0)
+
+
+def _enc_step(x, packed, aux, *, division: str = "divide"):
+    """One interleaved encode step: (states, sym tables) -> states'.
+
+    Renorm-before-update with the 16-bit word convention: shift out the low
+    half when x >= f << 20 (written shift-compare so f = PROB_SCALE cannot
+    overflow the uint32 threshold); the caller recovers the emitted words
+    and the emission mask from the returned pre-renorm states, so the hot
+    loop carries nothing else.  The state update divides by freq with one
+    of three exact, bit-identical strategies (asserted in the tests):
+
+      * ``"divide"`` — the hardware udiv.  LLVM scalarizes it on CPU but
+        it is still the fewest ops there; Mosaic has no integer division
+        at all (which is what kept the PR-3 kernel off real TPUs).
+      * ``"rcp32"`` — f32 reciprocal multiply with a +-1 integer repair.
+        The renorm invariant bounds the true quotient by 2^20, so the
+        faithful-rounding error of f32(x) * (1/f) is < 0.2 quotient units
+        and the two-sided repair makes the result exact under ANY IEEE
+        rounding — in particular it is immune to the x/c -> x*(1/c) jit
+        canonicalization that breaks naive float kernels.  ``aux`` is the
+        f32 reciprocal table value.
+      * ``"reciprocal"`` — the all-integer Granlund-Montgomery mulhi
+        path; ``aux`` is ``mprime``.  More vector ops than ``rcp32`` but
+        float-free, for backends where that matters.
+
+    Padding lanes look up a clamped f = 1 table entry; their state update
+    is discarded by the caller, so the math only has to stay defined.
+    Returns (updated states, pre-renorm states, emission flags).
+    """
+    f = packed & jnp.uint32(_SYM_MASK)
+    c = packed >> jnp.uint32(19)
+    x_pre = x
     emit = (x >> jnp.uint32(20)) >= f
-    word = (x & jnp.uint32(0xFFFF)).astype(jnp.uint16)
     x = jnp.where(emit, x >> jnp.uint32(16), x)
-    # padding lanes can look up a zero-frequency symbol; their state update
-    # is discarded by the caller, but the divide must still be defined on
-    # every backend (clamping is a no-op for any real symbol: freq >= 1)
-    f1 = jnp.maximum(f, jnp.uint32(1))
-    x = ((x // f1) << jnp.uint32(PROB_BITS)) + (x % f1) + c
-    return x, word, emit
+    if division == "divide":
+        q = x // f
+    elif division == "rcp32":
+        qh = (x.astype(jnp.float32) * aux).astype(jnp.uint32)
+        r = (x - qh * f).astype(jnp.int32)
+        q = (
+            qh
+            + (r >= f.astype(jnp.int32)).astype(jnp.uint32)
+            - (r < 0).astype(jnp.uint32)
+        )
+    else:  # "reciprocal"
+        t = _mulhi_u32(x, aux)
+        q = (t + ((x - t) >> jnp.uint32(1))) >> (
+            (packed >> jnp.uint32(13)) & jnp.uint32(0x3F)
+        )
+        q = jnp.where(f <= jnp.uint32(1), x, q)
+    # x' = (q << PROB_BITS) + (x mod f) + c, in ryg's mod-free arrangement
+    x = x + q * (jnp.uint32(PROB_SCALE) - f) + c
+    return x, x_pre, emit
 
 
-def _dec_step(x, freq, cum_excl, slot2sym):
-    """One interleaved decode step -> (pre-renorm states, symbols, need-word)."""
+def _dec_step(x, dec_packed, slot2sym):
+    """One interleaved decode step -> (pre-renorm states, symbols, need-word).
+
+    ``dec_packed``/``slot2sym`` are (..., 256) / (..., PROB_SCALE) tables
+    indexed along their last axis (gathered by the caller so kernel and
+    reference share one step body).
+    """
     slot = (x & jnp.uint32(PROB_SCALE - 1)).astype(jnp.int32)
-    s = slot2sym[slot]
-    f = freq[s].astype(jnp.uint32)
-    c = cum_excl[s].astype(jnp.uint32)
+    s = jnp.take_along_axis(slot2sym, slot, axis=-1)
+    p = jnp.take_along_axis(dec_packed, s, axis=-1)
+    f = p & jnp.uint32(_SYM_MASK)
+    c = (p >> jnp.uint32(13)) & jnp.uint32(_SYM_MASK)
     x = f * (x >> jnp.uint32(PROB_BITS)) + slot.astype(jnp.uint32) - c
     return x, s, x < jnp.uint32(RANS_L)
 
 
-def _lane_iota() -> jax.Array:
-    return jax.lax.broadcasted_iota(jnp.int32, (N_LANES,), 0)
+def _signed(s, valid):
+    """Decoded symbol byte -> int8 two's complement, zeros on pad lanes."""
+    return jnp.where(valid, s - ((s & 0x80) << 1), 0).astype(jnp.int8)
+
+
+def _row_valid(r, nv):
+    """(S, 128) global-index valid mask for row r vs n_valid (S, 1)."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, N_LANES), 1)
+    return (r * N_LANES + lane) < nv
 
 
 def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
-                   state_ref):
-    vals = (codes_ref[0].astype(jnp.int32)) & 0xFF          # (T, 128)
-    T = vals.shape[0]
-    nv = nvalid_ref[0, 0]
-    gidx = (
-        jax.lax.broadcasted_iota(jnp.int32, (T, N_LANES), 0) * N_LANES
-        + jax.lax.broadcasted_iota(jnp.int32, (T, N_LANES), 1)
+                   state_ref, *, division: str, rows_per_step: int):
+    S, T, _ = codes_ref.shape
+    vals = (codes_ref[...].astype(jnp.int32)) & 0xFF         # (S, T, 128)
+    nv = nvalid_ref[...]                                     # (S, 1)
+
+    # fused stage 1+2: per-shard matmul histogram -> tables (the stripe is
+    # the block: shards ride the batch axis of every loop op, so one row
+    # step feeds S x 128 lanes to the vector unit instead of idling per
+    # shard)
+    counts = jnp.stack(
+        [_histogram(vals[s], nv[s, 0]) for s in range(S)]
+    )
+    freq = jax.vmap(build_freq_table)(counts)                # (S, 256)
+    packed, mprime, rcp = jax.vmap(build_enc_tables)(freq)
+
+    # pregather the per-position symbol tables once: the loop then reads
+    # only aligned (rows_per_step, S, 128) slices, no gathers on the hot
+    # path
+    flat = vals.reshape(S, T * N_LANES)
+    pk = jnp.moveaxis(
+        jnp.take_along_axis(packed, flat, axis=1).reshape(S, T, N_LANES),
+        0, 1,
+    )                                                        # (T, S, 128)
+    if division == "rcp32":
+        aux = jnp.take_along_axis(rcp, flat, axis=1)
+    elif division == "reciprocal":
+        aux = jnp.take_along_axis(mprime, flat, axis=1)
+    else:
+        aux = None                                           # divide: unused
+    aux = (
+        jnp.moveaxis(aux.reshape(S, T, N_LANES), 0, 1)
+        if aux is not None else pk
     )
 
-    freq = build_freq_table(_histogram(vals, gidx < nv))     # (256,)
-    cum = jnp.cumsum(freq) - freq                            # exclusive
-    f_u = freq.astype(jnp.uint32)
-    c_u = cum.astype(jnp.uint32)
+    # two-phase row schedule on the n_valid boundary: rows fully inside
+    # every shard's payload run an unmasked body (the common case — no
+    # per-lane valid test at all), the boundary region runs the masked
+    # body, and fully-empty rows (pow2 bucketing leaves up to half of
+    # them) are never visited — their words/mask stay zero.  Each trip
+    # advances ``rows_per_step`` rows: 1 under interpret (tiny ops beat
+    # fat fused bodies on CPU), N_GROUPS on TPU (the (8, 128) sublane
+    # tile is one vreg).  The schedule cannot change a single output bit
+    # — only which ops compute them.
+    R = rows_per_step
+    n_full = (jnp.min(nv) // N_LANES) // R
+    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
 
-    def body(j, carry):
+    def chunk(x, ch, masked):
+        ws, ms = [None] * R, [None] * R
+        for k in range(R - 1, -1, -1):
+            r = ch * R + k
+            p = jax.lax.dynamic_index_in_dim(pk, r, 0, keepdims=False)
+            a = jax.lax.dynamic_index_in_dim(aux, r, 0, keepdims=False)
+            x2, x_pre, emit = _enc_step(x, p, a, division=division)
+            if masked:
+                valid = _row_valid(r, nv)
+                x = jnp.where(valid, x2, x)                  # pad lanes: no-op
+                emit = emit & valid
+            else:
+                x = x2
+            ws[k] = (x_pre & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+            ms[k] = emit.astype(jnp.uint8)
+        return x, jnp.stack(ws), jnp.stack(ms)
+
+    def body_masked(j, carry):
         x, words, mask = carry
-        r = T - 1 - j                                        # reverse row order
-        s = jax.lax.dynamic_index_in_dim(vals, r, 0, keepdims=False)
-        valid = (r * N_LANES + _lane_iota()) < nv
-        x2, w, m = _enc_step(x, f_u[s], c_u[s])
-        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
-        m = m & valid
-        words = jax.lax.dynamic_update_index_in_dim(words, w, r, 0)
-        mask = jax.lax.dynamic_update_index_in_dim(
-            mask, m.astype(jnp.uint8), r, 0
-        )
+        ch = n_used - 1 - j
+        x, wt, mt = chunk(x, ch, True)
+        words = jax.lax.dynamic_update_index_in_dim(words, wt, ch * R, 0)
+        mask = jax.lax.dynamic_update_index_in_dim(mask, mt, ch * R, 0)
         return x, words, mask
 
-    x0 = jnp.full((N_LANES,), RANS_L, jnp.uint32)
-    x, words, mask = jax.lax.fori_loop(
-        0,
-        T,
-        body,
-        (x0, jnp.zeros((T, N_LANES), jnp.uint16),
-         jnp.zeros((T, N_LANES), jnp.uint8)),
+    def body_full(j, carry):
+        x, words, mask = carry
+        ch = n_full - 1 - j
+        x, wt, mt = chunk(x, ch, False)
+        words = jax.lax.dynamic_update_index_in_dim(words, wt, ch * R, 0)
+        mask = jax.lax.dynamic_update_index_in_dim(mask, mt, ch * R, 0)
+        return x, words, mask
+
+    carry = (
+        jnp.full((S, N_LANES), RANS_L, jnp.uint32),
+        jnp.zeros((T, S, N_LANES), jnp.uint16),
+        jnp.zeros((T, S, N_LANES), jnp.uint8),
     )
-    words_ref[...] = words[None]
-    mask_ref[...] = mask[None]
-    freq_ref[...] = freq[None]
-    state_ref[...] = x[None]
+    carry = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
+    x, words, mask = jax.lax.fori_loop(0, n_full, body_full, carry)
+    words_ref[...] = jnp.moveaxis(words, 1, 0)
+    mask_ref[...] = jnp.moveaxis(mask, 1, 0)
+    freq_ref[...] = freq
+    state_ref[...] = x
 
 
-def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref):
-    lane_words = stream_ref[0]                               # (T, 128) u16
-    freq = freq_ref[0]                                       # (256,) int32
-    T = lane_words.shape[0]
-    nv = nvalid_ref[0, 0]
-    cum_excl = jnp.cumsum(freq) - freq
-    slot2sym = slot_to_symbol(
-        freq, jax.lax.broadcasted_iota(jnp.int32, (PROB_SCALE,), 0)
-    )
+def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
+                   *, rows_per_step: int):
+    """Version-1 decode: row-major word stream, prefix-sum read pointer.
 
-    def body(i, carry):
+    Mirrors the encoder's two-phase row schedule (unmasked body for rows
+    fully inside every shard's payload, masked body on the n_valid
+    boundary, empty rows never visited) — the decode consumes rows
+    forward, so the full phase runs first.
+    """
+    stream = stream_ref[...]                                 # (S, W) u16
+    S, W = stream.shape
+    freq = freq_ref[...]                                     # (S, 256) int32
+    T = codes_ref.shape[1]
+    nv = nvalid_ref[...]
+    dec_packed = jax.vmap(build_dec_table)(freq)
+    slot2sym = jax.vmap(slot_to_symbol)(freq)
+
+    R = rows_per_step
+    n_full = (jnp.min(nv) // N_LANES) // R
+    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
+
+    def chunk(x, base, ch, masked):
+        rows = [None] * R
+        for k in range(R):
+            r = ch * R + k
+            x2, sym, need = _dec_step(x, dec_packed, slot2sym)
+            sgn = (sym - ((sym & 0x80) << 1)).astype(jnp.int8)
+            if masked:
+                valid = _row_valid(r, nv)
+                need = need & valid
+                sgn = jnp.where(valid, sgn, 0)
+            csum = jnp.cumsum(need.astype(jnp.int32), axis=-1)
+            pos = base[:, None] + csum - need.astype(jnp.int32)
+            w = jnp.take_along_axis(
+                stream, jnp.minimum(pos, W - 1), axis=1
+            ).astype(jnp.uint32)
+            x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
+            x = jnp.where(valid, x2, x) if masked else x2
+            base = base + csum[:, N_LANES - 1]
+            rows[k] = sgn
+        return x, base, jnp.stack(rows)
+
+    def body_full(j, carry):
+        x, base, out = carry
+        x, base, tile = chunk(x, base, j, False)
+        return x, base, jax.lax.dynamic_update_index_in_dim(out, tile, j * R, 0)
+
+    def body_masked(j, carry):
+        x, base, out = carry
+        ch = n_full + j
+        x, base, tile = chunk(x, base, ch, True)
+        return x, base, jax.lax.dynamic_update_index_in_dim(
+            out, tile, ch * R, 0
+        )
+
+    carry = (state_ref[...], jnp.zeros((S,), jnp.int32),
+             jnp.zeros((T, S, N_LANES), jnp.int8))
+    carry = jax.lax.fori_loop(0, n_full, body_full, carry)
+    _, _, out = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
+    codes_ref[...] = jnp.moveaxis(out, 1, 0)
+
+
+def _decode_kernel_v0(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
+                      *, rows_per_step: int):
+    """Version-0 decode twin: lane-major words, per-lane read pointers."""
+    lane_words = stream_ref[...]                             # (S, T, 128) u16
+    S, T, _ = lane_words.shape
+    freq = freq_ref[...]
+    nv = nvalid_ref[...]
+    dec_packed = jax.vmap(build_dec_table)(freq)
+    slot2sym = jax.vmap(slot_to_symbol)(freq)
+
+    R = rows_per_step
+    n_full = (jnp.min(nv) // N_LANES) // R
+    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
+
+    def chunk(x, ptr, ch, masked):
+        rows = [None] * R
+        for k in range(R):
+            r = ch * R + k
+            x2, sym, need = _dec_step(x, dec_packed, slot2sym)
+            sgn = (sym - ((sym & 0x80) << 1)).astype(jnp.int8)
+            if masked:
+                valid = _row_valid(r, nv)
+                need = need & valid
+                sgn = jnp.where(valid, sgn, 0)
+            w = jnp.take_along_axis(
+                lane_words, jnp.minimum(ptr, T - 1)[:, None, :], axis=1
+            )[:, 0].astype(jnp.uint32)
+            x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
+            x = jnp.where(valid, x2, x) if masked else x2
+            ptr = ptr + need.astype(jnp.int32)
+            rows[k] = sgn
+        return x, ptr, jnp.stack(rows)
+
+    def body_full(j, carry):
         x, ptr, out = carry
-        valid = (i * N_LANES + _lane_iota()) < nv
-        x2, s, need = _dec_step(x, freq, cum_excl, slot2sym)
-        need = need & valid
-        w = jnp.take_along_axis(
-            lane_words, jnp.minimum(ptr, T - 1)[None, :], axis=0
-        )[0].astype(jnp.uint32)
-        x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
-        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
-        ptr = ptr + need.astype(jnp.int32)
-        signed = jnp.where(
-            valid, (s - ((s & 0x80) << 1)), 0
-        ).astype(jnp.int8)                                   # two's complement
-        out = jax.lax.dynamic_update_index_in_dim(out, signed, i, 0)
-        return x, ptr, out
+        x, ptr, tile = chunk(x, ptr, j, False)
+        return x, ptr, jax.lax.dynamic_update_index_in_dim(out, tile, j * R, 0)
 
-    x0 = state_ref[0]
-    _, _, out = jax.lax.fori_loop(
-        0,
-        T,
-        body,
-        (x0, jnp.zeros((N_LANES,), jnp.int32),
-         jnp.zeros((T, N_LANES), jnp.int8)),
-    )
-    codes_ref[...] = out[None]
+    def body_masked(j, carry):
+        x, ptr, out = carry
+        ch = n_full + j
+        x, ptr, tile = chunk(x, ptr, ch, True)
+        return x, ptr, jax.lax.dynamic_update_index_in_dim(
+            out, tile, ch * R, 0
+        )
+
+    carry = (state_ref[...], jnp.zeros((S, N_LANES), jnp.int32),
+             jnp.zeros((T, S, N_LANES), jnp.int8))
+    carry = jax.lax.fori_loop(0, n_full, body_full, carry)
+    _, _, out = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
+    codes_ref[...] = jnp.moveaxis(out, 1, 0)
 
 
-def rans_encode_pallas(codes, n_valid, *, interpret: bool = True):
-    """Encode all S shards of a stripe in one launch (grid over shards).
+def _rows_per_step(rows_per_step, interpret: bool, rows: int) -> int:
+    """Static loop-schedule width: 1 row/trip under interpret (many tiny
+    ops beat few fat fused bodies on CPU), an (N_GROUPS, 128) sublane tile
+    per trip otherwise (one vreg per step on TPU).  Pure schedule — the
+    output bits are identical for every choice."""
+    if rows_per_step is None:
+        rows_per_step = 1 if interpret else N_GROUPS
+    if rows % rows_per_step:
+        raise ValueError(f"{rows} rows not a multiple of {rows_per_step}")
+    return rows_per_step
 
-    codes: (S, T, 128) int8 payload rows, zero-padded; T % T_TILE == 0.
-    n_valid: (S, 1) int32 valid byte count per shard — positions past it are
-    padding and are excluded from both the histogram and the coding loop
-    (their lanes idle, costing zero stream bytes).
+
+def rans_encode_pallas(codes, n_valid, *, division: str = "divide",
+                       rows_per_step: int = None, interpret: bool = True):
+    """Encode all S shards of a stripe in one launch (the stripe is the
+    kernel block; shards stack on the batch axis of every vector op).
+
+    codes: (S, T, 128) int8 payload rows, zero-padded (the histogram's
+    pad correction requires the padding bytes to BE zero — ``ops.py``
+    guarantees it); T % T_TILE == 0.
+    n_valid: (S, 1) int32 valid byte count per shard — positions past it
+    are padding and are excluded from both the histogram and the coding
+    loop (their lanes idle, costing zero stream bytes).
+    division: "divide" (hardware udiv — interpret/CPU default), "rcp32"
+    (error-repaired f32 reciprocal — the TPU default; Mosaic has no
+    integer divide) or "reciprocal" (all-integer Granlund-Montgomery
+    mulhi); the streams are bit-identical in all three.
     Returns (words (S, T, 128) uint16, mask (S, T, 128) uint8,
-    freq (S, 256) int32, states (S, 128) uint32): the dense emission buffer +
-    per-row emission mask (compacted by the caller), the per-shard frequency
-    tables, and the final lane states the decoder starts from.
+    freq (S, 256) int32, states (S, 128) uint32): the dense emission buffer
+    + per-row emission mask (rank-select compacted by the caller), the
+    per-shard frequency tables, and the final lane states the decoder
+    starts from.
     """
     S, T, L = codes.shape
     if L != N_LANES:
         raise ValueError(f"expected {N_LANES} lanes, got {L}")
     if T % T_TILE:
         raise ValueError(f"rows {T} not a multiple of {T_TILE}")
+    if division not in ("divide", "rcp32", "reciprocal"):
+        raise ValueError(f"unknown division strategy {division!r}")
+    rps = _rows_per_step(rows_per_step, interpret, T)
     return pl.pallas_call(
-        _encode_kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, 1), lambda s: (s, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, 256), lambda s: (s, 0)),
-            pl.BlockSpec((1, N_LANES), lambda s: (s, 0)),
-        ],
+        functools.partial(_encode_kernel, division=division,
+                          rows_per_step=rps),
         out_shape=[
             jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint16),
             jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint8),
@@ -261,31 +601,47 @@ def rans_encode_pallas(codes, n_valid, *, interpret: bool = True):
     )(codes, n_valid)
 
 
-def rans_decode_pallas(lane_words, freq, states, n_valid, *,
-                       interpret: bool = True):
-    """Decode twin: per-lane word streams + header tables -> original bytes.
+def rans_decode_pallas(stream, freq, states, n_valid, *, rows: int,
+                       rows_per_step: int = None, interpret: bool = True):
+    """Version-1 decode twin: flat row-major word streams -> original bytes.
+
+    stream: (S, W) uint16 — each shard's words in global decoder-read order
+    (tails past the shard's word count are never consumed).  The decoder
+    advances a single per-shard stream pointer; per sub-step, the lanes
+    that renormalize take the next popcount(need) words in lane order via
+    an in-register prefix sum — no per-lane offset table is parsed.
+    freq: (S, 256) int32 tables; states: (S, 128) uint32 initial lane
+    states; n_valid: (S, 1) int32 — must equal the encoder's.
+    Returns (S, rows, 128) int8 decoded payload rows, zeros past n_valid.
+    """
+    S, W = stream.shape
+    if rows % T_TILE:
+        raise ValueError(f"rows {rows} not a multiple of {T_TILE}")
+    rps = _rows_per_step(rows_per_step, interpret, rows)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, rows_per_step=rps),
+        out_shape=jax.ShapeDtypeStruct((S, rows, N_LANES), jnp.int8),
+        interpret=interpret,
+    )(stream, freq, states, n_valid)
+
+
+def rans_decode_pallas_v0(lane_words, freq, states, n_valid, *,
+                          rows_per_step: int = None, interpret: bool = True):
+    """Version-0 decode twin: per-lane word streams + header tables.
 
     lane_words: (S, T, 128) uint16 — word j of lane l at [s, j, l] (the
-    caller re-gathers the flat stream into this layout; tails past each
-    lane's length are never consumed so their value is irrelevant).
-    freq: (S, 256) int32 tables; states: (S, 128) uint32 initial lane states.
-    n_valid: (S, 1) int32 — must equal the encoder's (the decoder skips the
-    same padding positions the encoder skipped).
-    Returns (S, T, 128) int8 decoded payload rows, zeros past n_valid.
+    caller re-gathers the flat lane-major stream into this layout; tails
+    past each lane's length are never consumed).  Kept so PR-4-era archives
+    and checkpoints stay decodable across the row-major format change.
     """
     S, T, L = lane_words.shape
     if L != N_LANES:
         raise ValueError(f"expected {N_LANES} lanes, got {L}")
+    if T % T_TILE:
+        raise ValueError(f"rows {T} not a multiple of {T_TILE}")
+    rps = _rows_per_step(rows_per_step, interpret, T)
     return pl.pallas_call(
-        _decode_kernel,
-        grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
-            pl.BlockSpec((1, 256), lambda s: (s, 0)),
-            pl.BlockSpec((1, N_LANES), lambda s: (s, 0)),
-            pl.BlockSpec((1, 1), lambda s: (s, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, T, N_LANES), lambda s: (s, 0, 0)),
+        functools.partial(_decode_kernel_v0, rows_per_step=rps),
         out_shape=jax.ShapeDtypeStruct((S, T, N_LANES), jnp.int8),
         interpret=interpret,
     )(lane_words, freq, states, n_valid)

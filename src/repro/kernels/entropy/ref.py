@@ -1,11 +1,21 @@
 """Staged pure-jnp oracle for the interleaved-rANS coder (bit-exact target).
 
-The reference runs the coder as separate full-stripe passes — histogram,
-table build, then one ``lax.scan`` over rows vectorized over (shard, lane) —
-i.e. the pre-fusion pipeline with one HBM round-trip per stage, exactly like
-``kernels/seal/ref.py`` mirrors the fused seal kernel.  Outputs must match
-``rans.rans_encode_pallas`` / ``rans_decode_pallas`` bit-for-bit: the coder
-is all-integer, so there is no tolerance anywhere.
+The reference runs the coder as separate full-stripe passes — one-hot
+matmul histogram, table build (frequencies + Granlund-Montgomery
+reciprocals), then one ``lax.scan`` over rows vectorized over
+(shard, lane) — i.e. the pre-fusion pipeline with one HBM round-trip per
+stage, exactly like ``kernels/seal/ref.py`` mirrors the fused seal kernel.
+Outputs must match ``rans.rans_encode_pallas`` / ``rans_decode_pallas``
+bit-for-bit: the coder is all-integer (and the histogram's f32 partial
+sums are all exact integer counts < 2^24, so any summation order agrees),
+so there is no tolerance anywhere.  The scan steps per *row* while the
+kernel steps per (G, 128) lane-group tile; the carried math is identical,
+so the schedules agree bit-for-bit.
+
+Both stream versions are mirrored: ``rans_decode_ref`` consumes the
+version-1 row-major word stream with a scalar prefix-sum pointer per
+shard, ``rans_decode_ref_v0`` the PR-4 lane-major layout with per-lane
+pointers.
 """
 
 from __future__ import annotations
@@ -17,23 +27,31 @@ import jax.numpy as jnp
 
 from repro.kernels.entropy.rans import (
     N_LANES,
-    PROB_SCALE,
     RANS_L,
     _dec_step,
     _enc_step,
+    _histogram,
+    build_dec_table,
+    build_enc_tables,
     build_freq_table,
     slot_to_symbol,
 )
 
-__all__ = ["STAGED_PASSES", "N_STAGED_PASSES", "rans_encode_ref", "rans_decode_ref"]
+__all__ = [
+    "STAGED_PASSES",
+    "N_STAGED_PASSES",
+    "rans_encode_ref",
+    "rans_decode_ref",
+    "rans_decode_ref_v0",
+]
 
 # One entry per full-payload pass in the staged pipeline (the fused kernel
 # does all of them in one VMEM residency per shard).
 STAGED_PASSES = (
-    "byte histogram (read payload)",
-    "frequency-table normalize (256-entry, table-only)",
+    "one-hot matmul histogram (read payload)",
+    "table build: freqs + integer reciprocals (256-entry, table-only)",
     "interleaved encode scan (read payload, write words+mask)",
-    "emission compaction (read words+mask, write stream)",
+    "emission rank-select compaction (read words+mask, write stream)",
 )
 N_STAGED_PASSES = len(STAGED_PASSES)
 
@@ -44,32 +62,30 @@ def _valid_mask(S: int, T: int, n_valid: jax.Array) -> jax.Array:
     return gidx < n_valid.reshape(S, 1, 1)
 
 
-def rans_encode_ref(codes: jax.Array, n_valid: jax.Array) -> Tuple[jax.Array, ...]:
+def rans_encode_ref(codes: jax.Array, n_valid: jax.Array,
+                    division: str = "divide") -> Tuple[jax.Array, ...]:
     """Staged encode: same signature/outputs as ``rans_encode_pallas``."""
     S, T, L = codes.shape
     assert L == N_LANES, codes.shape
     vals = (codes.astype(jnp.int32)) & 0xFF                  # (S, T, 128)
     vmask = _valid_mask(S, T, n_valid)
 
-    # pass 1-2: histogram + table per shard (padding -> dropped overflow bin)
-    hidx = jnp.where(vmask, vals, 256)
-    counts = jax.vmap(
-        lambda v: jnp.zeros((257,), jnp.int32).at[v.reshape(-1)].add(1)[:256]
-    )(hidx)
+    # pass 1-2: one-hot matmul histogram + tables per shard
+    counts = jax.vmap(_histogram)(vals, n_valid.reshape(S))
     freq = jax.vmap(build_freq_table)(counts)                # (S, 256)
-    cum = jnp.cumsum(freq, axis=-1) - freq
-    f_u = freq.astype(jnp.uint32)
-    c_u = cum.astype(jnp.uint32)
+    packed, mprime, rcp = jax.vmap(build_enc_tables)(freq)
+    aux = {"divide": packed, "reciprocal": mprime, "rcp32": rcp}[division]
 
     # pass 3: encode scan over rows, reversed (rANS codes backwards),
     # vectorized over the (shard, lane) axes
     def step(x, xs):
         row, valid = xs                                      # (S, 128) each
-        f = jnp.take_along_axis(f_u, row, axis=-1)
-        c = jnp.take_along_axis(c_u, row, axis=-1)
-        x2, w, m = _enc_step(x, f, c)
+        p = jnp.take_along_axis(packed, row, axis=-1)
+        a = jnp.take_along_axis(aux, row, axis=-1)
+        x2, x_pre, e = _enc_step(x, p, a, division=division)
         x = jnp.where(valid, x2, x)                          # pad lanes: no-op
-        return x, (w, (m & valid).astype(jnp.uint8))
+        w = (x_pre & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        return x, (w, (e & valid).astype(jnp.uint8))
 
     x0 = jnp.full((S, N_LANES), RANS_L, jnp.uint32)
     states, (w_rev, m_rev) = jax.lax.scan(
@@ -83,23 +99,60 @@ def rans_encode_ref(codes: jax.Array, n_valid: jax.Array) -> Tuple[jax.Array, ..
 
 
 def rans_decode_ref(
+    stream: jax.Array,
+    freq: jax.Array,
+    states: jax.Array,
+    n_valid: jax.Array,
+    *,
+    rows: int,
+) -> jax.Array:
+    """Version-1 staged decode: same outputs as ``rans_decode_pallas``.
+
+    stream: (S, W) uint16 row-major words; one scalar read pointer per
+    shard advances by popcount(need) each row (exclusive in-row prefix sum
+    assigns the words to lanes in lane order).
+    """
+    S, W = stream.shape
+    vmask = _valid_mask(S, rows, n_valid)
+    dec_packed = jax.vmap(build_dec_table)(freq)
+    slot2sym = jax.vmap(slot_to_symbol)(freq)
+
+    def step(carry, valid):
+        x, base = carry
+        x2, s, need = jax.vmap(_dec_step)(x, dec_packed, slot2sym)
+        need = need & valid
+        csum = jnp.cumsum(need.astype(jnp.int32), axis=-1)   # (S, 128)
+        pos = base[:, None] + csum - need.astype(jnp.int32)  # exclusive
+        w = jnp.take_along_axis(
+            stream, jnp.minimum(pos, W - 1), axis=1
+        ).astype(jnp.uint32)
+        x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
+        x = jnp.where(valid, x2, x)                          # pad lanes: no-op
+        base = base + csum[:, -1]
+        signed = jnp.where(valid, s - ((s & 0x80) << 1), 0).astype(jnp.int8)
+        return (x, base), signed
+
+    base0 = jnp.zeros((S,), jnp.int32)
+    _, out = jax.lax.scan(step, (states, base0), jnp.swapaxes(vmask, 0, 1))
+    return jnp.swapaxes(out, 0, 1)                           # (S, rows, 128)
+
+
+def rans_decode_ref_v0(
     lane_words: jax.Array,
     freq: jax.Array,
     states: jax.Array,
     n_valid: jax.Array,
 ) -> jax.Array:
-    """Staged decode: same signature/outputs as ``rans_decode_pallas``."""
+    """Version-0 staged decode: lane-major words, per-lane read pointers."""
     S, T, L = lane_words.shape
     assert L == N_LANES, lane_words.shape
     vmask = _valid_mask(S, T, n_valid)
-    cum_excl = jnp.cumsum(freq, axis=-1) - freq
-    slot2sym = jax.vmap(
-        lambda f: slot_to_symbol(f, jnp.arange(PROB_SCALE, dtype=jnp.int32))
-    )(freq)
+    dec_packed = jax.vmap(build_dec_table)(freq)
+    slot2sym = jax.vmap(slot_to_symbol)(freq)
 
     def step(carry, valid):
         x, ptr = carry
-        x2, s, need = jax.vmap(_dec_step)(x, freq, cum_excl, slot2sym)
+        x2, s, need = jax.vmap(_dec_step)(x, dec_packed, slot2sym)
         need = need & valid
         w = jnp.take_along_axis(
             lane_words, jnp.minimum(ptr, T - 1)[:, None, :], axis=1

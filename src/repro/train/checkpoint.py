@@ -142,7 +142,13 @@ def save_checkpoint(
     }
 
     if codec_name == "rans":
-        # chunk the RAW payload into S stripe tiles; entropy runs on-device
+        # chunk the RAW payload into S stripe tiles; entropy runs on-device.
+        # Big states grow the shard count so each tile stays inside the
+        # coder's per-shard bound (entropy_ops.MAX_ROWS rows of 128 lanes)
+        # instead of failing the encode launch.
+        max_shard = entropy_ops.MAX_ROWS * 128
+        n_shards = max(n_shards, -(-len(raw) // max_shard))
+        meta["n_shards"] = n_shards
         shard_len = (len(raw) + n_shards - 1) // n_shards
         padded = raw + b"\0" * (shard_len * n_shards - len(raw))
         flats, emetas = entropy_ops.encode_payloads(

@@ -15,7 +15,12 @@ from repro.core.archival.pipeline import (
 from repro.core.codec.layered_codec import CodecConfig, init_codec
 from repro.core.crypto import rlwe
 from repro.kernels.entropy import ops as eops
-from repro.kernels.entropy.rans import N_LANES, PROB_SCALE, build_freq_table
+from repro.kernels.entropy.rans import (
+    N_LANES,
+    PROB_SCALE,
+    STREAM_VERSION,
+    build_freq_table,
+)
 
 CFG = CodecConfig(n_layers=2, latent_ch=4, feat_ch=16, mv_cond_ch=4)
 
@@ -122,11 +127,104 @@ def test_compression_ratio_on_latents():
 
 def test_stream_is_self_contained():
     """Tables/lengths/states travel in the stream header; metas carry only
-    lengths + row count (what the archive manifest stores)."""
+    lengths + row count + stream version (what the archive manifest
+    stores)."""
     payloads = [_latents(0, 5000)]
     comp, metas = eops.encode_payloads(payloads)
-    assert set(metas[0]) == {"codec", "n_raw", "n_comp", "rows"}
+    assert set(metas[0]) == {"codec", "version", "n_raw", "n_comp", "rows"}
+    assert metas[0]["version"] == STREAM_VERSION == 1
     assert int(comp[0].shape[0]) == metas[0]["n_comp"] >= eops.HEADER_BYTES
+
+
+def test_division_strategies_bit_identical():
+    """All three per-symbol division strategies — hardware udiv, the
+    error-repaired f32 reciprocal (TPU default; Mosaic has no integer
+    divide), and the Granlund-Montgomery mulhi — must produce identical
+    streams bit-for-bit."""
+    payloads = [_latents(3, 9000), _latents(4, 100)]
+    outs = {
+        d: eops.encode_payloads(payloads, division=d)
+        for d in ("divide", "rcp32", "reciprocal")
+    }
+    ref_c, ref_m = outs["divide"]
+    for d, (c, m) in outs.items():
+        assert m == ref_m, d
+        for a, b in zip(c, ref_c):
+            assert _eq(a, b), d
+
+
+def test_row_and_tile_schedules_bit_identical():
+    """The loop schedule (rows per trip: 1 on CPU interpret, the (8, 128)
+    sublane tile on TPU) is pure scheduling — outputs must be identical."""
+    from repro.kernels.entropy.rans import (
+        N_GROUPS,
+        rans_decode_pallas,
+        rans_encode_pallas,
+    )
+
+    n = 5000
+    T = eops.rows_for(n)
+    flat = _latents(9, n)
+    codes = jnp.stack([jnp.pad(flat, (0, T * N_LANES - n)).reshape(T, N_LANES)])
+    nv = jnp.asarray([[n]], jnp.int32)
+    outs = [
+        rans_encode_pallas(codes, nv, rows_per_step=r, interpret=True)
+        for r in (1, N_GROUPS)
+    ]
+    for a, b in zip(*outs):
+        assert _eq(a, b)
+    # decode twin: both schedules reproduce the payload from the packed
+    # version-1 stream
+    comp, metas = eops.encode_payloads([flat])
+    stream, freq, states = eops._parse_streams(
+        jnp.stack([jnp.pad(jnp.asarray(comp[0]).astype(jnp.uint8),
+                           (0, (metas[0]["n_comp"] % 2)))])
+    )
+    for r in (1, N_GROUPS):
+        got = rans_decode_pallas(
+            stream, freq, states, nv, rows=T, rows_per_step=r, interpret=True
+        )
+        assert _eq(got[0].reshape(-1)[:n], flat)
+
+
+def test_golden_v0_stream_decodes():
+    """A PR-4-era version-0 (128-lane, lane-major words) stream captured at
+    the old HEAD must keep decoding after the lane-group format change —
+    on both the kernel and the staged-reference paths, and sharded."""
+    import base64
+    import json
+    import os
+
+    with open(os.path.join(os.path.dirname(__file__),
+                           "data_rans_v0.json")) as f:
+        g = json.load(f)
+    comps = [
+        jnp.asarray(np.frombuffer(base64.b64decode(b), np.int8))
+        for b in g["streams_b64"]
+    ]
+    wants = [
+        np.frombuffer(base64.b64decode(b), np.int8)
+        for b in g["payloads_b64"]
+    ]
+    assert "version" not in g["metas"][0]  # recorded before the field existed
+    assert g["metas"][1].get("raw") is True  # raw-skip shard rides along
+    for use_pallas in (True, False):
+        back = eops.decode_payloads(comps, g["metas"], use_pallas=use_pallas)
+        for got, want in zip(back, wants):
+            assert np.array_equal(np.asarray(got), want)
+    # re-encoding the same payload now yields a version-1 stream of the
+    # same compressed size (the format change moves words, never adds any)
+    comp1, metas1 = eops.encode_payloads(
+        [jnp.asarray(w) for w in wants]
+    )
+    assert metas1[0]["version"] == STREAM_VERSION
+    assert metas1[0]["n_comp"] == g["metas"][0]["n_comp"]
+    from repro.distributed.archival import entropy_decode_sharded
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    back = entropy_decode_sharded(comps, g["metas"], mesh=mesh)
+    for got, want in zip(back, wants):
+        assert np.array_equal(np.asarray(got), want)
 
 
 def test_corrupt_meta_rejected():

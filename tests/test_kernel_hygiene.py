@@ -73,3 +73,65 @@ def test_no_float_division_by_constant(path):
         "x*(1/c); use an explicit exact reciprocal multiply or integer "
         "ops):\n" + "\n".join(offenders)
     )
+
+
+def _banned_tpu_constructs(source: str):
+    """Yield (line, text) for ``searchsorted`` uses and ``.at[...].add``
+    scatter-adds.
+
+    Both serialize on TPU (and are slow scalar loops on the CPU backend
+    too): the entropy coder replaced its 4096-entry ``searchsorted``
+    decode-table build with a cumulative-bucket fill (scatter-max +
+    running max) and its scatter-add histogram with a one-hot matmul, and
+    this test keeps those TPU-hostile constructs from silently returning
+    to any kernel source.  Token-based so docstrings/comments cannot
+    false-positive; ``.at[...].set`` / ``.at[...].max`` stay allowed (the
+    emission pack and the bucket fill use them on small index sets).
+    """
+    toks = [
+        t
+        for t in tokenize.generate_tokens(io.StringIO(source).readline)
+        if t.type not in (token.NL, token.NEWLINE, token.INDENT, token.DEDENT,
+                          token.COMMENT)
+    ]
+    for i, t in enumerate(toks):
+        if t.type == token.NAME and t.string == "searchsorted":
+            yield t.start[0], t.line.strip()
+        # the scatter-add pattern: OP'.' NAME'at' OP'[' ... OP']' OP'.'
+        # NAME'add' OP'('
+        if (
+            t.type == token.OP and t.string == "."
+            and i + 2 < len(toks)
+            and toks[i + 1].type == token.NAME and toks[i + 1].string == "at"
+            and toks[i + 2].type == token.OP and toks[i + 2].string == "["
+        ):
+            depth = 0
+            for k in range(i + 2, len(toks)):
+                if toks[k].type == token.OP and toks[k].string == "[":
+                    depth += 1
+                elif toks[k].type == token.OP and toks[k].string == "]":
+                    depth -= 1
+                    if depth == 0:
+                        if (
+                            k + 3 < len(toks)
+                            and toks[k + 1].string == "."
+                            and toks[k + 2].string == "add"
+                            and toks[k + 3].string == "("
+                        ):
+                            yield t.start[0], t.line.strip()
+                        break
+
+
+@pytest.mark.parametrize("path", _kernel_sources(), ids=os.path.basename)
+def test_no_searchsorted_or_scatter_add(path):
+    with open(path) as f:
+        offenders = [
+            f"{path}:{line}: {text}"
+            for line, text in _banned_tpu_constructs(f.read())
+        ]
+    assert not offenders, (
+        "TPU-hostile construct in kernel code (searchsorted lowers to a "
+        "serial binary-search gather loop, .at[...].add to a serializing "
+        "scatter; use a cumulative-bucket fill / one-hot matmul instead):\n"
+        + "\n".join(offenders)
+    )
