@@ -250,9 +250,11 @@ def sharded_seal() -> List[Row]:
         )
 
     # ---- multi-stream ingest coalescing: 16 ragged GOPs per round.
-    # streams=1: one camera, GOPs arrive serially -> each seals alone (one
-    # launch per GOP, parity over a 1-shard stripe).  streams=16: cross-
-    # stream coalescing fills S-shard stripes -> one launch per stripe.
+    # streams=1: one camera, GOPs arrive serially — they still coalesce
+    # (a single stream fills S-shard stripes over time; the partial-stripe
+    # drain covers the tail), so the launch count matches the multi-stream
+    # case.  The naive one-launch-per-GOP sealing is what the coalescer
+    # replaced; it survives only as the ``naive_launches`` denominator.
     gop_lens = [
         int(rng.integers(8 * 512 * 2 + 4, 8 * 512 * 4)) for _ in range(16)
     ]
@@ -261,22 +263,36 @@ def sharded_seal() -> List[Row]:
     ]
     gop_bytes = sum(gop_lens)
 
-    def run_single_stream():  # per-GOP stripes, no stripe-mates to wait for
+    def coalesce_1stream():
+        coal1 = StripeCoalescer(n_shards=S)
+        out = []
+        for g in gops:
+            out += coal1.add(0, g, {"n_i8": int(g.shape[0])})
+        return out + coal1.flush()
+
+    def run_single_stream():  # one camera, GOPs queued in arrival order
         return [
-            sops.seal_stripe([g], keys[:1], nonces[:1]).sealed for g in gops
+            sops.seal_stripe(
+                [g.payload for g in cs.gops],
+                keys[: len(cs.gops)], nonces[: len(cs.gops)],
+                pad_rows=cs.pad_rows,
+            ).sealed
+            for cs in coalesce_1stream()
         ]
 
+    launches_1 = len(coalesce_1stream())
     us1 = timeit(run_single_stream)
     record_json(
         "seal_ingest_1stream",
         us_per_call=us1,
         gbps=_gbps(gop_bytes, us1),
-        launches=len(gops),
+        launches=launches_1,
+        naive_launches=len(gops),
         device_count=1,
     )
     rows.append(
         ("kernel/seal_ingest_1stream", us1,
-         f"gops=16 launches={len(gops)} (one per GOP)"
+         f"gops=16 launches={launches_1} (vs {len(gops)} naive per-GOP)"
          f" GB/s={_gbps(gop_bytes, us1):.4f}")
     )
 
@@ -350,14 +366,17 @@ def entropy_coder() -> List[Row]:
         np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(comp, comp_r)
     )
-    # the precomputed-reciprocal division strategies (what Mosaic runs —
-    # no integer divide on TPU) must produce bit-identical streams
+    # the precomputed-reciprocal division strategy (what Mosaic runs — no
+    # integer divide on TPU) must produce bit-identical streams.  Asserted
+    # (``exact_recip``) rather than timed as its own row: the strategies
+    # share the entire datapath except one multiply, so a second timed run
+    # only measured machine noise.
     comp_rcp, metas_rcp = eops.encode_payloads(payloads, division="rcp32")
-    us_rcp = timeit(lambda: eops.encode_payloads(payloads, division="rcp32"))
-    ok = ok and metas_rcp == metas and all(
+    exact_recip = metas_rcp == metas and all(
         np.array_equal(np.asarray(a), np.asarray(b))
         for a, b in zip(comp_rcp, comp)
     )
+    ok = ok and exact_recip
     back = eops.decode_payloads(comp, metas, use_pallas=True)
     ok = ok and all(
         np.array_equal(np.asarray(a), np.asarray(b))
@@ -401,13 +420,7 @@ def entropy_coder() -> List[Row]:
         vs_host_speed=vs_host,
         host_entropy_bytes=t["host_entropy_bytes"],
         host_bytes_eliminated=t["host_bytes_eliminated"],
-    )
-    record_json(
-        "entropy_fused_recip",
-        us_per_call=us_rcp,
-        gbps=_gbps(raw_bytes, us_rcp),
-        device_count=1,
-        exact=ok,
+        exact_recip=exact_recip,
     )
     record_json(
         "entropy_staged_ref",
@@ -430,17 +443,156 @@ def entropy_coder() -> List[Row]:
          f" enc={_gbps(raw_bytes, us_k):.4f}GB/s"
          f" dec={_gbps(raw_bytes, us_d):.4f}GB/s"
          f" G={N_GROUPS} lanes={N_LANES} v{STREAM_VERSION}"
-         f" vs_host_zlib={vs_host:.2f}x host_entropy_bytes=0"),
+         f" vs_host_zlib={vs_host:.2f}x host_entropy_bytes=0"
+         f" exact_recip={exact_recip}"),
         ("kernel/entropy_rans_decode", us_d,
          f"fused decode twin dec={_gbps(raw_bytes, us_d):.4f}GB/s"),
-        ("kernel/entropy_rans_recip", us_rcp,
-         "reciprocal-division strategy (TPU path), bit-identical streams"),
         ("kernel/entropy_staged_ref", us_r,
          f"passes={eops._ref.N_STAGED_PASSES} pure-jnp oracle"),
         (f"kernel/entropy_host_{host_entropy.CODEC_NAME}", us_h,
          f"ratio={raw_bytes / host_comp:.2f}x host_entropy_bytes={raw_bytes}"
          f" (the stage the kernel replaces; on-device is {vs_host:.2f}x its"
          " speed)"),
+    ]
+
+
+def entropy_seal_fused() -> List[Row]:
+    """One-launch archival: rANS + pack + raw-skip + ChaCha20 + RAID P/Q in
+    a SINGLE Pallas launch per stripe batch, K coalesced stripes riding the
+    launch's batch axis.
+
+    Structural claims (the TPU-facing numbers): launches=1 per batch — so
+    ``launches_per_stripe = 1/K < 1`` for a coalesced batch, vs 2 chained
+    launches per stripe before fusion — zero host-side entropy bytes, and
+    bit-identical archives vs the chained entropy -> seal path.  Wall clock
+    is CPU-interpret and compute-bound (see the gap note in the JSON row).
+    """
+    from repro.common import compress as host_entropy
+    from repro.core.archival.raid import gf_pow_gen
+    from repro.kernels.entropy import ops as eops
+    from repro.kernels.entropy.rans import N_LANES
+    from repro.kernels.fused import ops as fops
+    from repro.kernels.seal import ops as sops
+
+    rng = np.random.default_rng(6)
+    S, n, K = 4, 64 * 1024, 8
+    stripes = [
+        [
+            jnp.asarray(
+                np.clip(np.round(rng.normal(0.0, 2.0, n)), -128, 127),
+                jnp.int8,
+            )
+            for _ in range(S)
+        ]
+        for _ in range(K)
+    ]
+    keys = [
+        jnp.asarray(rng.integers(0, 2**32, (S, 8), dtype=np.uint32))
+        for _ in range(K)
+    ]
+    nonces = [
+        jnp.asarray(rng.integers(0, 2**32, (S, 3), dtype=np.uint32))
+        for _ in range(K)
+    ]
+    stripe_bytes = S * n
+
+    us_1 = timeit(
+        lambda: fops.entropy_seal_stripe(stripes[0], keys[0], nonces[0])
+    )
+    us_k = timeit(lambda: fops.entropy_seal_stripes(stripes, keys, nonces))
+
+    # the chained two-launch-per-stripe path it replaces, timed in the SAME
+    # run on the SAME payloads (entropy encode launch + fused seal launch)
+    def run_chained():
+        outs = []
+        for fl, kk, nn in zip(stripes, keys, nonces):
+            comp, metas = eops.encode_payloads(fl)
+            outs.append((sops.seal_stripe(comp, kk, nn), metas))
+        return outs
+
+    us_c = timeit(run_chained)
+
+    # bit-identity: fused batch vs chained, plus the staged jnp oracle
+    fused = fops.entropy_seal_stripes(stripes, keys, nonces)
+    chained = run_chained()
+    ok = True
+    for (fs, fm), (cs_, cm) in zip(fused, chained):
+        ok = ok and fm == cm
+        ok = ok and all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in ((fs.sealed, cs_.sealed), (fs.p, cs_.p),
+                         (fs.q, cs_.q))
+        )
+        ok = ok and fs.n_words == cs_.n_words and fs.n_i8 == cs_.n_i8
+    ref0, refm = fops.entropy_seal_stripe(
+        stripes[0], keys[0], nonces[0], use_pallas=False
+    )
+    ok = ok and refm == fused[0][1] and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in ((ref0.sealed, fused[0][0].sealed),
+                     (ref0.q, fused[0][0].q))
+    )
+
+    # launch count from the fused core's jaxpr over the full K-stripe batch
+    T = eops.rows_for(n)
+    codes = jnp.stack([p.reshape(T, N_LANES) for fl in stripes for p in fl])
+    n_valid = jnp.full((K * S, 1), n, jnp.int32)
+    keys_a = jnp.concatenate(keys)
+    nonces_a = jnp.concatenate(nonces)
+    q_coef = jnp.asarray(
+        [gf_pow_gen(s) for _ in range(K) for s in range(S)], jnp.uint32
+    ).reshape(-1, 1)
+    launches = _count_pallas_launches(
+        lambda c, v, kk, nn, qc: fops._fused_core(
+            c, v, kk, nn, qc, n_shards=S, parity="raid6", use_pallas=True,
+            interpret=True, division="divide",
+        ),
+        codes, n_valid, keys_a, nonces_a, q_coef,
+    )
+
+    # the host stage the on-device coder replaces, over the same K stripes
+    blobs = [np.asarray(p, np.int8).tobytes() for fl in stripes for p in fl]
+    us_h = timeit(lambda: [host_entropy.compress(b) for b in blobs])
+    vs_host = us_h / us_k if us_k else float("nan")
+    vs_chained = us_c / us_k if us_k else float("nan")
+
+    record_json(
+        "entropy_seal_fused",
+        us_per_call=us_k,
+        us_per_stripe=us_k / K,
+        us_single_stripe=us_1,
+        us_chained_sum=us_c,
+        gbps=_gbps(K * stripe_bytes, us_k),
+        launches=launches,
+        launches_per_stripe=launches / K,
+        chained_launches_per_stripe=2,
+        device_count=1,
+        stripes_per_launch=K,
+        exact=ok,
+        vs_host_speed=vs_host,
+        vs_chained_speed=vs_chained,
+        host_entropy_bytes=0,
+        gap_note=(
+            "vs_host_speed < 1.0 on this runner: single-core CPU-interpret "
+            "wall clock is bound by the rANS coding compute, which the "
+            "fused and chained paths share, not by launch dispatch or HBM "
+            "round-trips — the costs fusion removes.  vs_chained_speed ~1 "
+            "for the same reason.  The structural wins the row gates on "
+            "(launches=1 per K-stripe batch vs 2K chained, "
+            "host_entropy_bytes=0, bit-identical archives) are the "
+            "TPU-facing claim."
+        ),
+    )
+    return [
+        ("kernel/entropy_seal_fused_8x4x64KiB", us_k,
+         f"exact={ok} launches={launches} ({launches / K:.3f}/stripe,"
+         f" chained=2/stripe) stripes/launch={K}"
+         f" vs_chained={vs_chained:.2f}x vs_host_zlib={vs_host:.2f}x"
+         f" host_entropy_bytes=0"),
+        ("kernel/entropy_seal_fused_1stripe", us_1,
+         f"single-stripe launch ({_gbps(stripe_bytes, us_1):.4f}GB/s)"),
+        ("kernel/entropy_seal_chained_sum", us_c,
+         "pre-fusion baseline: entropy launch + seal launch per stripe"),
     ]
 
 

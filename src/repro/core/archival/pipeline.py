@@ -3,35 +3,39 @@ replay loop of Salient Store (Fig. 1, both directions).
 
 Write path (runs where the data shard lives — the CSD analogue):
   1. layered neural codec encodes the GOP (int8 codes + int8 motion fields);
-  2. the flat codes are entropy-coded by the interleaved-rANS kernel
-     (``repro.kernels.entropy``, ``codec_name="rans"``) — per shard, an
-     incompressible payload is stored raw instead (adaptive raw-skip,
-     flagged in the manifest and honored by every decode path);
-  3. the compressed streams are packed into uint32 words and sealed
-     (R-LWE KEM + ChaCha20);
-  4. sealed bodies from the S shards of a stripe are parity-coded
-     (RAID-5/6) so any 1-2 shard losses are recoverable;
-  5. AT SEAL TIME the stripe is indexed into the salience catalog
+  2. the flat codes go through the ONE-LAUNCH archival kernel
+     (``repro.kernels.fused``, ``codec_name="rans"`` — the default): one
+     Pallas launch per stripe batch runs interleaved-rANS entropy coding
+     (with per-shard adaptive raw-skip, flagged in the manifest and
+     honored by every decode path), v1 stream packing into uint32 words,
+     the ChaCha20 XOR-seal (session keys R-LWE-KEM-encapsulated host-side,
+     tiny), and RAID-5/6 parity over the S shards — the packed streams
+     are never materialized in HBM between stages, and K coalesced
+     stripes batch onto the launch's stripe axis so dispatch overhead
+     amortizes K-fold.  (The pre-fusion chained launches —
+     ``repro.kernels.entropy`` then ``repro.kernels.seal`` — remain the
+     decode path, the host-codec path, and the bit-exact reference.);
+  3. AT SEAL TIME the stripe is indexed into the salience catalog
      (``core/archival/catalog.py``): per-GOP pooled feature + novelty,
      recorded while the backbone features are hot — queries never decode.
 
 Read path (the archive is an ACTIVE participant in continuous learning,
 not a write-only sink):
-  6. the trainer asks the query planner (``core/csd/retrieval.py``) for
+  4. the trainer asks the query planner (``core/csd/retrieval.py``) for
      the most-novel archived GOPs vs its CURRENT exemplar centroids; the
      plan prices host-vs-CSD decode (``csd/costmodel.py``) and names, per
      stripe, exactly the shard subset to read;
-  7. ``restore_stripe(shards=...)`` decodes ONLY those shards — one fused
+  5. ``restore_stripe(shards=...)`` decodes ONLY those shards — one fused
      unseal launch over the subset — falling back to a parity-based
      degraded read (``recover_stripe``) when a wanted shard is missing or
      its CSD is flagged dead by the ``StragglerMonitor``;
-  8. the decoded GOPs join the training batch (``train/trainer.py``'s
+  6. the decoded GOPs join the training batch (``train/trainer.py``'s
      replay stage), closing the loop: ingest -> archive -> query -> replay.
 
-With the entropy stage on-device the whole codes -> entropy -> pack ->
-ChaCha20 -> parity chain runs without a host roundtrip; only disk I/O and
-O(1) manifest metadata (lengths, KEM polys, nonces, salience descriptors)
-are host-side, and they cover *sealed, compressed* data — the paper's
+With the whole codes -> entropy -> pack -> ChaCha20 -> parity chain fused
+into one launch nothing round-trips the host OR HBM mid-chain; only disk
+I/O and O(1) manifest metadata (lengths, KEM polys, nonces, salience
+descriptors) are host-side, and they cover *sealed, compressed* data — the paper's
 data-movement thesis in BOTH directions: ingest moves compressed bytes,
 retrieval moves only the planned shard subset (the ``retrieval`` bench
 gates on that byte ratio).  ``ArchiveConfig.codec_name`` selects ``"rans"``
@@ -43,10 +47,12 @@ the raw-skip flag) so ``restore_stripe`` dispatches on what was written.
 Granularities and seams:
 
 * ``archive_stripe`` / ``restore_stripe`` — the batched hot path.  All S
-  shards of a stripe are packed, ChaCha-sealed, and parity-coded in ONE
-  fused Pallas launch (``repro.kernels.seal``); only the tiny per-shard KEM
-  runs outside the kernel.  ``use_pallas=False`` dispatches the staged jnp
-  reference instead (bit-identical outputs).
+  shards of a stripe are entropy-coded, packed, ChaCha-sealed, and
+  parity-coded in ONE fused Pallas launch (``repro.kernels.fused``); only
+  the tiny per-shard KEM runs outside the kernel.  ``seal_payload_stripes``
+  is the K-stripe batched entry (one launch per homogeneous stripe group).
+  ``use_pallas=False`` dispatches the staged jnp reference instead
+  (bit-identical outputs).
 * ``restore_stripe_payloads`` — the retrieval datapath below the neural
   codec: subset unseal + entropy decode + degraded-read fallback, shared
   by ``restore_stripe`` and the byte-accounting benches.
@@ -64,14 +70,14 @@ on storage device s, and the whole point of the CSD offload is that each
 device seals *its own* shard locally while only the tiny parity reduction
 crosses devices.  On the TPU adaptation the ``data`` mesh axis plays the
 CSD-array role (see ``distributed/sharding.py``): ``repro.distributed.
-archival`` shard_maps the fused seal kernel over ``data`` so every mesh
-shard runs one local kernel launch on its slice of the stripe, then
+archival`` shard_maps the fused entropy+seal kernel over ``data`` so every
+mesh shard runs one local kernel launch on its slice of the stripe, then
 combines RAID-5 P / RAID-6 Q with a cross-shard XOR reduce (exact, order-
 free, bit-identical to this module's single-device path).  The hooks below
-(``encode_gop_payload`` / ``seal_payload_stripe`` / the ``seal_fn`` /
-``unseal_fn`` / ``entropy_fn`` / ``entropy_decode_fn`` parameters) are the
-seams that path plugs into — subset reads ride the same seams via
-``shard_ids``.
+(``encode_gop_payload`` / ``seal_payload_stripe`` / the ``fused_fn`` /
+``seal_fn`` / ``unseal_fn`` / ``entropy_fn`` / ``entropy_decode_fn``
+parameters) are the seams that path plugs into — subset reads ride the
+same seams via ``shard_ids``.
 """
 
 from __future__ import annotations
@@ -98,6 +104,7 @@ from repro.core.crypto.hybrid import (
     unseal,
 )
 from repro.kernels.entropy import ops as entropy_ops
+from repro.kernels.fused import ops as fused_ops
 from repro.kernels.seal import ops as seal_ops
 
 __all__ = [
@@ -112,6 +119,7 @@ __all__ = [
     "entropy_encode_payloads",
     "entropy_decode_payloads",
     "seal_payload_stripe",
+    "seal_payload_stripes",
     "archive_stripe",
     "restore_stripe",
     "restore_stripe_payloads",
@@ -337,6 +345,89 @@ def entropy_decode_payloads(
     raise ValueError(f"unknown entropy codec {name!r}")
 
 
+def _assemble_stripe(stripe, mats, manifests: List[Dict]) -> StripeArchive:
+    """Wrap a SealedStripe + its KEM material as a ``StripeArchive``."""
+    blocks = [
+        ArchivedBlock(
+            SealedBlock(
+                m.kem_c1, m.kem_c2, m.nonce, stripe.body(s), stripe.n_words[s]
+            ),
+            manifests[s],
+        )
+        for s, m in enumerate(mats)
+    ]
+    parity = None
+    if stripe.p is not None:
+        parity = {"p": _u32_rows_to_u8(stripe.p), "pad_to": stripe.pad_words}
+        if stripe.q is not None:
+            parity["q"] = _u32_rows_to_u8(stripe.q)
+    return StripeArchive(blocks, parity)
+
+
+def seal_payload_stripes(
+    pub: rlwe.PublicKey,
+    stripes: List[List[jax.Array]],
+    manifests: List[List[Dict]],
+    keys: List[jax.Array],
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+    pad_rows=None,
+    fused_fn=None,
+) -> List[StripeArchive]:
+    """Batched ``seal_payload_stripe``: K stripes per fused kernel launch.
+
+    stripes / manifests / keys are per-stripe lists; ``pad_rows`` is None,
+    an int, or a per-stripe sequence (same re-bucketing semantics as the
+    singular).  For ``codec_name="rans"`` the whole batch goes through the
+    one-launch fused kernel (``repro.kernels.fused``): homogeneous stripes
+    share ONE launch with K stripes on the batch axis, so per-launch
+    dispatch amortizes K-fold and the packed streams never visit HBM
+    between entropy and seal.  ``fused_fn`` overrides the batched launch
+    (the sharded path passes ``entropy_seal_stripes`` with a shard_map'd
+    ``core_fn``).  Host codecs fall back to the per-stripe chained path.
+    Outputs are bit-identical to mapping ``seal_payload_stripe``.
+    """
+    n = len(stripes)
+    if not (n == len(manifests) == len(keys)):
+        raise ValueError(
+            f"{n} stripes vs {len(manifests)} manifests / {len(keys)} keys"
+        )
+    if isinstance(pad_rows, (list, tuple)):
+        pr_list = list(pad_rows)
+    else:
+        pr_list = [pad_rows] * n
+    if cfg.codec_name != "rans":
+        return [
+            seal_payload_stripe(
+                pub, f, m, k, cfg, use_pallas=use_pallas, pad_rows=pr
+            )
+            for f, m, k, pr in zip(stripes, manifests, keys, pr_list)
+        ]
+    mats = [
+        [
+            encapsulate_session(pub, jax.random.fold_in(k, s), cfg.rlwe)
+            for s in range(len(f))
+        ]
+        for k, f in zip(keys, stripes)
+    ]
+    fn = fused_fn or fused_ops.entropy_seal_stripes
+    results = fn(
+        stripes,
+        [jnp.stack([m.session for m in ms]) for ms in mats],
+        [jnp.stack([m.nonce for m in ms]) for ms in mats],
+        parity=cfg.parity,
+        use_pallas=use_pallas,
+        pad_rows=pr_list,
+    )
+    return [
+        _assemble_stripe(
+            stripe, ms, [dict(m, entropy=em) for m, em in zip(mfs, emetas)]
+        )
+        for (stripe, emetas), ms, mfs in zip(results, mats, manifests)
+    ]
+
+
 def seal_payload_stripe(
     pub: rlwe.PublicKey,
     flats: List[jax.Array],
@@ -348,17 +439,29 @@ def seal_payload_stripe(
     pad_rows: Optional[int] = None,
     seal_fn=None,
     entropy_fn=None,
+    fused_fn=None,
 ) -> StripeArchive:
     """Entropy-code + seal pre-encoded payloads as one parity stripe.
 
-    The entropy stage (``cfg.codec_name``) runs first — on-device for
-    "rans", so the compressed stream feeds pack + ChaCha20 + XOR + RAID
-    parity in the fused seal launch without visiting the host.  Per-shard
-    session keys are KEM-encapsulated host-side (tiny).  ``seal_fn`` /
-    ``entropy_fn`` override the respective launches — the sharded path
-    passes shard_map'd wrappers with the same signatures as
-    ``seal_ops.seal_stripe`` / ``entropy_ops.encode_payloads``.
+    For ``codec_name="rans"`` the default path is the ONE-LAUNCH fused
+    kernel (``repro.kernels.fused``): codes -> histogram/freq-table ->
+    rANS -> v1 pack -> raw-skip -> ChaCha20 XOR-seal -> RAID-P/Q in a
+    single Pallas launch, packed streams never materialized in HBM.
+    Per-shard session keys are KEM-encapsulated host-side first (tiny,
+    and the ``fold_in`` order matches the chained path, so archives are
+    bit-identical).  ``fused_fn`` overrides the fused launch (the sharded
+    path passes a shard_map'd wrapper); passing only ``seal_fn`` /
+    ``entropy_fn`` (same signatures as ``seal_ops.seal_stripe`` /
+    ``entropy_ops.encode_payloads``) keeps the two-launch chained path —
+    which also serves host codecs and stays the decode-side reference.
     """
+    if cfg.codec_name == "rans" and (
+        fused_fn is not None or (seal_fn is None and entropy_fn is None)
+    ):
+        return seal_payload_stripes(
+            pub, [flats], [manifests], [key], cfg, use_pallas=use_pallas,
+            pad_rows=[pad_rows], fused_fn=fused_fn,
+        )[0]
     flats, emetas = entropy_encode_payloads(
         flats, cfg, use_pallas=use_pallas, entropy_fn=entropy_fn
     )
@@ -384,21 +487,7 @@ def seal_payload_stripe(
         use_pallas=use_pallas,
         pad_rows=pad_rows,
     )
-    blocks = [
-        ArchivedBlock(
-            SealedBlock(
-                m.kem_c1, m.kem_c2, m.nonce, stripe.body(s), stripe.n_words[s]
-            ),
-            manifests[s],
-        )
-        for s, m in enumerate(mats)
-    ]
-    parity = None
-    if cfg.parity != "none":
-        parity = {"p": _u32_rows_to_u8(stripe.p), "pad_to": stripe.pad_words}
-        if stripe.q is not None:
-            parity["q"] = _u32_rows_to_u8(stripe.q)
-    return StripeArchive(blocks, parity)
+    return _assemble_stripe(stripe, mats, manifests)
 
 
 def archive_stripe(
@@ -411,13 +500,14 @@ def archive_stripe(
     use_pallas: bool = True,
     seal_fn=None,
     entropy_fn=None,
+    fused_fn=None,
 ) -> Tuple[StripeArchive, List[jax.Array]]:
-    """Archive S GOPs as one parity stripe: codes -> entropy -> fused seal.
+    """Archive S GOPs as one parity stripe: codes -> one-launch entropy+seal.
 
     frames_list: S clips, each (T, B, H, W, 3) — one per storage shard.
     ``use_pallas=False`` runs the staged jnp references instead
-    (bit-identical streams, bodies and parity); ``seal_fn``/``entropy_fn``
-    dispatch the launches (see ``seal_payload_stripe``).
+    (bit-identical streams, bodies and parity); ``seal_fn``/``entropy_fn``/
+    ``fused_fn`` dispatch the launches (see ``seal_payload_stripe``).
     """
     flats, manifests, recons = [], [], []
     for frames in frames_list:
@@ -427,7 +517,7 @@ def archive_stripe(
         recons.append(rec)
     stripe = seal_payload_stripe(
         pub, flats, manifests, key, cfg, use_pallas=use_pallas,
-        seal_fn=seal_fn, entropy_fn=entropy_fn,
+        seal_fn=seal_fn, entropy_fn=entropy_fn, fused_fn=fused_fn,
     )
     return stripe, recons
 

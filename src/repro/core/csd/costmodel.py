@@ -21,7 +21,14 @@ Key structural facts encoded:
   * the entropy stage is placeable (``entropy_placement_cost`` /
     ``best_entropy_placement``): host-side zstd pays a raw-byte host-link
     crossing, the on-device rANS kernel pays none — the term the placement
-    scheduler prices now that ``repro.kernels.entropy`` exists.
+    scheduler prices now that ``repro.kernels.entropy`` exists;
+  * per-launch dispatch overhead is NOT a per-stripe term on the on-device
+    path: the one-launch archival kernel (``repro.kernels.fused``) runs
+    entropy + pack + seal + parity as a single launch and batches K
+    coalesced stripes per launch, so fixed dispatch cost amortizes across
+    K stripes (launches/stripe = 1/K; the chained path paid 2 per stripe).
+    The model therefore keeps dispatch folded into the per-byte compute
+    rates instead of charging a per-stripe constant.
 
 On ``compress_ratio``: 6.1 is the paper's END-TO-END data-volume reduction
 (Fig. 5c), i.e. neural codec x entropy stage.  Our measured *entropy-stage*

@@ -22,6 +22,14 @@ seal kernel (``repro.kernels.seal``) over that axis:
     carrying the *global* shard index, so Q partials are globally correct
     before the reduce.)
 
+``entropy_seal_sharded`` is the one-launch twin: the FUSED entropy+seal
+kernel (``repro.kernels.fused`` — rANS + pack + raw-skip + ChaCha20 +
+parity in a single launch, K stripes batched per launch) shard_maps the
+same way, so the rans write path needs exactly one local launch per mesh
+shard per stripe batch, with the identical parity-reduce story.  The
+chained ``seal_stripe_sharded`` / ``entropy_encode_sharded`` pair stays
+the decode-side and host-codec path.
+
 Multi-stream ingest coalescing:
 
 Continuous-learning edge servers batch retraining data from many cameras;
@@ -69,11 +77,15 @@ from repro.core.archival.pipeline import (
     archive_stripe,
     restore_stripe,
     seal_payload_stripe,
+    seal_payload_stripes,
 )
 from repro.core.crypto import rlwe
 from repro.kernels import use_interpret
 from repro.kernels.entropy import ops as entropy_ops
 from repro.kernels.entropy.rans import PROB_SCALE
+from repro.kernels.fused import ops as fused_ops
+from repro.kernels.fused import ref as fused_ref
+from repro.kernels.fused.entropy_seal import entropy_seal_pallas
 from repro.kernels.seal import ops as seal_ops
 from repro.kernels.seal import ref as _ref
 from repro.kernels.seal.ops import SealedStripe
@@ -87,12 +99,14 @@ __all__ = [
     "unseal_stripe_sharded",
     "entropy_encode_sharded",
     "entropy_decode_sharded",
+    "entropy_seal_sharded",
     "archive_stripe_sharded",
     "restore_stripe_sharded",
     "PendingGOP",
     "CoalescedStripe",
     "StripeCoalescer",
     "seal_coalesced_stripe",
+    "seal_coalesced_stripes",
 ]
 
 
@@ -221,6 +235,114 @@ def unseal_stripe_sharded(stripe: SealedStripe, keys, nonces, *, mesh: Mesh,
     return flats, p, q
 
 
+# --------------------------------------------- sharded one-launch archival
+@functools.lru_cache(maxsize=None)
+def _sharded_fused_core(mesh: Mesh, axis: str, s_loc: int, parity: str,
+                        use_pallas: bool, interpret: bool, division: str):
+    """jit'd shard_map'd one-launch entropy+seal core, cached per (mesh,
+    local shard count, mode).
+
+    Inputs arrive regrouped as (K, S_pad, ...) — stripes on axis 0, stripe
+    shards on axis 1, the SHARD axis partitioned over the mesh (the CSD-
+    array mapping: mesh shard d compresses and seals the stripe shards it
+    owns).  Each mesh shard flattens its local (K, s_loc, ...) slice back
+    onto the kernel batch axis and runs the fused entropy+seal kernel
+    exactly ONCE — launches/stripe-batch/device = 1 covering rANS + pack +
+    raw-skip + ChaCha20 + local partial P/Q.  The only cross-shard traffic
+    is the XOR reduce of the per-stripe parity partials (exact, order-free
+    — bit-identical to the single-device launch); GF(256) Q coefficients
+    ride in as operands carrying the *global* shard index, so Q partials
+    are globally correct before the reduce.
+    """
+    D = int(mesh.shape[axis])
+    with_p = parity != "none"
+    with_q = parity == "raid6"
+
+    def local_fn(codes, n_valid, keys, nonces, q_coef):
+        K = codes.shape[0]
+
+        def flat(a):
+            return a.reshape((K * s_loc,) + a.shape[2:])
+
+        fn = entropy_seal_pallas if use_pallas else fused_ref.entropy_seal_ref
+        kw = {"interpret": interpret} if use_pallas else {}
+        sealed, nw, p, q = fn(
+            flat(codes), flat(n_valid), flat(keys), flat(nonces),
+            flat(q_coef), n_shards=s_loc, parity=parity, division=division,
+            **kw,
+        )
+        outs = [
+            sealed.reshape((K, s_loc) + sealed.shape[1:]),
+            nw.reshape(K, s_loc, 1),
+        ]
+        if with_p:
+            outs.append(_xor_allreduce(p, axis, D))
+        if with_q:
+            outs.append(_xor_allreduce(q, axis, D))
+        return tuple(outs)
+
+    n_extra = int(with_p) + int(with_q)
+    fn = _shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(None, axis),) * 5,
+        out_specs=(P(None, axis), P(None, axis)) + (P(),) * n_extra,
+    )
+    return jax.jit(fn)
+
+
+def entropy_seal_sharded(codes, n_valid, keys, nonces, q_coef, *,
+                         mesh: Mesh, axis: str = "data", n_shards: int,
+                         parity: str = "raid6", use_pallas: bool = True,
+                         interpret: Optional[bool] = None,
+                         division: str = "divide"):
+    """Sharded twin of the fused one-launch core (same array outputs).
+
+    Drop-in ``core_fn`` for ``fused_ops.entropy_seal_stripes`` (bake
+    ``mesh``/``axis`` with ``functools.partial``; the batching layer
+    supplies the remaining static config as keyword arguments).  Stripe
+    shard counts that do not divide the mesh axis are padded with dummy
+    zero shards — ``n_valid = 0`` raw-skips them to zero stored bytes, so
+    sealed rows and parity partials are unperturbed.
+    """
+    B = codes.shape[0]
+    K = B // n_shards
+    D = int(mesh.shape[axis])
+    s_pad = -(-n_shards // D) * D
+
+    def regroup(a):
+        a = a.reshape((K, n_shards) + a.shape[1:])
+        if s_pad == n_shards:
+            return a
+        pad = [(0, 0), (0, s_pad - n_shards)] + [(0, 0)] * (a.ndim - 2)
+        return jnp.pad(a, pad)
+
+    core = _sharded_fused_core(
+        mesh, axis, s_pad // D, parity, use_pallas,
+        use_interpret(interpret), division,
+    )
+    outs = core(*(regroup(a) for a in (codes, n_valid, keys, nonces, q_coef)))
+    sealed = outs[0][:, :n_shards].reshape((B,) + outs[0].shape[2:])
+    n_words = outs[1][:, :n_shards].reshape(B, 1)
+    i = 2
+    p = q = None
+    if parity != "none":
+        p = outs[i]
+        i += 1
+    if parity == "raid6":
+        q = outs[i]
+    return sealed, n_words, p, q
+
+
+def _sharded_fused_fn(mesh: Mesh, axis: str):
+    """The ``fused_fn`` seam value: the fused batching layer with its
+    kernel launch shard_map'd over ``mesh`` (see ``entropy_seal_sharded``)."""
+    return functools.partial(
+        fused_ops.entropy_seal_stripes,
+        core_fn=functools.partial(entropy_seal_sharded, mesh=mesh, axis=axis),
+    )
+
+
 # --------------------------------------------------- sharded entropy stage
 @functools.lru_cache(maxsize=None)
 def _sharded_entropy_core(mesh: Mesh, axis: str, decode: bool,
@@ -332,10 +454,12 @@ def archive_stripe_sharded(
     axis: str = "data",
     use_pallas: bool = True,
 ) -> Tuple[StripeArchive, List[jax.Array]]:
-    """``archive_stripe`` with the entropy + seal launches shard_map'd over
-    ``mesh``: each mesh shard entropy-codes and seals its own slice of the
-    stripe (the CSD-array mapping), so a stripe goes codes -> rANS -> pack
-    -> ChaCha20 -> parity with one local launch per stage per device.
+    """``archive_stripe`` with the one-launch entropy+seal kernel
+    shard_map'd over ``mesh``: each mesh shard entropy-codes, packs, seals
+    and parity-folds its own slice of the stripe (the CSD-array mapping)
+    in ONE local launch — codes -> rANS -> pack -> ChaCha20 -> parity with
+    only the parity XOR reduce crossing devices.  (Host codecs ride the
+    chained sharded seal instead.)
 
     Outputs (streams, sealed bodies, P, Q, manifests) are bit-identical to
     the single-device ``archive_stripe`` for every mesh shape — the KEM runs
@@ -348,6 +472,7 @@ def archive_stripe_sharded(
         entropy_fn=functools.partial(
             entropy_encode_sharded, mesh=mesh, axis=axis
         ),
+        fused_fn=_sharded_fused_fn(mesh, axis),
     )
 
 
@@ -489,7 +614,7 @@ def seal_coalesced_stripe(
     use_pallas: bool = True,
 ) -> StripeArchive:
     """Entropy-code + seal one coalesced stripe (sharded over ``mesh`` when
-    given: the rANS coder and the seal kernel each run once per mesh shard).
+    given: the fused entropy+seal kernel runs once per mesh shard).
 
     The bucket's ``pad_rows`` flows into the launch so every stripe from the
     same bucket shares one jit trace (re-bucketed on the compressed sizes
@@ -497,11 +622,13 @@ def seal_coalesced_stripe(
     """
     seal_fn = None
     entropy_fn = None
+    fused_fn = None
     if mesh is not None:
         seal_fn = functools.partial(seal_stripe_sharded, mesh=mesh, axis=axis)
         entropy_fn = functools.partial(
             entropy_encode_sharded, mesh=mesh, axis=axis
         )
+        fused_fn = _sharded_fused_fn(mesh, axis)
     return seal_payload_stripe(
         pub,
         [g.payload for g in cs.gops],
@@ -512,4 +639,48 @@ def seal_coalesced_stripe(
         pad_rows=cs.pad_rows,
         seal_fn=seal_fn,
         entropy_fn=entropy_fn,
+        fused_fn=fused_fn,
+    )
+
+
+def seal_coalesced_stripes(
+    pub: rlwe.PublicKey,
+    batch: List[CoalescedStripe],
+    keys: List[jax.Array],
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "data",
+    use_pallas: bool = True,
+) -> List[StripeArchive]:
+    """Batched ``seal_coalesced_stripe``: K ready stripes, ONE fused launch
+    per homogeneous (shard count, row bucket) group — multi-stream ingest's
+    steady state, where a drained coalescer hands over several same-bucket
+    stripes at once and per-launch dispatch amortizes K-fold.
+
+    ``keys`` carries one stripe key per batch entry (the caller's sequence
+    numbering — e.g. ``ArchiveIngest`` fold_in's its stripe counter), so
+    session material is bit-identical to sealing the stripes one at a time.
+    Host codecs fall back to per-stripe chained sealing.
+    """
+    if len(batch) != len(keys):
+        raise ValueError(f"{len(batch)} stripes vs {len(keys)} keys")
+    if not batch:
+        return []
+    if cfg.codec_name != "rans":
+        return [
+            seal_coalesced_stripe(
+                pub, cs, k, cfg, mesh=mesh, axis=axis, use_pallas=use_pallas
+            )
+            for cs, k in zip(batch, keys)
+        ]
+    return seal_payload_stripes(
+        pub,
+        [[g.payload for g in cs.gops] for cs in batch],
+        [[g.manifest for g in cs.gops] for cs in batch],
+        list(keys),
+        cfg,
+        use_pallas=use_pallas,
+        pad_rows=[cs.pad_rows for cs in batch],
+        fused_fn=_sharded_fused_fn(mesh, axis) if mesh is not None else None,
     )

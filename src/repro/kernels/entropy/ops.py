@@ -156,8 +156,7 @@ def _emission_counts(mask):
     return (mask != 0).sum(axis=(1, 2))
 
 
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _pack_rank(mask, *, cap: int):
+def _pack_rank_impl(mask, *, cap: int):
     """Stage 1 of the rank-select pack: per-output-slot source positions.
 
     For each output slot k the source row is recovered from a scatter-max
@@ -203,8 +202,13 @@ def _pack_rank(mask, *, cap: int):
     return base + lane, n_words, lane_lens
 
 
-@jax.jit
-def _pack_bytes(words, src, n_words, lane_lens, freq, states):
+# Jit'd entry point for the host-side pack; the plain ``_pack_rank_impl``
+# body is also traced *inside* the one-launch entropy+seal kernel
+# (``repro.kernels.fused``), where an extra jit boundary would be a bug.
+_pack_rank = jax.jit(_pack_rank_impl, static_argnames=("cap",))
+
+
+def _pack_bytes_impl(words, src, n_words, lane_lens, freq, states):
     """Stage 2: gather the words into stream order and serialize header +
     word area to bytes (kept as a separate dispatch so XLA cannot re-fuse
     the rank-select producers into the byte pass and recompute them)."""
@@ -222,6 +226,9 @@ def _pack_bytes(words, src, n_words, lane_lens, freq, states):
         axis=1,
     )
     return jnp.concatenate([header, _u16_to_u8(comp_words)], axis=1)
+
+
+_pack_bytes = jax.jit(_pack_bytes_impl)
 
 
 def _pack_streams(words, mask, freq, states, *, cap: int):

@@ -22,10 +22,13 @@ Per shard the kernel runs three fused stages without leaving VMEM:
 
   1. histogram over all T*128 bytes as a one-hot *matmul*: the byte splits
      into hi/lo nibbles and hist.reshape(16, 16) = onehot(hi)^T @
-     onehot(lo), an (N, 16) x (N, 16) int8 contraction accumulated in
-     int32 — the MXU's native int8 matmul, exact by integer arithmetic —
-     no scatter-add anywhere (``.at[...].add`` serializes on TPU and CPU
-     alike; ``test_kernel_hygiene.py`` now bans it from kernel sources);
+     onehot(lo), an (N, 16) x (N, 16) f32 contraction — exact because
+     every partial sum is an integer <= T*128 <= 2^24, below the f32
+     mantissa — no scatter-add anywhere (``.at[...].add`` serializes on
+     TPU and CPU alike; ``test_kernel_hygiene.py`` now bans it from
+     kernel sources).  f32 operands hit the fast GEMM path on the CPU
+     interpret backend, where the int8-accumulate-int32 form fell off to
+     a naive loop and dominated the whole encode;
   2. static table build: :func:`build_freq_table` (integer-exact
      normalization to ``M = 2**PROB_BITS``, every present symbol >= 1)
      plus :func:`build_enc_tables`, which precomputes per-symbol
@@ -100,6 +103,7 @@ __all__ = [
     "build_enc_tables",
     "build_dec_table",
     "slot_to_symbol",
+    "rans_encode_body",
     "rans_encode_pallas",
     "rans_decode_pallas",
     "rans_decode_pallas_v0",
@@ -232,27 +236,33 @@ def _histogram(vals: jax.Array, n_valid) -> jax.Array:
     """Exact byte histogram of a zero-padded (T, 128) shard -> (256,) int32.
 
     One-hot matmul form: hist.reshape(16, 16) = onehot(hi)^T @ onehot(lo),
-    an (N, 16) x (N, 16) int8 contraction over N accumulated in int32 —
-    the MXU's native int8 matmul shape, and exact by integer arithmetic.
-    The one-hots are identity-row gathers (a serial gather materializes
-    the operands cheaper than broadcast compare+convert, and the
-    iota-equality identity is computed because pallas kernels cannot
-    capture materialized constants).  Padding positions past ``n_valid``
-    are *zero bytes* by the ``ops.py`` contract, so their whole
-    contribution lands in bin 0 and is subtracted back out — exact, and
-    cheaper than masking the one-hot.
+    an (N, 16) x (N, 16) f32 contraction over N.  Exact by IEEE
+    arithmetic, not by luck: every product is 0 or 1 and every partial
+    sum is an integer bounded by N = T*128 <= MAX_ROWS*128 = 2^24, and
+    integers up to 2^24 are exactly representable in f32, so any
+    accumulation order yields the true count.  f32 operands matter on
+    the CPU interpret backend, where the previous int8-accumulate-int32
+    contraction missed the optimized GEMM and its naive fallback loop
+    cost more than the entire coding loop (the MXU is indifferent — it
+    eats f32 natively).  The one-hots are identity-row gathers (a serial
+    gather materializes the operands cheaper than broadcast
+    compare+convert, and the iota-equality identity is computed because
+    pallas kernels cannot capture materialized constants).  Padding
+    positions past ``n_valid`` are *zero bytes* by the ``ops.py``
+    contract, so their whole contribution lands in bin 0 and is
+    subtracted back out — exact, and cheaper than masking the one-hot.
     """
     n = vals.shape[0] * vals.shape[1]
     v = vals.reshape(n)
     eye16 = (
         jax.lax.broadcasted_iota(jnp.int32, (16, 16), 0)
         == jax.lax.broadcasted_iota(jnp.int32, (16, 16), 1)
-    ).astype(jnp.int8)
+    ).astype(jnp.float32)
     h2 = jax.lax.dot_general(
         eye16[v >> 4], eye16[v & 15], (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
+        preferred_element_type=jnp.float32,
     )
-    counts = h2.reshape(256)
+    counts = h2.reshape(256).astype(jnp.int32)
     sym = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
     return counts - jnp.where(sym == 0, n - n_valid, 0)
 
@@ -338,11 +348,18 @@ def _row_valid(r, nv):
     return (r * N_LANES + lane) < nv
 
 
-def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
-                   state_ref, *, division: str, rows_per_step: int):
-    S, T, _ = codes_ref.shape
-    vals = (codes_ref[...].astype(jnp.int32)) & 0xFF         # (S, T, 128)
-    nv = nvalid_ref[...]                                     # (S, 1)
+def rans_encode_body(vals, nv, *, division: str, rows_per_step: int):
+    """Encode-stage dataflow shared by the standalone entropy kernel and the
+    one-launch entropy+seal kernel (``repro.kernels.fused``): histogram ->
+    freq tables -> pregather -> interleaved two-phase encode loop.  Pure jnp
+    over values already loaded from refs, so both kernel bodies trace the
+    exact same op sequence — fusing cannot change a single output bit.
+
+    ``vals``: (S, T, 128) int32 symbol bytes in [0, 255]; ``nv``: (S, 1)
+    int32 valid byte counts.  Returns ``(words (S, T, 128) u16, mask
+    (S, T, 128) u8, freq (S, 256) int32, states (S, 128) u32)``.
+    """
+    S, T, _ = vals.shape
 
     # fused stage 1+2: per-shard matmul histogram -> tables (the stripe is
     # the block: shards ride the batch axis of every loop op, so one row
@@ -426,10 +443,20 @@ def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
     )
     carry = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
     x, words, mask = jax.lax.fori_loop(0, n_full, body_full, carry)
-    words_ref[...] = jnp.moveaxis(words, 1, 0)
-    mask_ref[...] = jnp.moveaxis(mask, 1, 0)
+    return jnp.moveaxis(words, 1, 0), jnp.moveaxis(mask, 1, 0), freq, x
+
+
+def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
+                   state_ref, *, division: str, rows_per_step: int):
+    vals = (codes_ref[...].astype(jnp.int32)) & 0xFF         # (S, T, 128)
+    nv = nvalid_ref[...]                                     # (S, 1)
+    words, mask, freq, states = rans_encode_body(
+        vals, nv, division=division, rows_per_step=rows_per_step
+    )
+    words_ref[...] = words
+    mask_ref[...] = mask
     freq_ref[...] = freq
-    state_ref[...] = x
+    state_ref[...] = states
 
 
 def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,

@@ -1,0 +1,14 @@
+"""One-launch archival kernel package: rANS entropy encode + v1 stream
+pack + adaptive raw-skip + ChaCha20 XOR-seal + RAID-5/6 parity in a single
+Pallas launch, batched over K coalesced stripes.
+
+House layout: ``entropy_seal.py`` (the Pallas kernel), ``ref.py`` (the
+staged pure-jnp oracle it must match bit-for-bit), ``ops.py`` (jit'd
+public wrappers).  The chained stages it fuses live in the sibling
+``entropy`` and ``seal`` packages and stay the decode/restore path.
+"""
+
+from repro.kernels.fused.ops import (  # noqa: F401
+    entropy_seal_stripe,
+    entropy_seal_stripes,
+)

@@ -1,0 +1,202 @@
+"""Public wrappers for the one-launch entropy+seal kernel: batching,
+padding, dispatch, manifest reconstruction.
+
+``entropy_seal_stripes`` takes a list of stripes (each a list of ragged
+int8 shard payloads) plus per-stripe session material and returns, per
+stripe, the exact ``(SealedStripe, entropy_metas)`` pair the chained
+``entropy.encode_payloads`` -> ``seal.seal_stripe`` path would have
+produced — every stored byte, parity word, manifest dict and row count
+bit-identical — from ONE kernel launch per homogeneous batch.
+
+Batching: stripes are grouped by (shard count, padded lane rows); each
+group launches once with K stripes on the batch axis, so the per-launch
+dispatch overhead amortizes K-fold (``StripeCoalescer`` already pow2-
+buckets GOPs, so production batches collapse to very few groups).  The
+kernel returns fixed-capacity sealed rows; the host derives each shard's
+compressed length from the returned rANS word count and slices every
+stripe back to the chained path's row count (``bucket_rows_for`` of the
+compressed sizes when the caller passed a pad_rows bucket — mirroring
+``seal_payload_stripe``'s re-bucketing — else exact ``pad_rows_for``).
+Words past a shard's stored length are zero by kernel masking, so the
+slice is exact.
+
+``core_fn`` overrides the fused launch itself — it is called with the
+same arrays plus the launch's static config as keyword arguments
+(``n_shards``/``parity``/``use_pallas``/``interpret``/``division``, since
+``n_shards`` varies per batch group); the sharded path
+(``repro.distributed.archival``) passes a shard_map'd wrapper, exactly
+like the ``core_fn`` seams of the entropy and seal ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.archival.raid import gf_pow_gen
+from repro.kernels import as_payload_list, use_interpret
+from repro.kernels.entropy.ops import HEADER_BYTES, MAX_ROWS, rows_for
+from repro.kernels.entropy.rans import N_LANES, STREAM_VERSION
+from repro.kernels.fused import ref as _ref
+from repro.kernels.fused.entropy_seal import entropy_seal_pallas
+from repro.kernels.seal.ops import SealedStripe, bucket_rows_for, pad_rows_for
+
+__all__ = ["entropy_seal_stripe", "entropy_seal_stripes"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_shards", "parity", "use_pallas", "interpret",
+                     "division"),
+)
+def _fused_core(codes, n_valid, keys, nonces, q_coef, *, n_shards: int,
+                parity: str, use_pallas: bool, interpret: bool,
+                division: str):
+    if use_pallas:
+        return entropy_seal_pallas(
+            codes, n_valid, keys, nonces, q_coef, n_shards=n_shards,
+            parity=parity, division=division, interpret=interpret,
+        )
+    return _ref.entropy_seal_ref(
+        codes, n_valid, keys, nonces, q_coef, n_shards=n_shards,
+        parity=parity, division=division,
+    )
+
+
+def entropy_seal_stripes(
+    stripes: Sequence,
+    keys: Sequence,
+    nonces: Sequence,
+    *,
+    parity: str = "raid6",
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    pad_rows=None,
+    division: Optional[str] = None,
+    core_fn=None,
+) -> List[Tuple[SealedStripe, List[Dict]]]:
+    """Fused one-launch archival for a batch of stripes.
+
+    stripes: per-stripe payload lists (ragged int8, or (S, N) arrays);
+    keys / nonces: per-stripe (S, 8) / (S, 3) uint32 session material;
+    pad_rows: None, an int, or a per-stripe sequence — a not-None entry
+    requests the chained pipeline's pow2 re-bucketing of the sealed rows
+    on the COMPRESSED sizes (the raw bucket value itself is superseded,
+    exactly as ``seal_payload_stripe`` re-buckets before the chained
+    seal); None requests the chained exact ``pad_rows_for`` padding.
+
+    Returns ``[(SealedStripe, entropy_metas), ...]`` in input order,
+    bit-identical to encode_payloads -> seal_stripe per stripe.
+    """
+    if not len(stripes):
+        return []
+    if not (len(stripes) == len(keys) == len(nonces)):
+        raise ValueError(
+            f"{len(stripes)} stripes vs {len(keys)} keys / "
+            f"{len(nonces)} nonces"
+        )
+    interp = use_interpret(interpret)
+    if division is None:
+        division = "divide" if interp else "rcp32"
+    n_stripes = len(stripes)
+    if isinstance(pad_rows, (list, tuple)):
+        if len(pad_rows) != n_stripes:
+            raise ValueError(
+                f"{len(pad_rows)} pad_rows entries vs {n_stripes} stripes"
+            )
+        pr_list = list(pad_rows)
+    else:
+        pr_list = [pad_rows] * n_stripes
+    plists = [as_payload_list(p) for p in stripes]
+    for pl_ in plists:
+        if not pl_:
+            raise ValueError("stripe must contain at least one shard payload")
+
+    # group into launches by (shard count, padded lane rows): one kernel
+    # launch per group, stripes contiguous on the batch axis
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    stripe_T = []
+    for i, pl_ in enumerate(plists):
+        T = rows_for(max(int(p.shape[0]) for p in pl_))
+        if T > MAX_ROWS:
+            raise ValueError(
+                f"payload needs {T} lane rows (max {MAX_ROWS}); split it "
+                f"across more stripe shards"
+            )
+        stripe_T.append(T)
+        groups.setdefault((len(pl_), T), []).append(i)
+
+    results: List = [None] * n_stripes
+    for (S, T), idxs in groups.items():
+        flats = [p for i in idxs for p in plists[i]]
+        n_raw = [int(f.shape[0]) for f in flats]
+        codes = jnp.stack(
+            [
+                jnp.pad(f, (0, T * N_LANES - n)).reshape(T, N_LANES)
+                for f, n in zip(flats, n_raw)
+            ]
+        )
+        n_valid = jnp.asarray(n_raw, jnp.int32).reshape(-1, 1)
+        keys_a = jnp.concatenate(
+            [jnp.asarray(keys[i], jnp.uint32).reshape(S, 8) for i in idxs]
+        )
+        nonces_a = jnp.concatenate(
+            [jnp.asarray(nonces[i], jnp.uint32).reshape(S, 3) for i in idxs]
+        )
+        coefs = [gf_pow_gen(s) for s in range(S)]
+        q_coef = jnp.asarray(coefs * len(idxs), jnp.uint32).reshape(-1, 1)
+        fn = core_fn or _fused_core
+        sealed, n_words_rans, p, q = fn(
+            codes, n_valid, keys_a, nonces_a, q_coef, n_shards=S,
+            parity=parity, use_pallas=use_pallas, interpret=interp,
+            division=division,
+        )
+        nw_host = [int(w) for w in np.asarray(n_words_rans).reshape(-1)]
+        for j, i in enumerate(idxs):
+            off = j * S
+            metas, stored_words, stored_len = [], [], []
+            for s in range(S):
+                nr = n_raw[off + s]
+                nc = HEADER_BYTES + 2 * nw_host[off + s]
+                if nc >= nr:
+                    metas.append(
+                        {"codec": "rans", "version": STREAM_VERSION,
+                         "raw": True, "n_raw": nr, "n_comp": nr, "rows": T}
+                    )
+                    nc = nr
+                else:
+                    metas.append(
+                        {"codec": "rans", "version": STREAM_VERSION,
+                         "n_raw": nr, "n_comp": nc, "rows": T}
+                    )
+                stored_len.append(nc)
+                stored_words.append(-(-nc // 4))
+            rows_of = bucket_rows_for if pr_list[i] is not None else pad_rows_for
+            R = rows_of(max(stored_words))
+            stripe = SealedStripe(
+                sealed[off:off + S, :R],
+                p[j, :R] if p is not None else None,
+                q[j, :R] if q is not None else None,
+                tuple(stored_words),
+                tuple(stored_len),
+            )
+            results[i] = (stripe, metas)
+    return results
+
+
+def entropy_seal_stripe(
+    payloads, keys, nonces, *, parity: str = "raid6",
+    use_pallas: bool = True, interpret: Optional[bool] = None,
+    pad_rows: Optional[int] = None, division: Optional[str] = None,
+    core_fn=None,
+) -> Tuple[SealedStripe, List[Dict]]:
+    """Single-stripe convenience twin of ``entropy_seal_stripes``."""
+    return entropy_seal_stripes(
+        [payloads], [keys], [nonces], parity=parity, use_pallas=use_pallas,
+        interpret=interpret, pad_rows=[pad_rows], division=division,
+        core_fn=core_fn,
+    )[0]

@@ -1,0 +1,88 @@
+"""Staged pure-jnp oracle for the one-launch entropy+seal kernel.
+
+The pre-fusion pipeline kept as the bit-exact reference and the
+``use_pallas=False`` fallback: the entropy stage runs the scan-based rANS
+oracle (``kernels/entropy/ref.py`` — an independent schedule from the
+kernel's fori-loop body), the pack runs the shared rank-select gather (the
+pack was host-side shared code in the chained path too, never
+oracle-duplicated), and the seal stages run the staged seal reference
+(``kernels/seal/ref.py`` — per-shard ``chacha20_block`` keystream and the
+log/antilog-table GF(256) parity, both independent implementations of the
+kernel's plane-batched ChaCha and SWAR GF multiply).
+
+Each tuple entry below is one full-payload HBM round-trip of the staged
+pipeline; the fused kernel does all of them in one launch per stripe batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.entropy import ref as eref
+from repro.kernels.entropy.ops import (
+    HEADER_BYTES,
+    _pack_bytes_impl,
+    _pack_rank_impl,
+)
+from repro.kernels.fused.entropy_seal import seal_rows_cap, stream_word_cap
+from repro.kernels.seal import ref as sref
+from repro.kernels.seal.seal import ROW_BYTES
+
+__all__ = ["STAGED_PASSES", "N_STAGED_PASSES", "entropy_seal_ref"]
+
+STAGED_PASSES = (
+    eref.STAGED_PASSES
+    + (
+        "v1 stream serialization to bytes (read words, write u8)",
+        "adaptive raw-skip select (read stream + raw bytes, write u8)",
+    )
+    + sref.STAGED_PASSES
+)
+N_STAGED_PASSES = len(STAGED_PASSES)
+
+
+def entropy_seal_ref(
+    codes, n_valid, keys, nonces, q_coef, *,
+    n_shards: int, parity: str = "raid6", division: str = "divide",
+):
+    """Staged fused archival: same signature/outputs as
+    ``entropy_seal_pallas`` (sealed, n_words, p, q), bit-for-bit."""
+    B, T, L = codes.shape
+    R_cap = seal_rows_cap(T)
+
+    # entropy stage: independent scan-schedule oracle
+    words, mask, freq, states = eref.rans_encode_ref(
+        codes, n_valid, division=division
+    )
+    src, n_words, lane_lens = _pack_rank_impl(mask, cap=stream_word_cap(T))
+    stream_u8 = _pack_bytes_impl(words, src, n_words, lane_lens, freq, states)
+
+    # raw-skip select + pad to the sealed-rows capacity
+    n_raw = n_valid.reshape(B)
+    n_comp = HEADER_BYTES + 2 * n_words
+    is_raw = n_comp >= n_raw
+    buf = T * L
+    raw_u8 = (codes.astype(jnp.int32) & 0xFF).reshape(B, buf).astype(jnp.uint8)
+    body_u8 = jnp.where(is_raw[:, None], raw_u8, stream_u8[:, :buf])
+    body_u8 = jnp.pad(body_u8, ((0, 0), (0, R_cap * ROW_BYTES - buf)))
+
+    # seal stage: the staged seal reference, end to end
+    body_i8 = jax.lax.bitcast_convert_type(body_u8, jnp.int8)
+    packed = sref._pack_rows(body_i8.reshape(B, R_cap, ROW_BYTES))
+    ks = sref._keystream_rows(keys, nonces, R_cap)
+    stored = jnp.where(is_raw, n_raw, n_comp)
+    sealed = sref._mask_valid(packed ^ ks, -(-stored // 4))
+    n_words_out = n_words[:, None]
+    if parity == "none":
+        return sealed, n_words_out, None, None
+    K = B // n_shards
+    ps, qs = [], []
+    for k in range(K):
+        sl = slice(k * n_shards, (k + 1) * n_shards)
+        p, q = sref._parity(sealed[sl], q_coef[sl], parity)
+        ps.append(p)
+        qs.append(q)
+    p = jnp.stack(ps)
+    q = jnp.stack(qs) if parity == "raid6" else None
+    return sealed, n_words_out, p, q

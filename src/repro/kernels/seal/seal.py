@@ -30,7 +30,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.crypto.chacha import CONSTANTS, chacha_rounds_planes
 
-__all__ = ["seal_stripe_pallas", "unseal_stripe_pallas",
+__all__ = ["seal_stripe_pallas", "unseal_stripe_pallas", "keystream_batch",
            "R_TILE", "LANES", "ROW_BYTES", "WORDS_PER_TILE"]
 
 R_TILE = 8                        # sublane-aligned rows per grid step
@@ -60,6 +60,32 @@ def _keystream_tile(key_vec, nonce_vec, counter_base):
     )
     ks = jnp.stack(chacha_rounds_planes(state), axis=-1)  # (8, 8, 16)
     return ks.reshape(R_TILE, LANES)
+
+
+def keystream_batch(keys, nonces, R: int):
+    """(B, R, LANES) uint32 keystream for B shards, counter0 = 0 each.
+
+    Row r lane l of shard b is word l%16 of ChaCha block r*8 + l//16 under
+    key/nonce b — the same contiguous mapping as ``_keystream_tile`` and the
+    staged ``_keystream_rows`` reference, with the shard axis batched as a
+    third plane dimension so a whole stripe batch runs one fused elementwise
+    ChaCha graph.  This is the keystream producer of the one-launch
+    entropy+seal kernel (``repro.kernels.fused``).
+    """
+    B = keys.shape[0]
+    shp = (B, R, _BLK_C)
+    ctr = (
+        jax.lax.broadcasted_iota(jnp.uint32, shp, 1) * jnp.uint32(_BLK_C)
+        + jax.lax.broadcasted_iota(jnp.uint32, shp, 2)
+    )
+    state = (
+        [jnp.full(shp, c, jnp.uint32) for c in CONSTANTS]
+        + [jnp.broadcast_to(keys[:, i, None, None], shp) for i in range(8)]
+        + [ctr]
+        + [jnp.broadcast_to(nonces[:, i, None, None], shp) for i in range(3)]
+    )
+    ks = jnp.stack(chacha_rounds_planes(state), axis=-1)  # (B, R, 8, 16)
+    return ks.reshape(B, R, LANES)
 
 
 def _gf_mul_const_u32(x, coef):

@@ -44,7 +44,7 @@ from repro.core.archival.pipeline import (
     encode_gop_payload,
 )
 from repro.core.csd.retrieval import ReadPlan, plan_retrieval
-from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
+from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripes
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
 
@@ -217,15 +217,21 @@ class ArchiveIngest:
         self._planned_full_bytes = 0
 
     def _seal(self, ready) -> List[StripeArchive]:
-        out = []
-        for cs in ready:
-            key = jax.random.fold_in(self._key, self._stripe_seq)
-            stripe_id = f"ingest_{self._stripe_seq:08d}"
+        if not ready:
+            return []
+        # draw every stripe's key/id up front (sequence order fixed before
+        # any sealing), then hand the whole batch to the fused path — same-
+        # bucket stripes share ONE kernel launch instead of one per stripe
+        keys, stripe_ids = [], []
+        for _ in ready:
+            keys.append(jax.random.fold_in(self._key, self._stripe_seq))
+            stripe_ids.append(f"ingest_{self._stripe_seq:08d}")
             self._stripe_seq += 1
-            stripe = seal_coalesced_stripe(
-                self.pub, cs, key, self.cfg.archive,
-                mesh=self.mesh, axis=self.axis,
-            )
+        stripes = seal_coalesced_stripes(
+            self.pub, list(ready), keys, self.cfg.archive,
+            mesh=self.mesh, axis=self.axis,
+        )
+        for cs, stripe_id, stripe in zip(ready, stripe_ids, stripes):
             for b in stripe.blocks:
                 em = b.manifest.get("entropy")
                 if em and em.get("codec") != "none":
@@ -239,8 +245,7 @@ class ArchiveIngest:
                     self.catalog.feature_dim or self.cfg.feature_dim,
                 ),
             )
-            out.append(stripe)
-        return out
+        return list(stripes)
 
     def submit(
         self,

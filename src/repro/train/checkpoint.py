@@ -1,11 +1,11 @@
 """Fault-tolerant checkpointing through the Salient Store archival pipeline.
 
 Checkpoints are archival data: each save is chunked into S logical storage
-shards (stripe tiles), entropy-coded by the on-device interleaved-rANS
-kernel (``repro.kernels.entropy``; ``codec_name="zstd"``/``"zlib"`` keeps
-the host codec as a fallback), and pushed through the SAME fused seal
-kernel as the video archive (``repro.kernels.seal``): pack + ChaCha20 +
-XOR + RAID-5 P / RAID-6 Q in one launch over the stripe.  With a ``seal_key``
+shards (stripe tiles) and pushed through the SAME one-launch archival
+kernel as the video archive (``repro.kernels.fused``): interleaved-rANS
+entropy coding + stream pack + ChaCha20 + XOR + RAID-5 P / RAID-6 Q in a
+single launch over the stripe (``codec_name="zstd"``/``"zlib"`` keeps the
+host codec + chained ``repro.kernels.seal`` as a fallback).  With a ``seal_key``
 the per-shard ChaCha session keys are R-LWE-KEM-encapsulated (true
 encryption, secret needed to restore); without one they are stored in the
 manifest — whitening only, but the datapath and on-disk layout stay
@@ -38,6 +38,7 @@ from repro.core.crypto import rlwe
 from repro.core.crypto.hybrid import encapsulate_session
 from repro.core.csd.failure import Journal
 from repro.kernels.entropy import ops as entropy_ops
+from repro.kernels.fused import ops as fused_ops
 from repro.kernels.seal import ops as seal_ops
 
 __all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_meta",
@@ -142,7 +143,9 @@ def save_checkpoint(
     }
 
     if codec_name == "rans":
-        # chunk the RAW payload into S stripe tiles; entropy runs on-device.
+        # chunk the RAW payload into S stripe tiles; entropy + seal run as
+        # ONE on-device launch (repro.kernels.fused) — the checkpoint bytes
+        # never visit a host codec and the packed streams never visit HBM.
         # Big states grow the shard count so each tile stays inside the
         # coder's per-shard bound (entropy_ops.MAX_ROWS rows of 128 lanes)
         # instead of failing the encode launch.
@@ -151,15 +154,18 @@ def save_checkpoint(
         meta["n_shards"] = n_shards
         shard_len = (len(raw) + n_shards - 1) // n_shards
         padded = raw + b"\0" * (shard_len * n_shards - len(raw))
-        flats, emetas = entropy_ops.encode_payloads(
-            [
-                jnp.asarray(
-                    np.frombuffer(
-                        padded[i * shard_len : (i + 1) * shard_len], np.int8
-                    )
+        flats = [
+            jnp.asarray(
+                np.frombuffer(
+                    padded[i * shard_len : (i + 1) * shard_len], np.int8
                 )
-                for i in range(n_shards)
-            ]
+            )
+            for i in range(n_shards)
+        ]
+        meta["shard_len"] = shard_len
+        keys, nonces = _session_material(meta, n_shards, step, seal_key, rng)
+        stripe, emetas = fused_ops.entropy_seal_stripe(
+            flats, keys, nonces, parity=parity
         )
         meta["entropy"] = emetas
         meta["comp_len"] = sum(m["n_comp"] for m in emetas)
@@ -177,10 +183,9 @@ def save_checkpoint(
             )
             for i in range(n_shards)
         ]
-    meta["shard_len"] = shard_len
-
-    keys, nonces = _session_material(meta, n_shards, step, seal_key, rng)
-    stripe = seal_ops.seal_stripe(flats, keys, nonces, parity=parity)
+        meta["shard_len"] = shard_len
+        keys, nonces = _session_material(meta, n_shards, step, seal_key, rng)
+        stripe = seal_ops.seal_stripe(flats, keys, nonces, parity=parity)
     meta["n_words"] = [int(n) for n in stripe.n_words]
     meta["pad_words"] = int(stripe.pad_words)
 
