@@ -48,6 +48,16 @@ ABS_GATES = {
         ("launches_per_stripe", "ceiling", 1.0),
         ("vs_host_speed", "floor", 0.15),
     ),
+    # Durability tier (scrub + rebuild under chaos): every injected
+    # corruption must be detected (the crc/syndrome layers are exact, so
+    # the floor is 1.0, not a tolerance), rebuild rounds must never
+    # exceed their byte budget, and replay must keep progressing through
+    # the chaos rounds.
+    "scrub_rebuild": (
+        ("detection_rate", "floor", 1.0),
+        ("rebuild_budget_frac", "ceiling", 1.0),
+        ("replay_progress_ratio", "floor", 0.5),
+    ),
 }
 
 
@@ -189,6 +199,7 @@ def main() -> None:
         ("kernels/seal", kernels_bench.seal_datapath),
         ("kernels/sharded_seal", kernels_bench.sharded_seal),
         ("kernels/retrieval", kernels_bench.retrieval),
+        ("kernels/scrub_rebuild", kernels_bench.scrub_rebuild),
     ]
     committed = _load_committed() if check else {}
     print("name,us_per_call,derived")

@@ -36,9 +36,10 @@ from repro.core.archival.exemplar import novelty_scores
 from repro.core.csd.failure import Journal
 
 __all__ = ["CatalogEntry", "StripeCatalog", "gop_descriptors",
-           "CATALOG_PREFIX"]
+           "CATALOG_PREFIX", "RETIRE_PREFIX"]
 
 CATALOG_PREFIX = "catalog_"
+RETIRE_PREFIX = "retired_"
 
 
 def gop_descriptors(gops, feature_dim: Optional[int] = None) -> List[Dict]:
@@ -72,6 +73,7 @@ class CatalogEntry(NamedTuple):
     n_i8: int           # raw codec payload bytes (post neural codec)
     n_comp: int         # entropy-coded bytes inside the sealed body
     body_bytes: int     # sealed body bytes on disk (what a read moves)
+    sealed_step: int = -1  # trainer step at seal time (-1 = unknown); TTL clock
 
     def to_record(self) -> Dict:
         return {
@@ -82,6 +84,7 @@ class CatalogEntry(NamedTuple):
             "n_i8": self.n_i8,
             "n_comp": self.n_comp,
             "body_bytes": self.body_bytes,
+            "sealed_step": self.sealed_step,
         }
 
     @classmethod
@@ -95,6 +98,7 @@ class CatalogEntry(NamedTuple):
             n_i8=int(rec["n_i8"]),
             n_comp=int(rec["n_comp"]),
             body_bytes=int(rec["body_bytes"]),
+            sealed_step=int(rec.get("sealed_step", -1)),
         )
 
 
@@ -111,6 +115,7 @@ class StripeCatalog:
         self.journal = journal
         self._entries: List[CatalogEntry] = []
         self._stripe_ids: set = set()
+        self._retired: set = set()
 
     # ------------------------------------------------------------ indexing
     def add_stripe(
@@ -118,13 +123,15 @@ class StripeCatalog:
         stripe_id: str,
         stripe,  # StripeArchive (duck-typed to avoid the import cycle)
         descriptors: Sequence[Dict],
+        sealed_step: int = -1,
     ) -> List[CatalogEntry]:
         """Index one sealed stripe; descriptors[s] describes GOP/shard s.
 
         Each descriptor needs ``feature`` ((D,) array-like) and optionally
         ``stream_id`` / ``novelty``.  Byte geometry comes from the stripe's
         own manifests, so the catalog can never disagree with what was
-        sealed.  Returns the new entries (already appended).
+        sealed.  ``sealed_step`` stamps the trainer step at seal time — the
+        stripe-lifecycle TTL clock.  Returns the new entries (appended).
         """
         if stripe_id in self._stripe_ids:
             raise ValueError(f"stripe {stripe_id!r} already cataloged")
@@ -158,6 +165,7 @@ class StripeCatalog:
                     n_i8=n_i8,
                     n_comp=int(em.get("n_comp", n_i8)),
                     body_bytes=4 * int(blk.sealed.n_valid_u32),
+                    sealed_step=int(sealed_step),
                 )
             )
         self._entries.extend(entries)
@@ -172,17 +180,57 @@ class StripeCatalog:
             )
         return entries
 
+    # ----------------------------------------------------------- lifecycle
+    def retire_stripe(self, stripe_id: str, meta: Optional[Dict] = None) -> int:
+        """Retire one stripe: journal the retirement, then drop its entries.
+
+        The ``retired_<id>.json`` record is committed BEFORE the in-memory
+        entries disappear — the retirement is the durable fact; body/journal
+        compaction and key/nonce recycling happen strictly after it (see
+        ``core/archival/scrub.retire_stripes``).  Idempotent on replay:
+        ``load()`` skips stripes with a retirement record even if their
+        catalog record still exists.  Returns the number of entries dropped.
+        """
+        if self.journal is not None:
+            payload = json.dumps(
+                {"stripe_id": stripe_id, **(meta or {})}
+            ).encode()
+            self.journal.commit(
+                f"{RETIRE_PREFIX}{stripe_id}.json",
+                payload,
+                {"kind": "retired", "stripe_id": stripe_id},
+            )
+        before = len(self._entries)
+        self._entries = [e for e in self._entries if e.stripe_id != stripe_id]
+        self._stripe_ids.discard(stripe_id)
+        self._retired.add(stripe_id)
+        return before - len(self._entries)
+
+    @property
+    def retired(self) -> set:
+        return set(self._retired)
+
     def load(self) -> int:
-        """Rebuild the index from the journal replay; returns #stripes."""
+        """Rebuild the index from the journal replay; returns #stripes.
+
+        Two passes: retirement records win over catalog records regardless
+        of journal order, so a stripe retired after cataloging never comes
+        back on restart.
+        """
         if self.journal is None:
             raise ValueError("catalog has no journal to load from")
+        recs = self.journal.replay()
+        for rec in recs:
+            name = rec["name"]
+            if name.startswith(RETIRE_PREFIX) and name.endswith(".json"):
+                self._retired.add(name[len(RETIRE_PREFIX) : -len(".json")])
         n = 0
-        for rec in self.journal.replay():
+        for rec in recs:
             name = rec["name"]
             if not (name.startswith(CATALOG_PREFIX) and name.endswith(".json")):
                 continue
             stripe_id = name[len(CATALOG_PREFIX) : -len(".json")]
-            if stripe_id in self._stripe_ids:
+            if stripe_id in self._stripe_ids or stripe_id in self._retired:
                 continue
             records = json.loads(self.journal.read(name))
             self._entries.extend(

@@ -32,6 +32,25 @@ not a write-only sink):
   6. the decoded GOPs join the training batch (``train/trainer.py``'s
      replay stage), closing the loop: ingest -> archive -> query -> replay.
 
+Durability loop (scrub -> rebuild -> retire, ``core/archival/scrub.py``):
+
+  7. a background scrubber walks sealed stripes on a byte-budgeted round
+     schedule and recomputes P/Q *over the sealed bodies* through the same
+     unseal kernel (``recompute_stripe_parity`` — parity is defined on
+     ciphertext, so the scrub holds ZERO key material); a nonzero syndrome
+     against the stored parity detects silent corruption, and for RAID-6
+     the P/Q syndrome pair LOCATES the corrupt shard
+     (``raid.raid6_syndrome_locate``) so it can be repaired in place;
+  8. a shard whose CSD the ``StragglerMonitor`` declares dead is rebuilt
+     onto a replacement by the sharded parity pass
+     (``distributed/archival.rebuild_csd_sharded``), budget-bounded per
+     round so replay traffic is never starved, priority-ordered by catalog
+     salience;
+  9. stripes whose salience has decayed past a TTL are *retired*: the
+     retirement is journaled first, then catalog + journal compact (live
+     records rewritten, retired bodies dropped) — only after that is the
+     stripe's key/nonce material recycled.
+
 With the whole codes -> entropy -> pack -> ChaCha20 -> parity chain fused
 into one launch nothing round-trips the host OR HBM mid-chain; only disk
 I/O and O(1) manifest metadata (lengths, KEM polys, nonces, salience
@@ -128,6 +147,7 @@ __all__ = [
     "stripe_manifests_from_json",
     "stripe_parity",
     "recover_stripe",
+    "recompute_stripe_parity",
 ]
 
 
@@ -770,20 +790,32 @@ def recover_stripe(
     missing: List[int],
     manifests: List[Dict],
     body_lens: List[int],
+    *,
+    stripe_id: str = "",
 ) -> List[ArchivedBlock]:
     """Rebuild missing shards' sealed bodies from parity.
 
     Note: parity protects the *body*; KEM polys + nonce are tiny and stored
     replicated in the manifest tier (standard metadata replication).
+    ``stripe_id`` (optional) names the stripe in error messages so a
+    degraded read that exceeds the parity mode's erasure budget is
+    diagnosable from the exception alone.
     """
     pad_to = parity["pad_to"]
+    mode = "raid6" if "q" in parity else "raid5"
     rows: List[Optional[jnp.ndarray]] = []
     for b in blocks:
         rows.append(None if b is None else _bodies_u8([b], pad_to)[0])
-    if "q" in parity:
+    if mode == "raid6":
         full = raid.raid6_reconstruct(rows, parity["p"], parity.get("q"), missing)
     else:
-        assert len(missing) == 1
+        if len(missing) != 1:
+            which = f"stripe {stripe_id!r}" if stripe_id else "stripe"
+            raise ValueError(
+                f"{which}: RAID-5 parity covers exactly 1 erasure but shards "
+                f"{sorted(missing)} are missing — data is unrecoverable "
+                "without a RAID-6 Q strip or a replica"
+            )
         full = list(rows)
         full[missing[0]] = raid.raid5_reconstruct(rows, parity["p"], missing[0])
     out: List[ArchivedBlock] = []
@@ -799,4 +831,62 @@ def recover_stripe(
             meta["kem_c1"], meta["kem_c2"], meta["nonce"], words, body_lens[i]
         )
         out.append(ArchivedBlock(sealed, meta["manifest"]))
+    return out
+
+
+def recompute_stripe_parity(
+    stripe: StripeArchive,
+    *,
+    use_pallas: bool = True,
+    unseal_fn=None,
+) -> Dict[str, np.ndarray]:
+    """Recompute a sealed stripe's P/Q WITHOUT any key material.
+
+    The seal kernel defines parity over the *sealed* bodies (ciphertext),
+    so the scrubber can drive the same fused unseal launch with all-zero
+    session keys/nonces: the ChaCha XOR it applies is garbage, but the
+    P/Q accumulation runs on the input bodies and is exact.  This is what
+    lets scrubbing run on the CSD tier — it never decrypts, never holds
+    keys, and ships only syndrome bytes (see ``csd/costmodel.py``).
+
+    Bodies are stacked at the stripe's seal-time geometry
+    (``parity["pad_to"]`` words) so recomputed strips align byte-for-byte
+    with the stored ones.  Returns ``{"p": u8, "q"?: u8}`` as numpy.
+    """
+    parity = stripe.parity
+    if parity is None:
+        raise ValueError("stripe has no parity strips to recompute")
+    if any(b is None for b in stripe.blocks):
+        raise ValueError(
+            "parity recompute needs every shard body present; rebuild "
+            "missing shards first (recover_stripe / rebuild_csd_sharded)"
+        )
+    S = len(stripe.blocks)
+    pad_to = int(parity["pad_to"])
+    R = pad_to // 128
+    n_words = tuple(int(b.sealed.body.shape[0]) for b in stripe.blocks)
+    if max(n_words) > pad_to:
+        raise ValueError(
+            f"shard body of {max(n_words)} words exceeds the stripe's "
+            f"seal-time pad_to={pad_to}"
+        )
+    sealed = jnp.stack(
+        [
+            jnp.pad(b.sealed.body, (0, pad_to - n)).reshape(R, 128)
+            for b, n in zip(stripe.blocks, n_words)
+        ]
+    )
+    packed = seal_ops.SealedStripe(sealed, None, None, n_words, n_words)
+    mode = "raid6" if "q" in parity else "raid5"
+    fn = unseal_fn or seal_ops.unseal_stripe
+    _, p2, q2 = fn(
+        packed,
+        jnp.zeros((S, 8), jnp.uint32),
+        jnp.zeros((S, 3), jnp.uint32),
+        parity=mode,
+        use_pallas=use_pallas,
+    )
+    out = {"p": np.asarray(_u32_rows_to_u8(p2))}
+    if q2 is not None:
+        out["q"] = np.asarray(_u32_rows_to_u8(q2))
     return out

@@ -25,6 +25,7 @@ __all__ = [
     "raid5_reconstruct",
     "raid6_encode",
     "raid6_reconstruct",
+    "raid6_syndrome_locate",
 ]
 
 
@@ -145,3 +146,31 @@ def raid6_reconstruct(
         shards[i], shards[j] = di, dj
         return shards
     raise ValueError(f"RAID-6 covers at most 2 erasures, got {missing}")
+
+
+# --------------------------------------------------------- scrub syndromes
+def raid6_syndrome_locate(sp, sq, n_shards: int) -> Optional[int]:
+    """Locate a single corrupt data shard from RAID-6 parity syndromes.
+
+    ``sp = P_recomputed ^ P_stored`` and ``sq = Q_recomputed ^ Q_stored``
+    (uint8 arrays of equal length).  If exactly one data shard ``z`` carries
+    an XOR error ``e`` then ``sp = e`` and ``sq = g^z * e``, so every byte
+    with ``sp != 0`` must agree on ``z = log(sq) - log(sp) (mod 255)``.
+    Returns ``z`` when all nonzero bytes agree on one ``z < n_shards``,
+    else ``None`` (multi-shard / unlocatable corruption — rebuild from a
+    clean replica instead of patching).  Host-side numpy: syndromes are a
+    few KB, the scrubber ships syndromes, not bodies (costmodel note).
+    """
+    sp = np.asarray(sp, np.uint8)
+    sq = np.asarray(sq, np.uint8)
+    if sp.shape != sq.shape:
+        return None
+    nz = sp != 0
+    if not nz.any() or (sq[nz] == 0).any() or (sq[~nz] != 0).any():
+        return None
+    log = np.asarray(_LOG)
+    z = (log[sq[nz].astype(np.int32)] - log[sp[nz].astype(np.int32)]) % 255
+    z0 = int(z[0])
+    if (z == z0).all() and z0 < n_shards:
+        return z0
+    return None

@@ -1,0 +1,301 @@
+"""Background parity scrub + stripe lifecycle (the archive that survives).
+
+The write path ends with every stripe sealed and parity-coded; nothing in
+the seed repo ever *checked* that parity again, so a silent bit flip in a
+journaled body would sit undetected until a degraded read decoded garbage.
+This module closes that gap with the scrub -> rebuild -> retire loop
+(pipeline.py docstring, steps 7–9):
+
+* ``StripeScrubber`` walks sealed stripes on a byte-budgeted round-robin
+  schedule and recomputes P/Q through the fused unseal kernel
+  (``pipeline.recompute_stripe_parity`` — parity is defined over the
+  SEALED bodies, so the scrub holds zero key material and can run on the
+  CSD tier, shipping only syndrome bytes; see ``csd/costmodel.py``).
+  A nonzero syndrome detects corruption; for RAID-6 the (P, Q) syndrome
+  pair LOCATES the corrupt shard (``raid.raid6_syndrome_locate``) and the
+  scrubber repairs it in place (body ^= P-syndrome) and re-verifies.
+  RAID-5 detects but cannot locate — the finding escalates to a rebuild
+  from a replica.
+* ``plan_retirement`` / ``retire_stripes`` implement the lifecycle tier:
+  stripes whose salience has decayed past a TTL are retired in the safe
+  order — (1) the retirement record is journaled
+  (``catalog.retire_stripe``), (2) the journal compacts (live records
+  rewritten, retired bodies dropped), (3) only then is the stripe's
+  key/nonce material reported recyclable.  A crash between any two steps
+  replays to a consistent state: the retirement record wins over a
+  surviving catalog record or body.
+
+Budget semantics: a scrub round scans stripes until the byte budget is
+exhausted but always scans AT LEAST one stripe (otherwise a budget smaller
+than the smallest stripe would starve scrubbing forever); the round-robin
+cursor persists across rounds so every stripe is eventually visited.
+Rebuild rounds (``distributed/archival.rebuild_csd_sharded``) are the
+strict side: they never exceed their budget, so replay traffic is never
+starved by recovery.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.archival import raid
+from repro.core.archival.catalog import CATALOG_PREFIX, StripeCatalog
+from repro.core.archival.pipeline import (
+    StripeArchive,
+    recompute_stripe_parity,
+)
+
+__all__ = [
+    "ScrubFinding",
+    "ScrubRound",
+    "StripeScrubber",
+    "RetireReport",
+    "plan_retirement",
+    "retire_stripes",
+]
+
+
+class ScrubFinding(NamedTuple):
+    """One corruption (or verification failure) found by a scrub pass."""
+
+    stripe_id: str
+    # "shard" | "p" | "q" | "unlocatable" | "noparity" | "degraded"
+    kind: str
+    shard: Optional[int]  # corrupt shard index (kind == "shard")
+    repaired: bool       # fixed in place and re-verified clean
+
+
+class ScrubRound(NamedTuple):
+    stripes_checked: int
+    bytes_scrubbed: int    # sealed body bytes recomputed through the kernel
+    syndrome_bytes: int    # what the scrub SHIPS host-side (P+Q strips)
+    findings: List[ScrubFinding]  # clean stripes produce no finding
+
+
+def _stripe_bytes(stripe: StripeArchive) -> int:
+    return sum(4 * int(b.sealed.n_valid_u32) for b in stripe.blocks
+               if b is not None)
+
+
+def _xor_into_body(stripe: StripeArchive, shard: int,
+                   syndrome: np.ndarray) -> StripeArchive:
+    """Repair shard ``shard``: XOR the P-syndrome (== the error) into its
+    sealed body, preserving the stripe's padded parity geometry."""
+    import jax.numpy as jnp
+
+    blk = stripe.blocks[shard]
+    body = np.asarray(blk.sealed.body, np.uint32).copy()
+    nbytes = min(body.size * 4, (syndrome.size // 4) * 4)
+    err = np.ascontiguousarray(syndrome[:nbytes]).view(np.uint32)
+    body[: err.size] ^= err
+    blocks = list(stripe.blocks)
+    blocks[shard] = blk._replace(
+        sealed=blk.sealed._replace(body=jnp.asarray(body))
+    )
+    return stripe._replace(blocks=blocks)
+
+
+class StripeScrubber:
+    """Byte-budgeted background parity scrubber with a persistent cursor.
+
+    ``get_stripe(stripe_id) -> StripeArchive`` reads a sealed stripe;
+    ``put_stripe(stripe_id, stripe)`` (optional) writes a repaired one
+    back — without it the scrubber detects and locates but leaves repair
+    to the caller (findings carry ``repaired=False``).
+    """
+
+    def __init__(
+        self,
+        get_stripe: Callable[[str], StripeArchive],
+        put_stripe: Optional[Callable[[str, StripeArchive], None]] = None,
+        *,
+        use_pallas: bool = True,
+    ):
+        self.get_stripe = get_stripe
+        self.put_stripe = put_stripe
+        self.use_pallas = use_pallas
+        self._next = 0  # round-robin cursor over the caller's stripe list
+
+    # ----------------------------------------------------------- one stripe
+    def scrub_stripe(self, stripe_id: str) -> List[ScrubFinding]:
+        """Parity-verify one stripe; locate + repair what the mode allows."""
+        stripe = self.get_stripe(stripe_id)
+        if stripe.parity is None:
+            return [ScrubFinding(stripe_id, "noparity", None, False)]
+        if any(b is None for b in stripe.blocks):
+            # a shard is out for rebuild: parity cannot be verified until
+            # the stripe is whole again — defer, don't crash the round
+            return [ScrubFinding(stripe_id, "degraded", None, False)]
+        findings = self._classify(stripe_id, stripe)
+        if not findings or self.put_stripe is None:
+            return findings
+        out = []
+        for f in findings:
+            repaired = self._repair(stripe_id, f)
+            out.append(f._replace(repaired=repaired))
+        return out
+
+    def _classify(self, stripe_id: str,
+                  stripe: StripeArchive) -> List[ScrubFinding]:
+        got = recompute_stripe_parity(stripe, use_pallas=self.use_pallas)
+        stored_p = np.asarray(stripe.parity["p"], np.uint8)
+        sp = got["p"] ^ stored_p
+        if "q" not in stripe.parity:
+            if sp.any():
+                # RAID-5: one syndrome cannot locate the corrupt shard
+                return [ScrubFinding(stripe_id, "unlocatable", None, False)]
+            return []
+        stored_q = np.asarray(stripe.parity["q"], np.uint8)
+        sq = got["q"] ^ stored_q
+        p_bad, q_bad = bool(sp.any()), bool(sq.any())
+        if not p_bad and not q_bad:
+            return []
+        if p_bad and q_bad:
+            z = raid.raid6_syndrome_locate(sp, sq, len(stripe.blocks))
+            if z is None:
+                return [ScrubFinding(stripe_id, "unlocatable", None, False)]
+            return [ScrubFinding(stripe_id, "shard", z, False)]
+        # data shards consistent with exactly one parity strip => the
+        # OTHER strip rotted on disk
+        kind = "p" if p_bad else "q"
+        return [ScrubFinding(stripe_id, kind, None, False)]
+
+    def _repair(self, stripe_id: str, f: ScrubFinding) -> bool:
+        stripe = self.get_stripe(stripe_id)
+        got = recompute_stripe_parity(stripe, use_pallas=self.use_pallas)
+        if f.kind == "shard":
+            sp = got["p"] ^ np.asarray(stripe.parity["p"], np.uint8)
+            stripe = _xor_into_body(stripe, f.shard, sp)
+        elif f.kind in ("p", "q"):
+            parity = dict(stripe.parity)
+            parity[f.kind] = got[f.kind]
+            stripe = stripe._replace(parity=parity)
+        else:  # unlocatable / noparity: nothing this tier can fix
+            return False
+        # re-verify before declaring victory: a repaired stripe must be
+        # syndrome-clean or the finding stays open
+        clean = recompute_stripe_parity(stripe, use_pallas=self.use_pallas)
+        ok = np.array_equal(clean["p"], np.asarray(stripe.parity["p"]))
+        if ok and "q" in stripe.parity:
+            ok = np.array_equal(clean["q"], np.asarray(stripe.parity["q"]))
+        if ok:
+            self.put_stripe(stripe_id, stripe)
+        return bool(ok)
+
+    # ---------------------------------------------------------------- round
+    def scrub_round(self, stripe_ids: Sequence[str],
+                    budget_bytes: int) -> ScrubRound:
+        """Scrub stripes round-robin until ``budget_bytes`` is spent.
+
+        Always scans at least one stripe (minimum progress); the cursor
+        persists so successive rounds cover the whole archive even when
+        each round affords only a fraction of it.
+        """
+        ids = list(stripe_ids)
+        if not ids:
+            return ScrubRound(0, 0, 0, [])
+        checked = scanned = shipped = 0
+        findings: List[ScrubFinding] = []
+        while checked < len(ids):
+            sid = ids[self._next % len(ids)]
+            cost = _stripe_bytes(self.get_stripe(sid))
+            if checked > 0 and scanned + cost > budget_bytes:
+                break
+            findings.extend(self.scrub_stripe(sid))
+            stripe = self.get_stripe(sid)
+            if stripe.parity is not None:
+                shipped += sum(
+                    np.asarray(stripe.parity[k]).size
+                    for k in ("p", "q") if k in stripe.parity
+                )
+            scanned += cost
+            checked += 1
+            self._next = (self._next + 1) % len(ids)
+            if scanned >= budget_bytes:
+                break
+        return ScrubRound(checked, scanned, shipped, findings)
+
+
+# ------------------------------------------------------------------ lifecycle
+class RetireReport(NamedTuple):
+    retired: List[str]          # stripe ids retired (journaled, in order)
+    dropped_records: int        # journal records removed by compaction
+    dropped_entries: int        # catalog entries removed
+    keys_recyclable: List[str]  # ids whose key/nonce material may now be
+    #                             recycled — strictly the journaled set
+
+
+def plan_retirement(
+    catalog: StripeCatalog,
+    centroids=None,
+    *,
+    now_step: int,
+    ttl_steps: int,
+    max_novelty: Optional[float] = None,
+    limit: Optional[int] = None,
+) -> List[str]:
+    """Pick stripes to retire: past TTL and (optionally) low-salience.
+
+    A stripe is eligible when EVERY GOP in it was sealed ≥ ``ttl_steps``
+    trainer steps ago (entries without a seal stamp never expire) and,
+    when ``max_novelty`` is given, its most-novel GOP — scored against the
+    caller's CURRENT ``centroids`` — is at or below it: age alone never
+    deletes data the trainer still finds surprising.  Least-salient first,
+    capped at ``limit``.
+    """
+    by_stripe: Dict[str, List[int]] = {}
+    entries = catalog.entries
+    for i, e in enumerate(entries):
+        by_stripe.setdefault(e.stripe_id, []).append(i)
+    nov = catalog.score(centroids)
+    eligible = []
+    for sid, idxs in by_stripe.items():
+        ok_age = all(
+            entries[i].sealed_step >= 0
+            and now_step - entries[i].sealed_step >= ttl_steps
+            for i in idxs
+        )
+        if not ok_age:
+            continue
+        top = float(max(nov[i] for i in idxs)) if idxs else 0.0
+        if max_novelty is not None and top > max_novelty:
+            continue
+        eligible.append((top, sid))
+    eligible.sort()
+    ids = [sid for _, sid in eligible]
+    return ids[: limit] if limit is not None else ids
+
+
+def retire_stripes(
+    catalog: StripeCatalog,
+    stripe_ids: Sequence[str],
+    *,
+    journal=None,
+    records_for: Optional[Callable[[str], List[str]]] = None,
+) -> RetireReport:
+    """Retire stripes in the crash-safe order.
+
+    Per stripe: (1) ``catalog.retire_stripe`` journals the retirement
+    record and drops the in-memory entries; then, once ALL retirements are
+    durable, (2) one journal ``compact`` drops the retired bodies and
+    catalog records (``records_for(stripe_id)`` names a stripe's journal
+    records — bodies, manifests, parity; the catalog record is always
+    included).  Key/nonce material is recyclable only for ids in the
+    returned report — i.e. strictly after their retirement is journaled.
+    """
+    journal = journal if journal is not None else catalog.journal
+    retired: List[str] = []
+    dropped_entries = 0
+    for sid in stripe_ids:
+        dropped_entries += catalog.retire_stripe(sid)
+        retired.append(sid)
+    drop: List[str] = []
+    for sid in retired:
+        drop.append(f"{CATALOG_PREFIX}{sid}.json")
+        if records_for is not None:
+            drop.extend(records_for(sid))
+    dropped_records = journal.compact(drop) if journal is not None else 0
+    return RetireReport(retired, dropped_records, dropped_entries,
+                        list(retired))

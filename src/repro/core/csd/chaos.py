@@ -1,0 +1,224 @@
+"""Deterministic fault injection for a simulated CSD fleet (chaos harness).
+
+The paper's durability claim — storage that *survives* intermittent edge
+deployments — is only credible if it is continuously exercised, so this
+module simulates a fleet of 100s of CSDs under the fault classes an
+unattended edge pod actually produces and drives them through the real
+seams: the ``StragglerMonitor`` (heartbeats), the ``Journal`` (commits),
+and the scrub/rebuild tier (``core/archival/scrub.py``,
+``distributed/archival.rebuild_csd_sharded``).
+
+Fault classes (``FaultEvent.kind``):
+
+* ``"bitflip"``  — silent corruption: one bit flips in a committed body
+  (``flip_bit``); the Journal's crc32 detects it, the scrubber's parity
+  syndrome locates and repairs it.
+* ``"loss"``     — permanent CSD loss: the device stops heartbeating
+  forever; the monitor declares it dead after ``miss_threshold`` rounds
+  and its shards are rebuilt onto a replacement.
+* ``"restart"``  — rolling restart: the CSD misses ``restart_rounds``
+  heartbeats then returns; must NOT be declared dead (the monitor's
+  ``miss_threshold`` grace exists exactly for this).
+* ``"dropout"``  — a single missed heartbeat; a non-event.
+* ``"torn"``     — power loss mid-seal: a stripe body hits the disk
+  truncated with its journal record already appended (``torn_commit``);
+  replay must discard it cleanly.
+
+Determinism is the contract: the ENTIRE schedule — every event and every
+per-round step time — is precomputed in ``__init__`` from
+``np.random.default_rng(cfg.seed)``, so the same seed replays the same
+chaos bit-for-bit no matter how the consumer interleaves ``tick()`` with
+repairs.  CI pins a seed and asserts the acceptance invariant: every
+sealed stripe ends scrub-verified, rebuilt bit-exact, or journaled as
+retired — zero undetected corruptions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS",
+    "ChaosConfig",
+    "FaultEvent",
+    "FleetRound",
+    "ChaosFleet",
+    "flip_bit",
+    "torn_commit",
+]
+
+FAULT_KINDS = ("bitflip", "loss", "restart", "dropout", "torn")
+
+
+class ChaosConfig(NamedTuple):
+    """Fleet shape + per-round, per-CSD fault probabilities."""
+
+    n_csds: int = 256
+    n_rounds: int = 32
+    seed: int = 0
+    p_bitflip: float = 0.002
+    p_loss: float = 0.0005
+    p_restart: float = 0.002
+    p_dropout: float = 0.01
+    p_torn: float = 0.001
+    restart_rounds: int = 2       # heartbeats missed by a rolling restart
+    base_step_time: float = 1.0   # healthy heartbeat latency (seconds)
+    jitter: float = 0.05          # relative step-time noise
+    # kinds guaranteed ≥1 event in the schedule (one deterministic event is
+    # appended per absent kind) — tests use this to exercise every class
+    # without cranking probabilities
+    ensure_kinds: Tuple[str, ...] = ()
+
+
+class FaultEvent(NamedTuple):
+    round: int   # fleet round the fault fires in
+    kind: str    # one of FAULT_KINDS
+    csd: int     # device the fault hits
+    param: int   # kind-specific: bitflip/torn = draw for the bit/cut point
+
+
+class FleetRound(NamedTuple):
+    """One fleet heartbeat round as the monitor and the tests see it."""
+
+    round: int
+    events: List[FaultEvent]            # faults that fired THIS round
+    step_times: List[Optional[float]]   # per-CSD heartbeat (None = missed)
+    down: List[int]                     # CSDs not heartbeating this round
+    lost: List[int]                     # CSDs permanently lost so far
+
+
+def flip_bit(payload: bytes, event: FaultEvent) -> bytes:
+    """Deterministically flip one bit of ``payload`` per a bitflip event."""
+    if not payload:
+        return payload
+    bit = event.param % (len(payload) * 8)
+    buf = bytearray(payload)
+    buf[bit // 8] ^= 1 << (bit % 8)
+    return bytes(buf)
+
+
+def torn_commit(journal, name: str, payload: bytes, event: FaultEvent,
+                meta: Optional[Dict] = None) -> None:
+    """Simulate power loss mid-seal: the journal record lands but the body
+    is truncated on disk (the record claims the full size).  ``replay()``
+    must treat this exactly like a torn write and discard it."""
+    import json
+    import os
+    import time
+    import zlib
+
+    cut = event.param % max(len(payload), 1)
+    with open(os.path.join(journal.root, name), "wb") as f:
+        f.write(payload[:cut])
+    rec = {
+        "name": name,
+        "bytes": len(payload),
+        "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+        "ts": time.time(),
+        "meta": meta or {},
+    }
+    with open(journal.path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+class ChaosFleet:
+    """A seed-deterministic fleet of simulated CSDs.
+
+    ``tick()`` advances one heartbeat round and returns the faults that
+    fired plus the per-CSD step times to feed the ``StragglerMonitor``.
+    The consumer applies data faults itself (``flip_bit`` on a journaled
+    body, ``torn_commit`` for a mid-seal loss) — the fleet only decides
+    WHAT fails WHEN, so the same schedule can drive any storage stack.
+
+    ``replace(csd)`` models a rebuilt replacement device taking over a lost
+    CSD's slot: it resumes heartbeating on the next round.
+    """
+
+    def __init__(self, cfg: ChaosConfig = ChaosConfig()):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        probs = {
+            "bitflip": cfg.p_bitflip,
+            "loss": cfg.p_loss,
+            "restart": cfg.p_restart,
+            "dropout": cfg.p_dropout,
+            "torn": cfg.p_torn,
+        }
+        # precompute EVERYTHING up front: draws never depend on consumer
+        # behavior, so seed => schedule is bijective
+        schedule: List[List[FaultEvent]] = [[] for _ in range(cfg.n_rounds)]
+        for r in range(cfg.n_rounds):
+            for kind in FAULT_KINDS:  # fixed order => fixed draw order
+                hits = rng.random(cfg.n_csds) < probs[kind]
+                params = rng.integers(0, 2**31 - 1, cfg.n_csds)
+                for c in np.flatnonzero(hits):
+                    schedule[r].append(
+                        FaultEvent(r, kind, int(c), int(params[c]))
+                    )
+        self.step_time_table = cfg.base_step_time * (
+            1.0 + cfg.jitter * rng.standard_normal((cfg.n_rounds, cfg.n_csds))
+        )
+        # deterministic backfill for kinds the random draws never produced
+        present = {e.kind for evs in schedule for e in evs}
+        for i, kind in enumerate(k for k in cfg.ensure_kinds
+                                 if k not in present):
+            params = rng.integers(0, 2**31 - 1, 2)
+            r = int(params[0]) % max(cfg.n_rounds - 1, 1)
+            c = (int(params[1]) + i) % cfg.n_csds
+            schedule[r].append(FaultEvent(r, kind, c, int(params[1])))
+        for evs in schedule:
+            evs.sort(key=lambda e: (e.csd, FAULT_KINDS.index(e.kind)))
+        self.schedule = schedule
+        self.round = 0
+        self._lost: set = set()
+        self._down_until: Dict[int, int] = {}  # csd -> first round back up
+
+    # --------------------------------------------------------------- state
+    @property
+    def lost(self) -> List[int]:
+        return sorted(self._lost)
+
+    def replace(self, csd: int) -> None:
+        """A replacement device takes over a lost CSD's slot."""
+        self._lost.discard(csd)
+        self._down_until.pop(csd, None)
+
+    def events_of(self, kind: str) -> List[FaultEvent]:
+        """All scheduled events of one kind (inspection/tests)."""
+        return [e for evs in self.schedule for e in evs if e.kind == kind]
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> FleetRound:
+        if self.round >= self.cfg.n_rounds:
+            raise StopIteration(
+                f"chaos schedule exhausted at round {self.cfg.n_rounds}"
+            )
+        r = self.round
+        events = list(self.schedule[r])
+        for e in events:
+            if e.kind == "loss":
+                self._lost.add(e.csd)
+            elif e.kind == "restart":
+                self._down_until[e.csd] = r + self.cfg.restart_rounds
+            elif e.kind == "dropout":
+                self._down_until.setdefault(e.csd, r + 1)
+        down = sorted(
+            set(self._lost)
+            | {c for c, until in self._down_until.items() if r < until}
+        )
+        downset = set(down)
+        step_times: List[Optional[float]] = [
+            None if c in downset else float(self.step_time_table[r, c])
+            for c in range(self.cfg.n_csds)
+        ]
+        self._down_until = {
+            c: until for c, until in self._down_until.items() if r + 1 < until
+        }
+        self.round += 1
+        return FleetRound(r, events, step_times, down, self.lost)
+
+    def run(self) -> List[FleetRound]:
+        """Tick through the remaining schedule (no data faults applied)."""
+        return [self.tick() for _ in range(self.round, self.cfg.n_rounds)]

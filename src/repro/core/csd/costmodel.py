@@ -22,6 +22,11 @@ Key structural facts encoded:
     ``best_entropy_placement``): host-side zstd pays a raw-byte host-link
     crossing, the on-device rANS kernel pays none — the term the placement
     scheduler prices now that ``repro.kernels.entropy`` exists;
+  * the background scrub is placeable the same way
+    (``scrub_placement_cost``): parity verification runs over the SEALED
+    bodies, so a CSD-side scrub reads flash-locally and ships only P/Q
+    syndrome bytes for the cross-shard compare, while a host-side scrub
+    must move every sealed body over the host link;
   * per-launch dispatch overhead is NOT a per-stripe term on the on-device
     path: the one-launch archival kernel (``repro.kernels.fused``) runs
     entropy + pack + seal + parity as a single launch and batches K
@@ -45,7 +50,8 @@ __all__ = ["SystemModel", "classical_archive", "vss_archive", "csd_archive",
            "multinode_latency", "multinode_movement_latency",
            "csd_ratio_tradeoff", "entropy_placement_cost",
            "best_entropy_placement", "retrieval_placement_cost",
-           "best_retrieval_placement"]
+           "best_retrieval_placement", "scrub_placement_cost",
+           "best_scrub_placement"]
 
 
 class SystemModel(NamedTuple):
@@ -199,6 +205,52 @@ def best_retrieval_placement(
     per-option costs so the planner can report movement too."""
     costs = {
         w: retrieval_placement_cost(sys, comp_bytes, raw_bytes, w)
+        for w in ("host", "csd")
+    }
+    return min(costs, key=lambda w: costs[w].latency_s), costs
+
+
+def scrub_placement_cost(
+    sys: SystemModel, body_bytes: float, syndrome_bytes: float,
+    where: str = "csd",
+) -> ArchiveCost:
+    """Price one background scrub pass (parity re-verification of sealed
+    stripes — ``core/archival/scrub.py``) at a given placement.
+
+    The scrub's structural advantage on the CSD tier is extreme: parity is
+    defined over the SEALED bodies, so verification needs no keys and no
+    decode — each CSD streams its own bodies through the parity fold at
+    internal bandwidth and ships only the P/Q *syndromes* (a few hundred
+    bytes per stripe) for the cross-shard compare.  ``where="host"`` prices
+    the naive alternative — every sealed body crosses the host link to be
+    XOR/GF-folded on the storage CPU — which moves ``body_bytes`` per pass
+    and is why host-side scrubbing of a large archive starves ingest.
+    ``body_bytes``: sealed bytes verified per pass; ``syndrome_bytes``: the
+    P+Q strips shipped for comparison (what the CSD path moves instead).
+    """
+    if where == "host":
+        lat = max(
+            body_bytes / (sys.host_link_GBps * 1e9),  # every sealed byte up
+            body_bytes / (sys.cpu_rate_GBps * 1e9),   # host parity fold
+        )
+        return ArchiveCost(lat, body_bytes)
+    if where == "csd":
+        lat = max(
+            body_bytes / (sys.ssd_internal_GBps * 1e9),  # flash-local read
+            body_bytes / (sys.csd_rate_GBps * 1e9),      # on-device fold
+            syndrome_bytes / (sys.p2p_GBps * 1e9),       # syndromes only
+        )
+        return ArchiveCost(lat, syndrome_bytes)
+    raise ValueError(f"unknown scrub placement {where!r}")
+
+
+def best_scrub_placement(
+    sys: SystemModel, body_bytes: float, syndrome_bytes: float
+) -> Tuple[str, dict]:
+    """Cheapest-latency scrub placement (movement reported per option —
+    the CSD tier wins on both axes for any realistically sized archive)."""
+    costs = {
+        w: scrub_placement_cost(sys, body_bytes, syndrome_bytes, w)
         for w in ("host", "csd")
     }
     return min(costs, key=lambda w: costs[w].latency_s), costs

@@ -4,13 +4,23 @@ Three mechanisms, mapped to pod scale:
 
 * **Straggler monitor** — EWMA of per-shard step times; shards slower than
   ``straggler_factor`` x median are flagged and the placement engine moves
-  streams off them (paper: load imbalance dominates, Table 2).
+  streams off them (paper: load imbalance dominates, Table 2).  Dead-shard
+  detection covers both pathologies a churning fleet produces: a shard that
+  heartbeats absurdly slowly (``dead_factor`` x median) and a shard that
+  stops heartbeating at all (``miss_threshold`` consecutive misses — a
+  single dropout or a short rolling restart is tolerated).  A warm-up grace
+  (``warmup_rounds``) keeps shards that simply have not heartbeated YET out
+  of the dead list, so step-0 retrieval plans do not bill every stripe as a
+  degraded read.
 * **Shard-loss detection + parity rebuild** — a dead shard's archival data is
   reconstructed from RAID-5/6 parity (core/archival/raid.py), the TPU
   analogue of a failed CSD being rebuilt from the redundancy stripe.
 * **Power-loss journaling** — archival blocks commit atomically via a
   manifest (write body -> fsync -> append manifest record); a restart replays
-  the manifest and discards torn writes.  Used by train/checkpoint.py too.
+  the manifest and discards torn writes.  Records carry a crc32 of their
+  payload so a silently flipped bit in a committed body is DETECTED, not
+  replayed as valid — the scrubber (core/archival/scrub.py) then locates and
+  repairs it from parity.  Used by train/checkpoint.py too.
 """
 
 from __future__ import annotations
@@ -18,6 +28,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import zlib
 from typing import Dict, List, NamedTuple, Optional, Sequence
 
 __all__ = ["StragglerMonitor", "ShardStatus", "Journal"]
@@ -30,7 +41,16 @@ class ShardStatus(NamedTuple):
 
 
 class StragglerMonitor:
-    """Tracks per-shard step latencies; flags stragglers and dead shards."""
+    """Tracks per-shard step latencies; flags stragglers and dead shards.
+
+    ``warmup_rounds``: minimum ``update`` calls before a shard with NO
+    heartbeat history may be flagged dead (cold-start grace — without it a
+    step-0 monitor declares every not-yet-heard shard dead and the planner
+    bills every stripe as a degraded read).  ``miss_threshold``: consecutive
+    missed heartbeats (``None`` step times) before a previously-healthy
+    shard is declared dead — one dropout or a short rolling restart stays a
+    non-event, a silent permanent loss is caught within a few rounds.
+    """
 
     def __init__(
         self,
@@ -38,18 +58,27 @@ class StragglerMonitor:
         alpha: float = 0.3,
         straggler_factor: float = 1.5,
         dead_factor: float = 10.0,
+        warmup_rounds: int = 2,
+        miss_threshold: int = 3,
     ):
         self.n = n_shards
         self.alpha = alpha
         self.straggler_factor = straggler_factor
         self.dead_factor = dead_factor
+        self.warmup_rounds = warmup_rounds
+        self.miss_threshold = miss_threshold
         self.ewma: List[Optional[float]] = [None] * n_shards
+        self.misses: List[int] = [0] * n_shards
+        self.rounds = 0
 
     def update(self, step_times: Sequence[Optional[float]]) -> ShardStatus:
         """step_times[i] = seconds for shard i this step (None = no heartbeat)."""
+        self.rounds += 1
         for i, t in enumerate(step_times):
             if t is None:
+                self.misses[i] += 1
                 continue
+            self.misses[i] = 0
             self.ewma[i] = (
                 t if self.ewma[i] is None else self.alpha * t + (1 - self.alpha) * self.ewma[i]
             )
@@ -61,12 +90,19 @@ class StragglerMonitor:
         speed, stragglers, dead = [], [], []
         for i, t in enumerate(self.ewma):
             if t is None:
-                speed.append(0.0)
-                dead.append(i)
+                # never heartbeated: dead only past the warm-up grace
+                if self.rounds >= self.warmup_rounds:
+                    speed.append(0.0)
+                    dead.append(i)
+                else:
+                    speed.append(1.0)
             else:
                 rel = med / t
                 speed.append(rel)
-                if t > self.dead_factor * med:
+                if (
+                    self.misses[i] >= self.miss_threshold
+                    or t > self.dead_factor * med
+                ):
                     dead.append(i)
                 elif t > self.straggler_factor * med:
                     stragglers.append(i)
@@ -80,12 +116,34 @@ class Journal:
     durably on disk; replay keeps only records whose payload exists and whose
     length matches — torn payloads are discarded, exactly the paper's
     "data integrity ... during power disruptions" requirement.
+
+    Silent corruption: each record carries a crc32 of its payload, verified
+    on ``replay()`` (and on ``read(..., crc32=...)``), so a flipped bit in a
+    committed body no longer replays as valid just because the byte length
+    matches.  Records written before the crc existed are still accepted.
+    ``replay(verify_crc=False)`` is the scrubber's entry: it returns
+    crc-failed records too (marked ``crc_ok=False``) so the parity syndrome
+    can LOCATE and REPAIR the corruption instead of merely dropping it.
+
+    Durability of the rename itself: ``os.replace`` only becomes power-loss
+    safe once the *directory* entry is on disk, so ``commit`` fsyncs the
+    journal directory after the rename and after appending the record.
     """
 
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.path = os.path.join(root, "journal.jsonl")
+
+    def _fsync_dir(self) -> None:
+        """fsync the journal directory so renames/creates survive power loss."""
+        fd = os.open(self.root, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        except OSError:  # pragma: no cover - fs without dir fsync support
+            pass
+        finally:
+            os.close(fd)
 
     def commit(self, name: str, payload: bytes, meta: Optional[Dict] = None) -> str:
         body_path = os.path.join(self.root, name)
@@ -95,9 +153,11 @@ class Journal:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, body_path)
+        self._fsync_dir()
         rec = {
             "name": name,
             "bytes": len(payload),
+            "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
             "ts": time.time(),
             "meta": meta or {},
         }
@@ -105,10 +165,17 @@ class Journal:
             f.write(json.dumps(rec) + "\n")
             f.flush()
             os.fsync(f.fileno())
+        self._fsync_dir()
         return body_path
 
-    def replay(self) -> List[Dict]:
-        """Valid committed records, in order; torn writes dropped."""
+    def replay(self, verify_crc: bool = True) -> List[Dict]:
+        """Valid committed records, in order; torn writes dropped.
+
+        ``verify_crc=True`` (default) also drops records whose payload no
+        longer matches its committed crc32 — silent bit flips read as
+        missing data, never as valid data.  ``verify_crc=False`` keeps them,
+        with ``crc_ok=False`` set, for the scrub/repair path.
+        """
         if not os.path.exists(self.path):
             return []
         out = []
@@ -122,10 +189,64 @@ class Journal:
                 except json.JSONDecodeError:
                     continue  # torn journal tail
                 p = os.path.join(self.root, rec["name"])
-                if os.path.exists(p) and os.path.getsize(p) == rec["bytes"]:
-                    out.append(rec)
+                if not (os.path.exists(p) and os.path.getsize(p) == rec["bytes"]):
+                    continue
+                want = rec.get("crc32")
+                if want is not None:
+                    with open(p, "rb") as bf:
+                        ok = (zlib.crc32(bf.read()) & 0xFFFFFFFF) == want
+                    if not ok:
+                        if not verify_crc:
+                            out.append(dict(rec, crc_ok=False))
+                        continue
+                out.append(rec)
         return out
 
-    def read(self, name: str) -> bytes:
+    def read(self, name: str, crc32: Optional[int] = None) -> bytes:
+        """Read a committed payload; verifies ``crc32`` when the caller has
+        the record in hand (silent corruption raises instead of decoding)."""
         with open(os.path.join(self.root, name), "rb") as f:
-            return f.read()
+            data = f.read()
+        if crc32 is not None and (zlib.crc32(data) & 0xFFFFFFFF) != crc32:
+            raise ValueError(
+                f"journal payload {name!r} fails its committed crc32 "
+                "(silent corruption)"
+            )
+        return data
+
+    def compact(self, drop: Sequence[str]) -> int:
+        """Stripe-lifecycle compaction: rewrite the journal without the
+        ``drop`` records and delete their payload files.
+
+        The rewrite is atomic (tmp + ``os.replace`` + directory fsync) and
+        runs over ``replay(verify_crc=False)``, so compaction also sheds torn
+        tails while PRESERVING crc-failed records that still await scrub
+        repair.  Payload files are unlinked only after the new journal is
+        durable — key/nonce material inside a retired stripe's manifest
+        record is recycled strictly after the retirement is journaled.
+        Returns the number of records dropped.
+        """
+        dropset = set(drop)
+        keep, dropped = [], 0
+        for rec in self.replay(verify_crc=False):
+            rec = dict(rec)
+            rec.pop("crc_ok", None)
+            if rec["name"] in dropset:
+                dropped += 1
+            else:
+                keep.append(rec)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            for rec in keep:
+                f.write(json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self._fsync_dir()
+        live = {r["name"] for r in keep}
+        for name in dropset - live:
+            p = os.path.join(self.root, name)
+            if os.path.exists(p):
+                os.remove(p)
+        self._fsync_dir()
+        return dropped

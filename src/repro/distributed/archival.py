@@ -107,6 +107,10 @@ __all__ = [
     "StripeCoalescer",
     "seal_coalesced_stripe",
     "seal_coalesced_stripes",
+    "RebuildItem",
+    "RebuildRound",
+    "plan_rebuild",
+    "rebuild_csd_sharded",
 ]
 
 
@@ -684,3 +688,171 @@ def seal_coalesced_stripes(
         pad_rows=[cs.pad_rows for cs in batch],
         fused_fn=_sharded_fused_fn(mesh, axis) if mesh is not None else None,
     )
+
+
+# ------------------------------------------------------------- CSD rebuild
+class RebuildItem(NamedTuple):
+    """One lost shard to reconstruct onto the replacement CSD."""
+
+    stripe_id: str
+    shard: int        # stripe shard index the dead CSD owned
+    body_bytes: int   # sealed bytes the rebuild writes (the budget unit)
+    salience: float   # priority: most-salient stripes come back first
+
+
+class RebuildRound(NamedTuple):
+    rebuilt: List[RebuildItem]    # completed this round, in priority order
+    bytes_rebuilt: int            # strictly <= the round's budget
+    remaining: List[RebuildItem]  # carry over to the next round
+
+
+def plan_rebuild(
+    catalog,
+    dead_csd: int,
+    centroids=None,
+    *,
+    owner_of=None,
+) -> List[RebuildItem]:
+    """Rebuild work-list for one dead CSD, most-salient stripes first.
+
+    ``owner_of(entry) -> csd`` maps a catalog entry to the device that owns
+    its shard; the default is the identity mapping the ingest tiers use
+    (stripe shard s lives on CSD s).  Salience is scored against the
+    caller's CURRENT ``centroids`` (same scoring as retrieval), so the
+    shards replay is most likely to ask for are the first ones back — a
+    degraded read window shrinks where it matters most.
+    """
+    owner_of = owner_of or (lambda e: e.shard)
+    entries = catalog.entries
+    nov = catalog.score(centroids)
+    items = [
+        RebuildItem(e.stripe_id, e.shard, e.body_bytes, float(nov[i]))
+        for i, e in enumerate(entries)
+        if owner_of(e) == dead_csd
+    ]
+    items.sort(key=lambda it: (-it.salience, it.stripe_id, it.shard))
+    return items
+
+
+def _rebuild_shard_body(
+    stripe: StripeArchive,
+    shard: int,
+    manifests: List[Dict],
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "data",
+    use_pallas: bool = True,
+):
+    """Reconstruct one lost shard's sealed body from parity.
+
+    Single loss rides the shard_mapped parity pass: the surviving bodies go
+    through the unseal kernel with zero keys and ``parity="raid5"`` — the
+    kernel's P accumulation IS the XOR fold of the survivors (cross-shard
+    partials combined by ``_xor_allreduce`` on a mesh), and
+    ``lost = P_stored ^ XOR(survivors)``.  Only parity-sized traffic
+    crosses devices; bodies stay where they live.  A double loss (another
+    shard of the same stripe already missing) falls back to the host
+    GF(256) ``recover_stripe`` path.
+    """
+    from repro.core.archival.pipeline import (
+        _u32_rows_to_u8,
+        recover_stripe,
+    )
+
+    parity = stripe.parity
+    if parity is None:
+        raise ValueError(f"shard {shard} lost and the stripe has no parity")
+    missing = [i for i, b in enumerate(stripe.blocks)
+               if b is None or i == shard]
+    meta = manifests[shard]
+    n_words = int(meta["n_words"])
+    if len(missing) > 1:
+        blocks = [None if i in missing else b
+                  for i, b in enumerate(stripe.blocks)]
+        body_lens = [
+            int(manifests[i]["n_words"]) if i in missing
+            else int(stripe.blocks[i].sealed.n_valid_u32)
+            for i in range(len(stripe.blocks))
+        ]
+        return recover_stripe(
+            blocks, parity, missing, manifests, body_lens,
+        )[shard]
+    pad_to = int(parity["pad_to"])
+    R = pad_to // 128
+    survivors = [
+        (i, b) for i, b in enumerate(stripe.blocks) if i != shard
+    ]
+    nw = tuple(int(b.sealed.n_valid_u32) for _, b in survivors)
+    sealed = jnp.stack(
+        [
+            jnp.pad(b.sealed.body, (0, pad_to - int(b.sealed.body.shape[0])))
+            .reshape(R, 128)
+            for _, b in survivors
+        ]
+    )
+    packed = SealedStripe(sealed, None, None, nw, nw)
+    S = len(survivors)
+    zero_k = jnp.zeros((S, 8), jnp.uint32)
+    zero_n = jnp.zeros((S, 3), jnp.uint32)
+    if mesh is not None:
+        _, p, _ = unseal_stripe_sharded(
+            packed, zero_k, zero_n, mesh=mesh, axis=axis, parity="raid5",
+            use_pallas=use_pallas,
+        )
+    else:
+        _, p, _ = seal_ops.unseal_stripe(
+            packed, zero_k, zero_n, parity="raid5", use_pallas=use_pallas,
+        )
+    import numpy as np
+
+    from repro.core.crypto.hybrid import SealedBlock
+    from repro.core.archival.pipeline import ArchivedBlock
+
+    lost = np.asarray(_u32_rows_to_u8(p)) ^ np.asarray(parity["p"], np.uint8)
+    words = jnp.asarray(
+        np.ascontiguousarray(lost[: pad_to * 4]).view(np.uint32)[:n_words]
+    )
+    sealed_blk = SealedBlock(
+        meta["kem_c1"], meta["kem_c2"], meta["nonce"], words, n_words
+    )
+    return ArchivedBlock(sealed_blk, meta["manifest"])
+
+
+def rebuild_csd_sharded(
+    get_stripe,
+    manifests_for,
+    items: List[RebuildItem],
+    *,
+    budget_bytes: int,
+    put_shard,
+    mesh: Optional[Mesh] = None,
+    axis: str = "data",
+    use_pallas: bool = True,
+) -> RebuildRound:
+    """One budget-bounded rebuild round onto the replacement CSD.
+
+    Processes ``items`` strictly in order (``plan_rebuild`` already sorted
+    by salience) and STOPS at the first item that would overflow
+    ``budget_bytes`` — the budget is a hard ceiling, never exceeded, so
+    replay traffic keeps its share of the interconnect; skipping ahead to
+    smaller items would subvert the salience priority, so the round ends
+    instead and ``remaining`` carries over.  ``get_stripe(stripe_id)``
+    reads the degraded stripe, ``manifests_for(stripe_id)`` its replicated
+    metadata records (``stripe_manifests`` format — the lost shard's KEM
+    polys/nonce/length), ``put_shard(stripe_id, shard, block)`` installs
+    the reconstructed :class:`ArchivedBlock` on the replacement.
+    """
+    rebuilt: List[RebuildItem] = []
+    spent = 0
+    items = list(items)
+    for k, it in enumerate(items):
+        if spent + it.body_bytes > budget_bytes:
+            return RebuildRound(rebuilt, spent, items[k:])
+        blk = _rebuild_shard_body(
+            get_stripe(it.stripe_id), it.shard, manifests_for(it.stripe_id),
+            mesh=mesh, axis=axis, use_pallas=use_pallas,
+        )
+        put_shard(it.stripe_id, it.shard, blk)
+        rebuilt.append(it)
+        spent += it.body_bytes
+    return RebuildRound(rebuilt, spent, [])

@@ -27,6 +27,14 @@ budgeted :class:`ReadPlan` over the catalog without decoding anything.
 (zero for the on-device coder), and the retrieval counters: cataloged GOPs/
 bytes and how many bytes the plans served actually touched vs the no-index
 full-restore baseline.
+
+The ingest tier also hosts the durability loop over everything it sealed
+(scrub -> rebuild -> retire; ``core/archival/scrub.py``): ``scrub_round``
+parity-verifies retained stripes on a byte budget and repairs located
+corruption, ``mark_csd_lost``/``rebuild_csd`` degrade and then reconstruct
+a dead CSD's shards onto a replacement (budget-bounded, salience-priority),
+and ``retire`` journals low-salience stripes out of existence before their
+key material is recycled.  All of it shows up in ``stats()``.
 """
 
 from __future__ import annotations
@@ -42,9 +50,16 @@ from repro.core.archival.pipeline import (
     ArchiveConfig,
     StripeArchive,
     encode_gop_payload,
+    stripe_manifests,
 )
+from repro.core.archival.scrub import StripeScrubber, retire_stripes
 from repro.core.csd.retrieval import ReadPlan, plan_retrieval
-from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripes
+from repro.distributed.archival import (
+    StripeCoalescer,
+    plan_rebuild,
+    rebuild_csd_sharded,
+    seal_coalesced_stripes,
+)
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
 
@@ -215,6 +230,22 @@ class ArchiveIngest:
         self._plans_served = 0
         self._planned_bytes = 0
         self._planned_full_bytes = 0
+        # durability tier: retained sealed stripes + replicated manifests
+        # (the in-memory stand-in for the CSD fleet's disks), the background
+        # scrubber, and the lost-CSD set the rebuild path drains
+        self._stripes: Dict[str, StripeArchive] = {}
+        self._manifests: Dict[str, List[Dict]] = {}
+        self._lost_csds: set = set()
+        self._scrubber = StripeScrubber(
+            self._stripes.__getitem__, self._stripes.__setitem__
+        )
+        self._scrub_rounds = 0
+        self._scrub_bytes = 0
+        self._scrub_findings = 0
+        self._scrub_repaired = 0
+        self._rebuilt_shards = 0
+        self._rebuilt_bytes = 0
+        self._retired = 0
 
     def _seal(self, ready) -> List[StripeArchive]:
         if not ready:
@@ -245,6 +276,8 @@ class ArchiveIngest:
                     self.catalog.feature_dim or self.cfg.feature_dim,
                 ),
             )
+            self._stripes[stripe_id] = stripe
+            self._manifests[stripe_id] = stripe_manifests(stripe)
         return list(stripes)
 
     def submit(
@@ -299,6 +332,76 @@ class ArchiveIngest:
         self._planned_full_bytes += plan.bytes_full_restore
         return plan
 
+    # ------------------------------------------------------ durability tier
+    def scrub_round(self, budget_bytes: int):
+        """One byte-budgeted background scrub pass over the retained
+        stripes (parity syndromes through the fused unseal — zero keys
+        move; see ``core/archival/scrub``).  Corrupt shards located by the
+        P/Q syndrome are repaired in place.  Returns the ``ScrubRound``."""
+        rnd = self._scrubber.scrub_round(
+            sorted(self._stripes), budget_bytes
+        )
+        self._scrub_rounds += 1
+        self._scrub_bytes += rnd.bytes_scrubbed
+        self._scrub_findings += len(rnd.findings)
+        self._scrub_repaired += sum(f.repaired for f in rnd.findings)
+        return rnd
+
+    def mark_csd_lost(self, csd: int) -> int:
+        """A CSD died (StragglerMonitor verdict): its shard of every
+        retained stripe is gone until ``rebuild_csd`` restores it onto a
+        replacement.  Returns how many stripe shards went degraded."""
+        self._lost_csds.add(int(csd))
+        n = 0
+        for sid, stripe in self._stripes.items():
+            if csd < len(stripe.blocks) and stripe.blocks[csd] is not None:
+                blocks = list(stripe.blocks)
+                blocks[csd] = None
+                self._stripes[sid] = stripe._replace(blocks=blocks)
+                n += 1
+        return n
+
+    def rebuild_csd(self, csd: int, budget_bytes: int, centroids=None):
+        """One budget-bounded rebuild round for a lost CSD: reconstruct its
+        shards onto the replacement via the sharded parity pass, most-
+        salient stripes first.  Call repeatedly until ``remaining`` is
+        empty — the CSD leaves the lost set only then."""
+        items = [
+            it for it in plan_rebuild(self.catalog, csd, centroids)
+            if it.stripe_id in self._stripes
+            and self._stripes[it.stripe_id].blocks[it.shard] is None
+        ]
+
+        def put_shard(sid, shard, blk):
+            stripe = self._stripes[sid]
+            blocks = list(stripe.blocks)
+            blocks[shard] = blk
+            self._stripes[sid] = stripe._replace(blocks=blocks)
+
+        rnd = rebuild_csd_sharded(
+            self._stripes.__getitem__, self._manifests.__getitem__, items,
+            budget_bytes=budget_bytes, put_shard=put_shard,
+            mesh=self.mesh, axis=self.axis,
+        )
+        self._rebuilt_shards += len(rnd.rebuilt)
+        self._rebuilt_bytes += rnd.bytes_rebuilt
+        if not rnd.remaining:
+            self._lost_csds.discard(int(csd))
+        return rnd
+
+    def retire(self, stripe_ids) -> int:
+        """Retire stripes (lifecycle tier): journal the retirement, compact
+        the catalog's journal, then drop bodies + key material — strictly
+        in that order (see ``scrub.retire_stripes``).  Returns #retired."""
+        report = retire_stripes(self.catalog, list(stripe_ids))
+        for sid in report.keys_recyclable:
+            # bodies (and the KEM material inside them) only after the
+            # retirement is journaled
+            self._stripes.pop(sid, None)
+            self._manifests.pop(sid, None)
+        self._retired += len(report.retired)
+        return len(report.retired)
+
     def stats(self) -> Dict[str, float]:
         s = self.coalescer.stats()
         s["entropy_ratio"] = (
@@ -321,4 +424,14 @@ class ArchiveIngest:
             if self._planned_full_bytes
             else float("nan")
         )
+        # durability tier: is the archive being continuously verified?
+        s["stripes_retained"] = len(self._stripes)
+        s["lost_csds"] = len(self._lost_csds)
+        s["scrub_rounds"] = self._scrub_rounds
+        s["scrub_bytes"] = self._scrub_bytes
+        s["scrub_findings"] = self._scrub_findings
+        s["scrub_repaired"] = self._scrub_repaired
+        s["rebuilt_shards"] = self._rebuilt_shards
+        s["rebuilt_bytes"] = self._rebuilt_bytes
+        s["stripes_retired"] = self._retired
         return s

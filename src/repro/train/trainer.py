@@ -21,7 +21,15 @@ Per step (Fig. 1's dual-stream dataflow, now closed into a cycle):
   6. heartbeat the straggler monitor; rebalance placement when flagged and
      remember dead shards so the next replay plans degraded reads;
   7. periodic checkpoint (pending stripes drain first; exemplar centroids
-     ride in the checkpoint meta so novelty scoring survives a restart).
+     ride in the checkpoint meta so novelty scoring survives a restart),
+     then the stripe lifecycle tier retires archives past their TTL.
+
+Durability interleave: every ``scrub_every`` steps a byte-budgeted
+background scrub round (``core/archival/scrub.py``) re-reads journaled
+stripes, parity-verifies them through the fused unseal (zero key material
+moves), locates corrupt shards by P/Q syndrome and re-commits repaired
+bodies — so silent corruption is found and fixed while training continues,
+not discovered by a failed replay read months later.
 
 Everything is pure JAX + the core modules; the same loop drives the LM path
 through ``lm_train_step`` (distributed/steps.py) with codec-based gradient
@@ -41,6 +49,12 @@ import numpy as np
 
 from repro.core.archival.catalog import StripeCatalog, gop_descriptors
 from repro.core.archival.exemplar import select_exemplars
+from repro.core.archival.scrub import (
+    ScrubRound,
+    StripeScrubber,
+    plan_retirement,
+    retire_stripes,
+)
 from repro.core.archival.pipeline import (
     ArchiveConfig,
     ArchivedBlock,
@@ -90,6 +104,17 @@ class TrainerConfig(NamedTuple):
     replay_every: int = 2
     replay_k: int = 2
     replay_budget_bytes: int = 1 << 20
+    # background scrub: every N steps parity-verify journaled stripes on a
+    # byte budget, repairing located corruption in place (0 = off).  Scrub
+    # rounds interleave with replay — both are budgeted so neither starves
+    # the other
+    scrub_every: int = 0
+    scrub_budget_bytes: int = 1 << 20
+    # stripe lifecycle: at checkpoint time retire stripes whose every GOP
+    # was sealed >= ttl steps ago (0 = off) and whose novelty vs the
+    # current centroids is at most retire_max_novelty (None = age alone)
+    retire_ttl_steps: int = 0
+    retire_max_novelty: Optional[float] = None
 
 
 class StepReport(NamedTuple):
@@ -106,6 +131,11 @@ class StepReport(NamedTuple):
     replay_read_bytes: int = 0  # sealed bytes the retrieval plan touched
     replay_full_bytes: int = 0  # no-index baseline (whole catalog restore)
     replay_degraded: int = 0  # replayed GOPs that needed a parity rebuild
+    scrub_stripes: int = 0  # stripes parity-verified this step
+    scrub_bytes: int = 0  # sealed bytes the scrub pass recomputed over
+    scrub_findings: int = 0  # corruptions detected this step
+    scrub_repaired: int = 0  # ... of which repaired in place + re-verified
+    retired_stripes: int = 0  # stripes journaled as retired this step
 
 
 class SalientTrainer:
@@ -161,6 +191,12 @@ class SalientTrainer:
             ),
             default=0,
         )
+        # background scrubber over the journaled archive; the cursor lives
+        # on the scrubber so successive rounds walk the whole archive even
+        # when each round's budget covers a fraction of it
+        self._scrub_recs: Dict[str, Dict] = {}
+        self._scrubber = StripeScrubber(self._scrub_get, self._scrub_put)
+        self._last_retired = 0
         self.step = 0
         self.known_centroids = None
         self._maybe_restore()
@@ -194,6 +230,7 @@ class SalientTrainer:
     def checkpoint(self):
         # drain pending ragged stripes first so a restart loses no GOP
         self._seal_and_commit(self.coalescer.flush())
+        self._last_retired = self._retire_expired()
         extra = {}
         if self.known_centroids is not None:
             extra["centroids"] = np.asarray(
@@ -279,6 +316,7 @@ class SalientTrainer:
                 rec_name,
                 stripe,
                 gop_descriptors(cs.gops, self.catalog.feature_dim),
+                sealed_step=self.step,
             )
             self._cache_stripe(rec_name, stripe)
             n_gops += len(stripe.blocks)
@@ -350,6 +388,88 @@ class SalientTrainer:
             self._cache_stripe(rec_name, stripe)
         return stripe
 
+    # --------------------------------------------------- scrub + lifecycle
+    def _scrub_get(self, rec_name: str) -> StripeArchive:
+        # journal truth, NOT the hot cache: disk corruption only shows up
+        # when the bytes are re-read, and the scrub recs map is built with
+        # verify_crc=False so known-corrupt bodies still load for repair
+        return self._load_stripe(rec_name, self._scrub_recs)
+
+    def _scrub_put(self, rec_name: str, stripe: StripeArchive) -> None:
+        """Write a scrub-repaired stripe back: re-commit the body and
+        parity records (the journal's newest record for a name wins on
+        load, and the fresh crc32 re-arms silent-corruption detection)."""
+        body = b"".join(
+            np.asarray(b.sealed.body).astype("<u4").tobytes()
+            for b in stripe.blocks
+        )
+        old = self._scrub_recs[rec_name + ".bin"]
+        self.journal.commit(
+            rec_name + ".bin", body,
+            dict(old["meta"], scrub_repaired_step=self.step),
+        )
+        if stripe.parity is not None:
+            p_u8 = np.asarray(stripe.parity["p"])
+            q_u8 = stripe.parity.get("q")
+            self.journal.commit(
+                rec_name + ".parity.bin",
+                p_u8.tobytes()
+                + (np.asarray(q_u8).tobytes() if q_u8 is not None else b""),
+                {
+                    "step": self.step,
+                    "pad_to": int(stripe.parity["pad_to"]),
+                    "p_len": int(p_u8.size),
+                    "has_q": q_u8 is not None,
+                },
+            )
+        self._scrub_recs = {
+            r["name"]: r for r in self.journal.replay(verify_crc=False)
+        }
+        self._stripes.pop(rec_name, None)  # drop any stale cached copy
+
+    def _scrub_round(self) -> ScrubRound:
+        """One byte-budgeted background scrub pass over the journaled
+        archive (see ``core/archival/scrub``): parity syndromes through the
+        fused unseal locate corrupt shards, repairs re-commit through the
+        journal.  Interleaves with replay — both byte-budgeted."""
+        self._scrub_recs = {
+            r["name"]: r for r in self.journal.replay(verify_crc=False)
+        }
+        ids = sorted(
+            m.group(0)[: -len(".bin")]
+            for m in (
+                re.match(r"archive_\d+\.bin$", n) for n in self._scrub_recs
+            )
+            if m
+        )
+        return self._scrubber.scrub_round(ids, self.cfg.scrub_budget_bytes)
+
+    def _retire_expired(self) -> int:
+        """Stripe lifecycle at checkpoint: retire stripes past the TTL (and
+        below the novelty bar) in the crash-safe order — retirement record
+        journaled first, then bodies/manifests/parity compact out of the
+        journal, and only then is the key material gone.  Returns #retired."""
+        if not self.cfg.retire_ttl_steps:
+            return 0
+        ids = plan_retirement(
+            self.catalog,
+            self.known_centroids,
+            now_step=self.step,
+            ttl_steps=self.cfg.retire_ttl_steps,
+            max_novelty=self.cfg.retire_max_novelty,
+        )
+        if not ids:
+            return 0
+        report = retire_stripes(
+            self.catalog, ids,
+            records_for=lambda sid: [
+                sid + ".bin", sid + ".manifest.json", sid + ".parity.bin",
+            ],
+        )
+        for sid in report.retired:
+            self._stripes.pop(sid, None)
+        return len(report.retired)
+
     def _replay_from_archive(self) -> Tuple[List[jax.Array], Optional[ReadPlan]]:
         """Query the catalog for the most-novel archived GOPs and restore
         ONLY the shard subsets the plan names (degraded parity reads for
@@ -374,7 +494,13 @@ class SalientTrainer:
             recs = {r["name"]: r for r in self.journal.replay()}
         for rec_name in sorted(plan.shards_by_stripe):
             shard_ids = plan.shards_by_stripe[rec_name]
-            stripe = self._get_stripe(rec_name, recs)
+            try:
+                stripe = self._get_stripe(rec_name, recs)
+            except KeyError:
+                # the stripe's journal record didn't survive replay (torn
+                # mid-seal commit, or crc-failed awaiting scrub repair):
+                # replay makes progress with what IS readable
+                continue
             manifests = stripe_manifests(stripe)
             dead = [
                 i for i in self._dead_shards if 0 <= i < len(stripe.blocks)
@@ -439,6 +565,12 @@ class SalientTrainer:
         ):
             replay_clips, plan = self._replay_from_archive()
 
+        # 3b. background scrub round (interleaves with replay; both are
+        # byte-budgeted so recovery traffic never starves training reads)
+        scrub = None
+        if cfg.scrub_every and self.step % cfg.scrub_every == cfg.scrub_every - 1:
+            scrub = self._scrub_round()
+
         # 4. codec training on the novel clips + replayed exemplars (Alg. 2)
         batch = [clips[self.streams[i].stream_id] for i in train_ids]
         want_shape = batch[0].shape if batch else None
@@ -493,7 +625,8 @@ class SalientTrainer:
                 )
                 rebalanced = True
 
-        # 7. checkpoint
+        # 7. checkpoint (drains stripes, then retires expired ones)
+        self._last_retired = 0
         self.step += 1
         if self.step % cfg.checkpoint_every == 0:
             self.checkpoint()
@@ -514,4 +647,11 @@ class SalientTrainer:
             replay_degraded=(
                 sum(1 for r in plan.reads if r.degraded) if plan else 0
             ),
+            scrub_stripes=scrub.stripes_checked if scrub else 0,
+            scrub_bytes=scrub.bytes_scrubbed if scrub else 0,
+            scrub_findings=len(scrub.findings) if scrub else 0,
+            scrub_repaired=(
+                sum(f.repaired for f in scrub.findings) if scrub else 0
+            ),
+            retired_stripes=self._last_retired,
         )

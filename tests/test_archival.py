@@ -340,3 +340,73 @@ def test_journal_commit_replay_and_torn_write(tmp_path):
     recs = j.replay()
     assert [r["name"] for r in recs] == ["a.bin", "b.bin"]
     assert j.read("a.bin") == b"hello"
+
+
+def test_recover_stripe_raid5_double_loss_raises():
+    """RAID-5 covers exactly one erasure: asking for two must fail loudly
+    (named stripe in the message) instead of returning garbage bytes."""
+    cfg = ArchiveConfig(codec=CFG, parity="raid5")
+    codec_params = init_codec(jax.random.PRNGKey(0), CFG)
+    pub, _ = rlwe.keygen(jax.random.PRNGKey(1))
+    frames = [_clip(jax.random.PRNGKey(50 + i)) for i in range(3)]
+    stripe, _ = archive_stripe(
+        codec_params, pub, frames, jax.random.PRNGKey(9), cfg
+    )
+    manifests = stripe_manifests(stripe)
+    lens = [int(b.sealed.body.shape[0]) for b in stripe.blocks]
+    holes = [None if i in (0, 2) else stripe.blocks[i] for i in range(3)]
+    with pytest.raises(ValueError, match=r"RAID-5.*\[0, 2\].*unrecoverable"):
+        recover_stripe(holes, stripe.parity, [0, 2], manifests, lens,
+                       stripe_id="s_test")
+    # the stripe id names the failing stripe in the message
+    with pytest.raises(ValueError, match="s_test"):
+        recover_stripe(holes, stripe.parity, [0, 2], manifests, lens,
+                       stripe_id="s_test")
+    # a single erasure still recovers fine on the same stripe
+    one_hole = [None if i == 0 else stripe.blocks[i] for i in range(3)]
+    rec = recover_stripe(one_hole, stripe.parity, [0], manifests, lens)
+    np.testing.assert_array_equal(
+        np.asarray(rec[0].sealed.body), np.asarray(stripe.blocks[0].sealed.body)
+    )
+
+
+def test_straggler_monitor_warmup_grace_and_miss_threshold():
+    """Cold start: shards that have not heartbeated YET are not dead (no
+    degraded-read planning at step 0); past the grace they are.  A healthy
+    shard is only declared dead after miss_threshold consecutive misses,
+    so a single dropout or a short rolling restart is a non-event."""
+    mon = StragglerMonitor(3, warmup_rounds=2, miss_threshold=3)
+    s = mon.update([1.0, 1.0, None])  # round 1: inside warm-up grace
+    assert s.dead == [] and s.speed[2] == 1.0
+    s = mon.update([1.0, 1.0, None])  # round 2: grace expired, never heard
+    assert s.dead == [2] and s.speed[2] == 0.0
+    # once it has history, misses are counted against the threshold
+    mon2 = StragglerMonitor(2, miss_threshold=3)
+    mon2.update([1.0, 1.0])
+    assert mon2.update([1.0, None]).dead == []       # dropout: 1 miss
+    assert mon2.update([1.0, None]).dead == []       # rolling restart: 2
+    assert mon2.update([1.0, None]).dead == [1]      # permanent: 3 misses
+    # heartbeat resumes -> miss counter resets, shard rejoins
+    assert mon2.update([1.0, 1.0]).dead == []
+    assert mon2.update([1.0, None]).dead == []
+
+
+def test_journal_crc_roundtrip_and_silent_flip(tmp_path):
+    import os
+    import zlib
+
+    j = Journal(str(tmp_path))
+    j.commit("x.bin", b"payload-bytes" * 11)
+    rec = j.replay()[0]
+    assert rec["crc32"] == (zlib.crc32(b"payload-bytes" * 11) & 0xFFFFFFFF)
+    # same-length silent flip: replay refuses, read(crc32=...) raises
+    with open(os.path.join(str(tmp_path), "x.bin"), "r+b") as f:
+        f.seek(3)
+        b0 = f.read(1)[0]
+        f.seek(3)
+        f.write(bytes([b0 ^ 1]))
+    assert j.replay() == []
+    flagged = j.replay(verify_crc=False)
+    assert flagged[0]["crc_ok"] is False
+    with pytest.raises(ValueError, match="crc32"):
+        j.read("x.bin", crc32=rec["crc32"])

@@ -1,0 +1,861 @@
+"""Chaos-hardened durability tier tests.
+
+Drives the fault-injected CSD fleet (``core/csd/chaos.py``) through the
+real storage seams — journal crc32, StragglerMonitor heartbeats, the
+background parity scrubber, budget-bounded sharded rebuild, and the
+stripe lifecycle — and asserts the acceptance invariant end to end:
+every sealed stripe finishes scrub-verified bit-exact, rebuilt
+bit-exact, or journaled as retired; zero corruptions go undetected; and
+rebuild rounds never exceed their byte budget while replay progresses.
+
+Everything is seed-deterministic: the same ``ChaosConfig.seed`` replays
+the same chaos (schedule, findings, rebuilt bytes) bit-for-bit.
+"""
+
+import json
+import os
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.archival.catalog import (
+    CATALOG_PREFIX,
+    RETIRE_PREFIX,
+    StripeCatalog,
+)
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    StripeArchive,
+    recompute_stripe_parity,
+    seal_payload_stripe,
+    stripe_manifests,
+)
+from repro.core.archival.scrub import (
+    StripeScrubber,
+    plan_retirement,
+    retire_stripes,
+)
+from repro.core.crypto import rlwe
+from repro.core.csd.chaos import (
+    FAULT_KINDS,
+    ChaosConfig,
+    ChaosFleet,
+    FaultEvent,
+    flip_bit,
+    torn_commit,
+)
+from repro.core.csd.failure import Journal, StragglerMonitor
+from repro.distributed.archival import plan_rebuild, rebuild_csd_sharded
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ helpers
+def _payload_stripe(seed, lens, cfg=None):
+    """Seal synthetic int8 payloads as one stripe (no neural codec)."""
+    rng = np.random.default_rng(seed)
+    cfg = cfg or ArchiveConfig()
+    pub, sec = rlwe.keygen(jax.random.PRNGKey(seed + 1))
+    flats = [
+        jnp.asarray(
+            np.clip(np.round(rng.normal(0, 2.0, n)), -128, 127), jnp.int8
+        )
+        for n in lens
+    ]
+    mans = [{"n_i8": int(f.shape[0]), "spec": []} for f in flats]
+    stripe = seal_payload_stripe(
+        pub, flats, mans, jax.random.PRNGKey(seed + 2), cfg
+    )
+    return stripe, sec, cfg
+
+
+def _bodies(stripe):
+    """Per-shard sealed bodies as numpy uint32 (bit-exactness baseline)."""
+    return [
+        None if b is None else np.asarray(b.sealed.body, np.uint32).copy()
+        for b in stripe.blocks
+    ]
+
+
+def _flip_body_bit(stripe, shard, bit):
+    """Flip one bit in shard ``shard``'s sealed body (silent corruption)."""
+    body = np.asarray(stripe.blocks[shard].sealed.body, np.uint32).copy()
+    u8 = body.view(np.uint8).copy()
+    bit = bit % (u8.size * 8)
+    u8[bit // 8] ^= 1 << (bit % 8)
+    blocks = list(stripe.blocks)
+    blocks[shard] = blocks[shard]._replace(
+        sealed=blocks[shard].sealed._replace(
+            body=jnp.asarray(u8.view(np.uint32))
+        )
+    )
+    return stripe._replace(blocks=blocks)
+
+
+class _Store:
+    """Dict-backed stripe store with the scrubber's get/put interface."""
+
+    def __init__(self, stripes):
+        self.stripes = dict(stripes)
+        self.puts = []
+
+    def get(self, sid):
+        return self.stripes[sid]
+
+    def put(self, sid, stripe):
+        self.stripes[sid] = stripe
+        self.puts.append(sid)
+
+
+def _descriptors(n, novelty=None):
+    return [
+        {
+            "stream_id": s,
+            "feature": np.full(4, float(s), np.float32),
+            "novelty": float(novelty[s]) if novelty is not None else 0.0,
+        }
+        for s in range(n)
+    ]
+
+
+# ------------------------------------------------------------- chaos fleet
+def test_chaos_schedule_deterministic_same_seed():
+    cfg = ChaosConfig(n_csds=64, n_rounds=16, seed=7,
+                      p_bitflip=0.02, p_loss=0.01, p_restart=0.02,
+                      p_dropout=0.05, p_torn=0.01)
+    a, b = ChaosFleet(cfg), ChaosFleet(cfg)
+    assert a.schedule == b.schedule
+    assert np.array_equal(a.step_time_table, b.step_time_table)
+    # and a different seed produces a different schedule
+    c = ChaosFleet(cfg._replace(seed=8))
+    assert c.schedule != a.schedule
+    # determinism survives interleaving: tick() order is fixed up front
+    ra = [a.tick() for _ in range(cfg.n_rounds)]
+    rb = [b.tick() for _ in range(cfg.n_rounds)]
+    assert [r.events for r in ra] == [r.events for r in rb]
+    assert [r.down for r in ra] == [r.down for r in rb]
+
+
+def test_chaos_ensure_kinds_backfills_absent_classes():
+    # zero probabilities: every event comes from the deterministic backfill
+    cfg = ChaosConfig(
+        n_csds=16, n_rounds=8, seed=3,
+        p_bitflip=0.0, p_loss=0.0, p_restart=0.0, p_dropout=0.0, p_torn=0.0,
+        ensure_kinds=FAULT_KINDS,
+    )
+    fleet = ChaosFleet(cfg)
+    for kind in FAULT_KINDS:
+        evs = fleet.events_of(kind)
+        assert len(evs) == 1, f"{kind} not backfilled"
+        assert 0 <= evs[0].round < cfg.n_rounds
+        assert 0 <= evs[0].csd < cfg.n_csds
+    assert ChaosFleet(cfg).schedule == fleet.schedule
+
+
+def test_chaos_tick_down_and_loss_semantics():
+    cfg = ChaosConfig(
+        n_csds=8, n_rounds=6, seed=0, restart_rounds=2,
+        p_bitflip=0.0, p_loss=0.0, p_restart=0.0, p_dropout=0.0, p_torn=0.0,
+    )
+    fleet = ChaosFleet(cfg)
+    fleet.schedule[0].append(FaultEvent(0, "loss", 1, 0))
+    fleet.schedule[1].append(FaultEvent(1, "restart", 2, 0))
+    fleet.schedule[1].append(FaultEvent(1, "dropout", 3, 0))
+    r0 = fleet.tick()
+    assert r0.down == [1] and r0.lost == [1]
+    assert r0.step_times[1] is None and r0.step_times[0] is not None
+    r1 = fleet.tick()
+    # loss persists; restart + dropout miss this round
+    assert r1.down == [1, 2, 3]
+    r2 = fleet.tick()
+    # dropout was one round; restart_rounds=2 keeps the restart down
+    assert r2.down == [1, 2]
+    r3 = fleet.tick()
+    assert r3.down == [1]  # restart back up; the lost CSD never returns
+    fleet.replace(1)
+    r4 = fleet.tick()
+    assert r4.down == [] and fleet.lost == []
+    fleet.tick()
+    with pytest.raises(StopIteration):
+        fleet.tick()
+
+
+def test_chaos_rolling_restart_not_declared_dead():
+    """The monitor's miss_threshold grace absorbs a rolling restart; a
+    permanent loss is still caught within a few rounds."""
+    cfg = ChaosConfig(
+        n_csds=4, n_rounds=10, seed=5, restart_rounds=2, jitter=0.0,
+        p_bitflip=0.0, p_loss=0.0, p_restart=0.0, p_dropout=0.0, p_torn=0.0,
+    )
+    fleet = ChaosFleet(cfg)
+    fleet.schedule[2].append(FaultEvent(2, "restart", 1, 0))
+    fleet.schedule[4].append(FaultEvent(4, "loss", 3, 0))
+    mon = StragglerMonitor(cfg.n_csds)
+    ever_dead_restart, loss_dead_round = False, None
+    for r in range(cfg.n_rounds):
+        status = mon.update(fleet.tick().step_times)
+        if 1 in status.dead:
+            ever_dead_restart = True
+        if 3 in status.dead and loss_dead_round is None:
+            loss_dead_round = r
+    assert not ever_dead_restart, "rolling restart was declared dead"
+    assert loss_dead_round is not None, "permanent loss never detected"
+    assert loss_dead_round <= 4 + mon.miss_threshold
+
+
+def test_flip_bit_deterministic_single_bit():
+    payload = bytes(range(256)) * 4
+    ev = FaultEvent(0, "bitflip", 0, 123457)
+    out = flip_bit(payload, ev)
+    assert out == flip_bit(payload, ev)
+    diff = [
+        (a ^ b) for a, b in zip(payload, out) if a != b
+    ]
+    assert len(diff) == 1 and bin(diff[0]).count("1") == 1
+    assert flip_bit(b"", ev) == b""
+
+
+# ------------------------------------------------------------ journal crc32
+def test_journal_crc_detects_silent_bitflip(tmp_path):
+    j = Journal(str(tmp_path))
+    j.commit("a.bin", b"A" * 64, {"k": 1})
+    j.commit("b.bin", b"B" * 64)
+    # silent corruption: same length, one bit flipped on disk
+    with open(os.path.join(j.root, "a.bin"), "r+b") as f:
+        f.seek(10)
+        byte = f.read(1)[0]
+        f.seek(10)
+        f.write(bytes([byte ^ 0x10]))
+    recs = j.replay()
+    assert [r["name"] for r in recs] == ["b.bin"]
+    # the scrubber's entry keeps the corrupt record, flagged
+    recs = j.replay(verify_crc=False)
+    assert [r["name"] for r in recs] == ["a.bin", "b.bin"]
+    assert recs[0]["crc_ok"] is False and "crc_ok" not in recs[1]
+    with pytest.raises(ValueError, match="crc32"):
+        j.read("a.bin", crc32=recs[0]["crc32"])
+    assert j.read("b.bin", crc32=recs[1]["crc32"]) == b"B" * 64
+
+
+def test_journal_pre_crc_records_still_accepted(tmp_path):
+    j = Journal(str(tmp_path))
+    with open(os.path.join(j.root, "old.bin"), "wb") as f:
+        f.write(b"legacy")
+    with open(j.path, "a") as f:
+        f.write(json.dumps(
+            {"name": "old.bin", "bytes": 6, "ts": 0, "meta": {}}
+        ) + "\n")
+    recs = j.replay()
+    assert [r["name"] for r in recs] == ["old.bin"]
+
+
+def test_torn_commit_discarded_by_replay(tmp_path):
+    j = Journal(str(tmp_path))
+    j.commit("good.bin", b"x" * 128)
+    payload = b"y" * 512
+    torn_commit(j, "torn.bin", payload, FaultEvent(0, "torn", 0, 77),
+                {"k": 2})
+    # the record claims the full size + correct crc, but the body is short
+    assert os.path.getsize(os.path.join(j.root, "torn.bin")) == 77 % 512
+    for verify in (True, False):
+        assert [r["name"] for r in j.replay(verify_crc=verify)] == [
+            "good.bin"
+        ]
+    # a later clean re-commit of the same name replays fine — the old torn
+    # record validates again too (body now matches its claimed size/crc),
+    # and last-wins name maps resolve to the fresh record
+    j.commit("torn.bin", payload)
+    recs = {r["name"]: r for r in j.replay()}
+    assert set(recs) == {"good.bin", "torn.bin"}
+    assert j.read("torn.bin") == payload
+
+
+def test_journal_compact_preserves_crc_failed_records(tmp_path):
+    j = Journal(str(tmp_path))
+    j.commit("keep.bin", b"k" * 32)
+    j.commit("drop.bin", b"d" * 32)
+    j.commit("hurt.bin", b"h" * 32)
+    with open(os.path.join(j.root, "hurt.bin"), "r+b") as f:
+        f.write(b"H")  # crc now fails (length unchanged)
+    dropped = j.compact(["drop.bin"])
+    assert dropped == 1
+    assert not os.path.exists(os.path.join(j.root, "drop.bin"))
+    assert os.path.exists(os.path.join(j.root, "hurt.bin"))
+    recs = j.replay(verify_crc=False)
+    assert [r["name"] for r in recs] == ["keep.bin", "hurt.bin"]
+    assert recs[1]["crc_ok"] is False  # still awaiting scrub repair
+
+
+# ------------------------------------------------------------------- scrub
+def test_scrub_clean_stripe_yields_no_findings():
+    stripe, _, _ = _payload_stripe(0, [4096, 5000, 6100])
+    store = _Store({"s0": stripe})
+    sc = StripeScrubber(store.get, store.put)
+    assert sc.scrub_stripe("s0") == []
+    assert store.puts == []
+
+
+@pytest.mark.parametrize("shard", [0, 1, 2, 3])
+def test_scrub_locates_and_repairs_any_shard(shard):
+    stripe, _, _ = _payload_stripe(10 + shard, [3000, 4096, 2500, 3500])
+    want = _bodies(stripe)
+    store = _Store({"s0": _flip_body_bit(stripe, shard, 997 + 13 * shard)})
+    sc = StripeScrubber(store.get, store.put)
+    findings = sc.scrub_stripe("s0")
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.kind == "shard" and f.shard == shard and f.repaired
+    got = _bodies(store.stripes["s0"])
+    for w, g in zip(want, got):
+        assert np.array_equal(w, g)  # bit-exact repair
+    assert sc.scrub_stripe("s0") == []  # clean after repair
+
+
+def test_scrub_repairs_rotted_parity_strips():
+    for which in ("p", "q"):
+        stripe, _, _ = _payload_stripe(20, [4096, 3000, 5000])
+        parity = dict(stripe.parity)
+        strip = np.asarray(parity[which], np.uint8).copy()
+        strip[7] ^= 0x40
+        parity[which] = strip
+        store = _Store({"s0": stripe._replace(parity=parity)})
+        sc = StripeScrubber(store.get, store.put)
+        findings = sc.scrub_stripe("s0")
+        assert [f.kind for f in findings] == [which]
+        assert findings[0].repaired
+        got = recompute_stripe_parity(store.stripes["s0"])
+        fixed = store.stripes["s0"].parity
+        assert np.array_equal(got["p"], np.asarray(fixed["p"]))
+        assert np.array_equal(got["q"], np.asarray(fixed["q"]))
+
+
+def test_scrub_multi_shard_corruption_unlocatable():
+    stripe, _, _ = _payload_stripe(30, [4096, 4096, 4096])
+    stripe = _flip_body_bit(stripe, 0, 11)
+    stripe = _flip_body_bit(stripe, 2, 5000)
+    store = _Store({"s0": stripe})
+    sc = StripeScrubber(store.get, store.put)
+    findings = sc.scrub_stripe("s0")
+    assert [f.kind for f in findings] == ["unlocatable"]
+    assert not findings[0].repaired and store.puts == []
+
+
+def test_scrub_raid5_detects_but_cannot_locate():
+    cfg = ArchiveConfig(parity="raid5")
+    stripe, _, _ = _payload_stripe(40, [3000, 3500], cfg)
+    store = _Store({"s0": _flip_body_bit(stripe, 1, 321)})
+    sc = StripeScrubber(store.get, store.put)
+    findings = sc.scrub_stripe("s0")
+    assert [f.kind for f in findings] == ["unlocatable"]
+    assert not findings[0].repaired
+    # clean RAID-5 stripe verifies clean
+    clean, _, _ = _payload_stripe(41, [3000, 3500], cfg)
+    store2 = _Store({"c": clean})
+    assert StripeScrubber(store2.get).scrub_stripe("c") == []
+
+
+def test_scrub_noparity_and_degraded_classified_not_raised():
+    cfg = ArchiveConfig(parity="none")
+    stripe, _, _ = _payload_stripe(50, [2048, 2048], cfg)
+    store = _Store({"s0": stripe})
+    sc = StripeScrubber(store.get, store.put)
+    assert [f.kind for f in sc.scrub_stripe("s0")] == ["noparity"]
+    # degraded stripe (shard out for rebuild): deferred, never a crash
+    full, _, _ = _payload_stripe(51, [2048, 2048, 2048])
+    blocks = list(full.blocks)
+    blocks[1] = None
+    store2 = _Store({"d": full._replace(blocks=blocks)})
+    sc2 = StripeScrubber(store2.get, store2.put)
+    findings = sc2.scrub_stripe("d")
+    assert [f.kind for f in findings] == ["degraded"]
+    assert not findings[0].repaired
+
+
+def test_scrub_without_put_is_detect_only():
+    stripe, _, _ = _payload_stripe(60, [4096, 3000, 5000])
+    corrupt = _flip_body_bit(stripe, 1, 200)
+    store = _Store({"s0": corrupt})
+    sc = StripeScrubber(store.get)  # no put_stripe
+    findings = sc.scrub_stripe("s0")
+    assert [(f.kind, f.shard, f.repaired) for f in findings] == [
+        ("shard", 1, False)
+    ]
+    assert np.array_equal(
+        _bodies(store.stripes["s0"])[1], _bodies(corrupt)[1]
+    )  # untouched
+
+
+def test_scrub_round_budget_minimum_progress_and_cursor():
+    stripes = {
+        f"s{i}": _payload_stripe(70 + i, [4096, 4096])[0] for i in range(4)
+    }
+    store = _Store(stripes)
+    sc = StripeScrubber(store.get, store.put)
+    ids = sorted(stripes)
+    # budget below one stripe: still scans exactly one (minimum progress)
+    r = sc.scrub_round(ids, budget_bytes=16)
+    assert r.stripes_checked == 1 and r.bytes_scrubbed > 16
+    # the persistent cursor covers the whole archive across rounds
+    seen = {ids[0]}
+    for _ in range(3):
+        rnd = sc.scrub_round(ids, budget_bytes=16)
+        assert rnd.stripes_checked == 1
+        seen.add(ids[(sc._next - 1) % len(ids)])
+    assert seen == set(ids)
+    # a big budget covers everything in one round; what ships host-side is
+    # the P(+Q) strips, accounted separately from the scanned body bytes
+    big = sc.scrub_round(ids, budget_bytes=1 << 30)
+    assert big.stripes_checked == len(ids)
+    assert big.syndrome_bytes > 0 and big.bytes_scrubbed > 0
+
+
+# ----------------------------------------------------------------- rebuild
+def _cataloged_stripes(n_stripes, lens, novelty_by_stripe, journal=None,
+                       cfg=None, seed0=100):
+    cat = StripeCatalog(journal)
+    stripes, manifests = {}, {}
+    for i in range(n_stripes):
+        sid = f"s{i:02d}"
+        stripe, _, _ = _payload_stripe(seed0 + i, lens, cfg)
+        stripes[sid] = stripe
+        manifests[sid] = stripe_manifests(stripe)
+        cat.add_stripe(
+            sid, stripe,
+            _descriptors(len(lens), novelty=[novelty_by_stripe[i]] * len(lens)),
+            sealed_step=i,
+        )
+    return cat, stripes, manifests
+
+
+def test_plan_rebuild_orders_by_salience():
+    cat, stripes, _ = _cataloged_stripes(3, [2048, 2048, 2048],
+                                         novelty_by_stripe=[0.1, 0.9, 0.5])
+    items = plan_rebuild(cat, dead_csd=1)
+    assert [it.stripe_id for it in items] == ["s01", "s02", "s00"]
+    assert all(it.shard == 1 for it in items)
+    assert all(it.body_bytes > 0 for it in items)
+
+
+def test_rebuild_single_loss_bit_exact():
+    cat, stripes, manifests = _cataloged_stripes(
+        2, [3000, 4096, 2500], novelty_by_stripe=[0.5, 0.9]
+    )
+    want = {sid: _bodies(s) for sid, s in stripes.items()}
+    for sid in stripes:  # CSD 2 dies: shard 2 of every stripe
+        blocks = list(stripes[sid].blocks)
+        blocks[2] = None
+        stripes[sid] = stripes[sid]._replace(blocks=blocks)
+    rebuilt = {}
+    rnd = rebuild_csd_sharded(
+        stripes.__getitem__, manifests.__getitem__,
+        plan_rebuild(cat, dead_csd=2),
+        budget_bytes=1 << 30,
+        put_shard=lambda sid, sh, blk: rebuilt.setdefault(sid, {}).update(
+            {sh: blk}
+        ),
+    )
+    assert not rnd.remaining and len(rnd.rebuilt) == 2
+    for sid in stripes:
+        got = np.asarray(rebuilt[sid][2].sealed.body, np.uint32)
+        assert np.array_equal(got, want[sid][2]), sid
+        man = manifests[sid][2]
+        blk = rebuilt[sid][2]
+        assert int(blk.sealed.n_valid_u32) == want[sid][2].size
+        assert np.array_equal(
+            np.asarray(blk.sealed.nonce), np.asarray(man["nonce"])
+        )
+
+
+def test_rebuild_double_loss_host_recover_path():
+    cat, stripes, manifests = _cataloged_stripes(
+        1, [3000, 4096, 2500, 3600], novelty_by_stripe=[0.5]
+    )
+    sid = "s00"
+    want = _bodies(stripes[sid])
+    blocks = list(stripes[sid].blocks)
+    blocks[0] = None  # another shard already missing...
+    blocks[3] = None  # ...when CSD 3's rebuild runs: RAID-6 double loss
+    stripes[sid] = stripes[sid]._replace(blocks=blocks)
+    out = {}
+    rnd = rebuild_csd_sharded(
+        stripes.__getitem__, manifests.__getitem__,
+        plan_rebuild(cat, dead_csd=3),
+        budget_bytes=1 << 30,
+        put_shard=lambda s, sh, blk: out.__setitem__((s, sh), blk),
+    )
+    assert len(rnd.rebuilt) == 1
+    got = np.asarray(out[(sid, 3)].sealed.body, np.uint32)
+    assert np.array_equal(got, want[3])
+
+
+def test_rebuild_budget_is_strict_and_preserves_priority():
+    cat, stripes, manifests = _cataloged_stripes(
+        3, [4096, 4096], novelty_by_stripe=[0.2, 0.9, 0.6]
+    )
+    for sid in stripes:
+        blocks = list(stripes[sid].blocks)
+        blocks[0] = None
+        stripes[sid] = stripes[sid]._replace(blocks=blocks)
+    items = plan_rebuild(cat, dead_csd=0)
+    assert [it.stripe_id for it in items] == ["s01", "s02", "s00"]
+    # budget fits any ONE item but never two (rANS bodies vary slightly)
+    one = max(it.body_bytes for it in items)
+    assert one < 2 * min(it.body_bytes for it in items)
+    out = {}
+    # budget fits exactly one: the round must NOT skip ahead to a smaller
+    # item (there are none smaller here, but the order assert below would
+    # catch reordering) and must never exceed the ceiling
+    rnd = rebuild_csd_sharded(
+        stripes.__getitem__, manifests.__getitem__, items,
+        budget_bytes=one, put_shard=lambda s, sh, b: out.__setitem__(s, b),
+    )
+    assert [it.stripe_id for it in rnd.rebuilt] == ["s01"]
+    assert rnd.bytes_rebuilt <= one
+    assert [it.stripe_id for it in rnd.remaining] == ["s02", "s00"]
+    # drain over successive rounds, ceiling always respected
+    remaining = rnd.remaining
+    while remaining:
+        rnd = rebuild_csd_sharded(
+            stripes.__getitem__, manifests.__getitem__, remaining,
+            budget_bytes=one,
+            put_shard=lambda s, sh, b: out.__setitem__(s, b),
+        )
+        assert rnd.bytes_rebuilt <= one
+        assert rnd.rebuilt  # minimum progress is the planner's job; budget
+        remaining = rnd.remaining
+    assert set(out) == set(stripes)
+
+
+# --------------------------------------------------------- stripe lifecycle
+def test_plan_retirement_ttl_and_novelty_gates(tmp_path):
+    cat = StripeCatalog(Journal(str(tmp_path)))
+    specs = [
+        ("old_dull", 0, 0.1),     # aged out, low salience -> retire
+        ("old_hot", 0, 0.9),      # aged out but still novel -> keep
+        ("young", 90, 0.05),      # inside TTL -> keep
+        ("unstamped", -1, 0.0),   # no seal stamp -> never expires
+    ]
+    for i, (sid, step, nov) in enumerate(specs):
+        stripe, _, _ = _payload_stripe(400 + i, [1024, 1024])
+        cat.add_stripe(sid, stripe, _descriptors(2, [nov, nov]),
+                       sealed_step=step)
+    ids = plan_retirement(cat, now_step=100, ttl_steps=50, max_novelty=0.5)
+    assert ids == ["old_dull"]
+    # no novelty bar: age alone decides, least-salient first
+    ids = plan_retirement(cat, now_step=100, ttl_steps=50)
+    assert ids == ["old_dull", "old_hot"]
+    assert plan_retirement(cat, now_step=100, ttl_steps=50, limit=1) == [
+        "old_dull"
+    ]
+    assert plan_retirement(cat, now_step=10, ttl_steps=50) == []
+
+
+def test_retire_stripes_crash_safe_order(tmp_path):
+    j = Journal(str(tmp_path))
+    cat = StripeCatalog(j)
+    stripes = {}
+    for i in range(2):
+        sid = f"s{i}"
+        stripe, _, _ = _payload_stripe(200 + i, [2048, 2048])
+        stripes[sid] = stripe
+        cat.add_stripe(sid, stripe, _descriptors(2, [0.1, 0.1]),
+                       sealed_step=i)
+        j.commit(f"{sid}.bin", b"body" * 64, {"stripe_id": sid})
+    report = retire_stripes(
+        cat, ["s0"], journal=j, records_for=lambda sid: [f"{sid}.bin"]
+    )
+    assert report.retired == ["s0"] and report.keys_recyclable == ["s0"]
+    assert report.dropped_entries == 2
+    # catalog record AND body dropped; retirement record survives compaction
+    names = [r["name"] for r in j.replay()]
+    assert f"{CATALOG_PREFIX}s0.json" not in names
+    assert "s0.bin" not in names
+    assert f"{RETIRE_PREFIX}s0.json" in names
+    assert not os.path.exists(os.path.join(j.root, "s0.bin"))
+    assert os.path.exists(os.path.join(j.root, "s1.bin"))
+    # restart: the retired stripe never comes back
+    cat2 = StripeCatalog(Journal(str(tmp_path)))
+    cat2.load()
+    assert {e.stripe_id for e in cat2.entries} == {"s1"}
+    assert cat2.retired == {"s0"}
+
+
+def test_retirement_record_wins_over_catalog_record(tmp_path):
+    """Crash between journaling the retirement and compacting: the catalog
+    record (and body) are still on disk, but replay must honor the
+    retirement — it is the durable fact."""
+    j = Journal(str(tmp_path))
+    cat = StripeCatalog(j)
+    stripe, _, _ = _payload_stripe(300, [2048, 2048])
+    cat.add_stripe("s0", stripe, _descriptors(2, [0.1, 0.1]), sealed_step=0)
+    cat.retire_stripe("s0")  # journaled; "crash" before any compaction
+    names = [r["name"] for r in j.replay()]
+    assert f"{CATALOG_PREFIX}s0.json" in names  # still present...
+    assert f"{RETIRE_PREFIX}s0.json" in names
+    cat2 = StripeCatalog(Journal(str(tmp_path)))
+    cat2.load()
+    assert cat2.entries == [] and cat2.retired == {"s0"}  # ...but ignored
+    # re-cataloging a retired id is refused in-memory too
+    assert "s0" not in cat2._stripe_ids
+
+
+# ----------------------------------------------------- end-to-end chaos run
+def _chaos_e2e(seed):
+    """Full durability loop under a fault-injected fleet.
+
+    Builds a cataloged archive of payload stripes, then drives
+    ``ChaosConfig.n_rounds`` of chaos with every fault class guaranteed
+    present.  Each round: faults apply, heartbeats feed the monitor, a
+    byte-budgeted scrub round runs, lost CSDs rebuild under a strict
+    budget, and replay (a catalog top-k query) must make progress.
+    Returns a summary for determinism comparison.
+    """
+    n_shards, n_stripes = 4, 4
+    lens = [3000, 4096, 2500, 3600]
+    cat, stripes, manifests = _cataloged_stripes(
+        n_stripes, lens, novelty_by_stripe=[0.2, 0.9, 0.5, 0.7],
+        seed0=1000 + seed,
+    )
+    pristine = {sid: _bodies(s) for sid, s in stripes.items()}
+    store = _Store(stripes)
+    scrubber = StripeScrubber(store.get, store.put)
+    fleet = ChaosFleet(ChaosConfig(
+        n_csds=n_shards, n_rounds=12, seed=seed,
+        p_bitflip=0.05, p_loss=0.0, p_restart=0.0, p_dropout=0.05,
+        p_torn=0.0, restart_rounds=2,
+        ensure_kinds=FAULT_KINDS,
+    ))
+    mon = StragglerMonitor(n_shards)
+    injected = 0        # corruptions injected into retained bodies
+    escalated = 0       # unlocatable findings restored from the replica tier
+    dirty = set()       # stripes corrupted since their last verification
+    rebuild_budget = max(it.body_bytes for it in plan_rebuild(cat, 0))
+    scrub_budget = 1 << 30  # every round verifies the whole (tiny) archive
+    findings_log, rebuilt_bytes_log, replay_log = [], [], []
+    lost_csds = set()
+    torn_discarded = 0
+
+    def _replica_restore(sid):
+        """The documented escalation for unlocatable corruption: restore
+        the stripe from a replica (here: the pristine copy)."""
+        orig, _, _ = _payload_stripe(
+            1000 + seed + int(sid[1:]), lens
+        )
+        store.stripes[sid] = orig
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        journal = Journal(td)
+        journal.commit("seed.bin", b"s" * 64)
+        for rnd_i in range(fleet.cfg.n_rounds):
+            fr = fleet.tick()
+            mon.update(fr.step_times)
+            for ev in fr.events:
+                csd = ev.csd % n_shards
+                if ev.kind == "bitflip":
+                    sid = sorted(store.stripes)[ev.param % len(store.stripes)]
+                    stripe = store.stripes[sid]
+                    # survivors feeding a rebuild must be verified first, so
+                    # the harness (like a real scrubber-gated rebuild) only
+                    # corrupts whole stripes — degraded ones are mid-rebuild
+                    if all(b is not None for b in stripe.blocks):
+                        store.stripes[sid] = _flip_body_bit(
+                            stripe, csd, ev.param
+                        )
+                        injected += 1
+                        dirty.add(sid)
+                elif ev.kind == "loss":
+                    if csd not in lost_csds:
+                        lost_csds.add(csd)
+                        for sid, stripe in store.stripes.items():
+                            blocks = list(stripe.blocks)
+                            blocks[csd] = None
+                            store.stripes[sid] = stripe._replace(
+                                blocks=blocks
+                            )
+                elif ev.kind == "torn":
+                    torn_commit(journal, f"torn_{rnd_i}.bin", b"t" * 256, ev)
+                    torn_discarded += 1
+            # scrub: locate + repair silent flips; degraded stripes defer.
+            # The acceptance invariant checked EVERY round: anything
+            # corrupted since the last pass must surface as a finding.
+            sr = scrubber.scrub_round(sorted(store.stripes), scrub_budget)
+            found_sids = {f.stripe_id for f in sr.findings}
+            assert dirty <= found_sids, (
+                f"round {rnd_i}: undetected corruption in "
+                f"{dirty - found_sids}"
+            )
+            for f in sr.findings:
+                findings_log.append((rnd_i,) + tuple(f))
+                if f.kind == "unlocatable" or (
+                    f.kind == "degraded" and f.stripe_id in dirty
+                ):
+                    _replica_restore(f.stripe_id)
+                    escalated += 1
+            dirty.clear()
+            # rebuild lost CSDs under a strict per-round budget
+            for csd in sorted(lost_csds):
+                items = [
+                    it for it in plan_rebuild(cat, csd)
+                    if it.stripe_id in store.stripes
+                    and store.stripes[it.stripe_id].blocks[it.shard] is None
+                ]
+                rr = rebuild_csd_sharded(
+                    store.get, manifests.__getitem__, items,
+                    budget_bytes=rebuild_budget,
+                    put_shard=lambda sid, sh, blk: store.put(
+                        sid,
+                        store.stripes[sid]._replace(blocks=[
+                            blk if i == sh else b
+                            for i, b in enumerate(
+                                store.stripes[sid].blocks
+                            )
+                        ]),
+                    ),
+                )
+                assert rr.bytes_rebuilt <= rebuild_budget
+                rebuilt_bytes_log.append(rr.bytes_rebuilt)
+                if not rr.remaining:
+                    lost_csds.discard(csd)
+                    fleet.replace(csd)
+            # replay progresses every round regardless of chaos: the
+            # catalog answers top-k without touching a payload byte
+            top = cat.topk(2)
+            assert len(top) == 2
+            replay_log.append(tuple(e.stripe_id for e in top))
+        # torn commits never replay as data
+        live = [r["name"] for r in journal.replay()]
+        assert live == ["seed.bin"]
+
+    # retire the least-salient stripe through the lifecycle tier
+    retire_ids = plan_retirement(cat, now_step=10 ** 6, ttl_steps=1, limit=1)
+    report = retire_stripes(cat, retire_ids)
+    for sid in report.keys_recyclable:
+        store.stripes.pop(sid)
+        pristine.pop(sid)
+
+    # settle: drain any still-lost CSDs, then scrub until clean
+    while lost_csds:
+        csd = sorted(lost_csds)[0]
+        items = [
+            it for it in plan_rebuild(cat, csd)
+            if it.stripe_id in store.stripes
+            and store.stripes[it.stripe_id].blocks[it.shard] is None
+        ]
+        rr = rebuild_csd_sharded(
+            store.get, manifests.__getitem__, items,
+            budget_bytes=1 << 30,
+            put_shard=lambda sid, sh, blk: store.put(
+                sid,
+                store.stripes[sid]._replace(blocks=[
+                    blk if i == sh else b
+                    for i, b in enumerate(store.stripes[sid].blocks)
+                ]),
+            ),
+        )
+        assert not rr.remaining
+        lost_csds.discard(csd)
+    for _ in range(4):
+        sr = scrubber.scrub_round(sorted(store.stripes), 1 << 30)
+        findings_log.extend((99,) + tuple(f) for f in sr.findings)
+        if not sr.findings:
+            break
+
+    # ---- acceptance: every retained stripe verified bit-exact ----
+    final = scrubber.scrub_round(sorted(store.stripes), 1 << 30)
+    assert final.findings == [], final.findings
+    for sid, want in pristine.items():
+        got = _bodies(store.stripes[sid])
+        for w, g in zip(want, got):
+            assert np.array_equal(w, g), f"{sid} not bit-exact"
+    assert injected > 0, "chaos injected no corruption — test is vacuous"
+    assert torn_discarded > 0
+    assert report.retired and report.retired[0] not in store.stripes
+    return {
+        "injected": injected,
+        "escalated": escalated,
+        "findings": findings_log,
+        "rebuilt_bytes": rebuilt_bytes_log,
+        "replay": replay_log,
+        "retired": report.retired,
+    }
+
+
+def test_chaos_end_to_end_acceptance():
+    summary = _chaos_e2e(seed=17)
+    # ≥3 fault classes actually fired (ensure_kinds guarantees scheduling;
+    # the harness asserts the data-visible ones had effect)
+    assert summary["injected"] > 0          # bitflip class
+    assert any(b >= 0 for b in summary["rebuilt_bytes"])  # loss class
+    assert summary["rebuilt_bytes"], "loss never triggered a rebuild"
+    assert summary["retired"], "lifecycle tier never retired"
+    assert all(len(r) == 2 for r in summary["replay"])
+
+
+def test_chaos_end_to_end_deterministic():
+    a = _chaos_e2e(seed=23)
+    b = _chaos_e2e(seed=23)
+    assert a["findings"] == b["findings"]
+    assert a["rebuilt_bytes"] == b["rebuilt_bytes"]
+    assert a["replay"] == b["replay"]
+    assert a["retired"] == b["retired"]
+    assert (a["injected"], a["escalated"]) == (b["injected"], b["escalated"])
+
+
+# ------------------------------------------------- trainer scrub interleave
+def test_trainer_scrub_rounds_interleave_cleanly(tmp_path):
+    from repro.data.video import make_streams
+    from repro.train.trainer import SalientTrainer, TrainerConfig
+
+    streams = make_streams(4, height=32, width=32)
+    cfg = TrainerConfig(
+        n_shards=2, checkpoint_every=3, replay_every=2,
+        scrub_every=2, scrub_budget_bytes=1 << 20,
+    )
+    tr = SalientTrainer(streams, str(tmp_path), cfg)
+    reports = [tr.run_step(shard_times=[1.0, 1.0]) for _ in range(4)]
+    assert any(r.scrub_stripes > 0 for r in reports), "scrub never fired"
+    assert all(r.scrub_findings == 0 for r in reports)  # clean archive
+    assert any(r.replayed_gops for r in reports)  # replay unaffected
+
+
+def test_trainer_scrub_repairs_journaled_bitflip(tmp_path):
+    from repro.data.video import make_streams
+    from repro.train.trainer import SalientTrainer, TrainerConfig
+
+    streams = make_streams(4, height=32, width=32)
+    cfg = TrainerConfig(
+        n_shards=2, checkpoint_every=10, replay_every=2,
+        scrub_every=1, scrub_budget_bytes=1 << 22,
+    )
+    tr = SalientTrainer(streams, str(tmp_path), cfg)
+    tr.run_step(shard_times=[1.0, 1.0])
+    assert len(tr.catalog) > 0
+    # flip one bit in a journaled stripe body on disk (silent corruption)
+    j = tr.journal
+    recs = {r["name"]: r for r in j.replay()}
+    name = sorted(n for n in recs if n.endswith(".bin")
+                  and not n.endswith(".parity.bin"))[0]
+    path = os.path.join(j.root, name)
+    with open(path, "r+b") as f:
+        f.seek(40)
+        byte = f.read(1)[0]
+        f.seek(40)
+        f.write(bytes([byte ^ 0x04]))
+    tr._stripes.pop(name[: -len(".bin")], None)  # drop the hot copy
+    # crc detects: default replay refuses the record now
+    assert name not in {r["name"] for r in j.replay()}
+    # the scrub stage locates + repairs it from parity and re-commits
+    rep = tr.run_step(shard_times=[1.0, 1.0])
+    assert rep.scrub_findings >= 1
+    assert rep.scrub_repaired >= 1
+    recs2 = {r["name"]: r for r in j.replay()}
+    assert name in recs2  # crc re-armed by the repair commit
+    with open(path, "rb") as f:
+        assert (zlib.crc32(f.read()) & 0xFFFFFFFF) == recs2[name]["crc32"]
+    # and the archive is clean again for the next scrub pass
+    rep2 = tr.run_step(shard_times=[1.0, 1.0])
+    assert rep2.scrub_findings == 0
