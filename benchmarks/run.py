@@ -20,7 +20,10 @@ BYTES_THRESHOLD: byte accounting is deterministic, so a retrieval plan that
 starts moving more data than the committed baseline fails even when wall
 clock looks fine.  ``ABS_GATES`` adds fixed (baseline-free) bounds on the
 one-launch archival bench: a launch-count ceiling for its structural claim
-and a ``vs_host_speed`` floor.
+and a ``vs_host_speed`` floor.  When any gate fails, a consolidated
+full-gate-state table (measured vs effective bound with signed margin,
+passing rows included) is printed so the CI log alone answers "how close
+was everything else".
 """
 
 from __future__ import annotations
@@ -57,6 +60,12 @@ ABS_GATES = {
         ("detection_rate", "floor", 1.0),
         ("rebuild_budget_frac", "ceiling", 1.0),
         ("replay_progress_ratio", "floor", 0.5),
+    ),
+    # Telemetry tier: every hot-path obs call site is a single branch when
+    # disabled, so enabling spans+ledger+histograms on the seal path may
+    # cost at most 3% wall clock (interleaved A/B measurement).
+    "obs_overhead": (
+        ("overhead_frac", "ceiling", 0.03),
     ),
 }
 
@@ -97,7 +106,7 @@ def _load_committed() -> dict:
         return json.load(f).get("benches", {})
 
 
-def _check_regressions(committed: dict, fresh: dict) -> int:
+def _check_regressions(committed: dict, fresh: dict, gate_rows: list) -> int:
     """Print the per-bench delta table; return the number of regressions.
 
     Per bench (where both sides have the metric), ceilings AND floors:
@@ -129,12 +138,14 @@ def _check_regressions(committed: dict, fresh: dict) -> int:
                 continue  # missing/NaN/zero baseline
             ratio = new / old
             verdict = "ok"
+            bound = old * threshold if kind == "ceiling" else old / threshold
             if kind == "ceiling" and ratio > threshold:
                 verdict = f"REGRESSION(>{threshold:g}x)"
                 bad += 1
             if kind == "floor" and ratio < 1.0 / threshold:
                 verdict = f"REGRESSION(<1/{threshold:g}x)"
                 bad += 1
+            gate_rows.append((name, metric, kind, new, bound, verdict))
             print(
                 f"{name},{metric},{fmt.format(old)},{fmt.format(new)},"
                 f"{ratio:.2f},{verdict}"
@@ -144,7 +155,7 @@ def _check_regressions(committed: dict, fresh: dict) -> int:
     return bad
 
 
-def _check_abs_gates(fresh: dict) -> int:
+def _check_abs_gates(fresh: dict, gate_rows: list) -> int:
     """Gate fresh metrics against the fixed ABS_GATES bounds; return the
     number of violations.  Unlike ``_check_regressions`` this does not need
     the metric in the committed baseline, so deleting a row from
@@ -167,10 +178,39 @@ def _check_abs_gates(fresh: dict) -> int:
                 verdict = f"FAIL(<{bound:g})"
                 bad += 1
             shown = "nan" if value is None else f"{value:g}"
+            gate_rows.append((bench, metric, kind, value, bound, verdict))
             print(f"{bench},{metric},{kind}@{bound:g},{shown},{verdict}")
     if bad:
         print(f"# {bad} absolute gate(s) failed")
     return bad
+
+
+def _print_gate_state(gate_rows: list) -> None:
+    """Consolidated gate-state table, printed when any gate failed.
+
+    One row per evaluated gate — passing AND failing, relative AND
+    absolute — with the measured value, the effective bound (for relative
+    gates: committed value x threshold, i.e. the number the fresh run had
+    to stay inside), and the signed margin as a fraction of the bound
+    (positive = headroom, negative = by how much the gate was blown).  A
+    failing CI run should need no further decoding: this table IS the
+    full gate state.
+    """
+    print("\n# full gate state (measured vs bound, margin = headroom/bound)")
+    print("bench,metric,kind,measured,bound,margin,verdict")
+    for bench, metric, kind, measured, bound, verdict in gate_rows:
+        if measured is None or measured != measured:
+            meas_s, margin_s = "nan", "nan"
+        else:
+            meas_s = f"{measured:g}"
+            if bound:
+                head = (bound - measured) if kind == "ceiling" \
+                    else (measured - bound)
+                margin_s = f"{head / abs(bound):+.1%}"
+            else:  # bound == 0: a ceiling at zero has no relative scale
+                margin_s = "n/a" if measured else "+0.0%"
+        print(f"{bench},{metric},{kind},{meas_s},{bound:g},{margin_s},"
+              f"{verdict}")
 
 
 def main() -> None:
@@ -200,6 +240,7 @@ def main() -> None:
         ("kernels/sharded_seal", kernels_bench.sharded_seal),
         ("kernels/retrieval", kernels_bench.retrieval),
         ("kernels/scrub_rebuild", kernels_bench.scrub_rebuild),
+        ("kernels/obs_overhead", kernels_bench.obs_overhead),
     ]
     committed = _load_committed() if check else {}
     print("name,us_per_call,derived")
@@ -211,9 +252,14 @@ def main() -> None:
             failures += 1
             print(f"{name},nan,ERROR: {e!r}", flush=True)
     regressions = 0
+    gate_rows: list = []
     if check:
-        regressions = _check_regressions(committed, kernels_bench.JSON_METRICS)
-        regressions += _check_abs_gates(kernels_bench.JSON_METRICS)
+        regressions = _check_regressions(
+            committed, kernels_bench.JSON_METRICS, gate_rows
+        )
+        regressions += _check_abs_gates(kernels_bench.JSON_METRICS, gate_rows)
+        if regressions:
+            _print_gate_state(gate_rows)
     if regressions:
         # keep the committed baseline intact so a rerun still gates against
         # the good numbers instead of ratcheting down to the regressed ones

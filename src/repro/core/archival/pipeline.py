@@ -97,6 +97,34 @@ free, bit-identical to this module's single-device path).  The hooks below
 ``seal_fn`` / ``unseal_fn`` / ``entropy_fn`` / ``entropy_decode_fn``
 parameters) are the seams that path plugs into — subset reads ride the
 same seams via ``shard_ids``.
+
+Telemetry (``repro.obs``, off by default — one branch per site when off):
+
+Every byte this pipeline moves is billed to a named ledger edge, each at
+exactly ONE site so the totals conserve:
+
+* ``ingest.host_to_device`` — raw codec payload bytes entering the seal
+  (the pre-compression volume a host-codec design would ship); billed in
+  ``_assemble_stripe``, the join point of the fused AND chained write
+  paths.
+* ``ingest.entropy_raw`` / ``ingest.entropy_comp`` — bytes through the
+  entropy stage and the streams they became; their ratio is the archive's
+  compression ratio, recomputable from the ledger alone.
+* ``ingest.device_to_journal`` — sealed body bytes leaving the kernel for
+  the journal (the only payload traffic the CSD design ships host-side).
+* ``ingest.shard_to_parity`` — P/Q strip bytes per sealed stripe.
+* ``replay.read`` — sealed bytes a restore actually moved (present wanted
+  shards); ``replay.parity`` — degraded-read amplification (surviving
+  unwanted peers + parity strips fed to ``recover_stripe``); both billed
+  in ``restore_stripe_payloads``.
+* ``replay.planned`` / ``replay.full_baseline`` are billed by the query
+  planner (``core/csd/retrieval.py``); ``scrub.*`` / ``rebuild.*`` by the
+  durability tier (``core/archival/scrub.py``, ``distributed/archival``).
+
+Spans (``archive.seal`` / ``archive.seal_chained`` / ``archive.unseal`` /
+``archive.entropy_*`` / ``archive.parity_recompute``) carry stripe shape,
+codec, parity mode and the exact fused-launch count, and export as a
+Perfetto-loadable trace via ``repro.obs.export``.
 """
 
 from __future__ import annotations
@@ -125,6 +153,17 @@ from repro.core.crypto.hybrid import (
 from repro.kernels.entropy import ops as entropy_ops
 from repro.kernels.fused import ops as fused_ops
 from repro.kernels.seal import ops as seal_ops
+from repro.obs import (
+    EDGE_DEVICE_TO_JOURNAL,
+    EDGE_ENTROPY_COMP,
+    EDGE_ENTROPY_RAW,
+    EDGE_HOST_TO_DEVICE,
+    EDGE_REPLAY_PARITY,
+    EDGE_REPLAY_READ,
+    EDGE_SHARD_TO_PARITY,
+    OBS,
+)
+from repro.obs import names as obs_names
 
 __all__ = [
     "ArchiveConfig",
@@ -305,9 +344,10 @@ def entropy_encode_payloads(
             for f in flats
         ]
     if name == "rans":
-        if entropy_fn is not None:
-            return entropy_fn(flats, use_pallas=use_pallas)
-        return entropy_ops.encode_payloads(flats, use_pallas=use_pallas)
+        with OBS.span("archive.entropy_encode", codec=name, shards=len(flats)):
+            if entropy_fn is not None:
+                return entropy_fn(flats, use_pallas=use_pallas)
+            return entropy_ops.encode_payloads(flats, use_pallas=use_pallas)
     if name in ("zstd", "zlib"):
         comps, metas = [], []
         for f in flats:
@@ -347,9 +387,12 @@ def entropy_decode_payloads(
     if name == "none":
         return list(comps)
     if name == "rans":
-        if entropy_decode_fn is not None:
-            return entropy_decode_fn(comps, metas, use_pallas=use_pallas)
-        return entropy_ops.decode_payloads(comps, metas, use_pallas=use_pallas)
+        with OBS.span("archive.entropy_decode", codec=name, shards=len(comps)):
+            if entropy_decode_fn is not None:
+                return entropy_decode_fn(comps, metas, use_pallas=use_pallas)
+            return entropy_ops.decode_payloads(
+                comps, metas, use_pallas=use_pallas
+            )
     if name in ("zstd", "zlib"):
         out = []
         for c, m in zip(comps, metas):
@@ -363,6 +406,39 @@ def entropy_decode_payloads(
             out.append(jnp.asarray(np.frombuffer(raw, np.int8)))
         return out
     raise ValueError(f"unknown entropy codec {name!r}")
+
+
+def _bill_ingest(stripe, manifests: List[Dict], parity: Optional[Dict]) -> None:
+    """Bill one sealed stripe's ingest edges to the byte-flow ledger.
+
+    This is the SINGLE ingest billing site: the fused batched path and the
+    chained reference path both assemble here with entropy-merged
+    manifests, so every sealed stripe is billed exactly once.
+    """
+    raw = comp = host = 0
+    for m in manifests:
+        em = m.get("entropy") or {"codec": "none"}
+        n_raw = int(em.get("n_raw", m.get("n_i8", 0)))
+        host += n_raw
+        if em.get("codec", "none") != "none":
+            raw += n_raw
+            comp += int(em.get("n_comp", n_raw))
+    S = len(manifests)
+    OBS.flow(EDGE_HOST_TO_DEVICE, host, events=S)
+    if raw:
+        OBS.flow(EDGE_ENTROPY_RAW, raw, events=S)
+        OBS.flow(EDGE_ENTROPY_COMP, comp, events=S)
+    OBS.flow(
+        EDGE_DEVICE_TO_JOURNAL,
+        sum(4 * int(n) for n in stripe.n_words),
+        events=S,
+    )
+    if parity is not None:
+        nb = int(parity["p"].size)
+        q = parity.get("q")
+        if q is not None:
+            nb += int(q.size)
+        OBS.flow(EDGE_SHARD_TO_PARITY, nb)
 
 
 def _assemble_stripe(stripe, mats, manifests: List[Dict]) -> StripeArchive:
@@ -381,6 +457,8 @@ def _assemble_stripe(stripe, mats, manifests: List[Dict]) -> StripeArchive:
         parity = {"p": _u32_rows_to_u8(stripe.p), "pad_to": stripe.pad_words}
         if stripe.q is not None:
             parity["q"] = _u32_rows_to_u8(stripe.q)
+    if OBS.enabled:
+        _bill_ingest(stripe, manifests, parity)
     return StripeArchive(blocks, parity)
 
 
@@ -432,14 +510,23 @@ def seal_payload_stripes(
         for k, f in zip(keys, stripes)
     ]
     fn = fused_fn or fused_ops.entropy_seal_stripes
-    results = fn(
-        stripes,
-        [jnp.stack([m.session for m in ms]) for ms in mats],
-        [jnp.stack([m.nonce for m in ms]) for ms in mats],
-        parity=cfg.parity,
-        use_pallas=use_pallas,
-        pad_rows=pr_list,
-    )
+    with OBS.span(
+        "archive.seal", stripes=n, shards=len(stripes[0]),
+        codec=cfg.codec_name, parity=cfg.parity,
+    ) as sp:
+        launches0 = OBS.metrics.get(obs_names.FUSED_LAUNCHES) if OBS.enabled else 0
+        results = fn(
+            stripes,
+            [jnp.stack([m.session for m in ms]) for ms in mats],
+            [jnp.stack([m.nonce for m in ms]) for ms in mats],
+            parity=cfg.parity,
+            use_pallas=use_pallas,
+            pad_rows=pr_list,
+        )
+        if OBS.enabled:
+            sp.set(launches=int(
+                OBS.metrics.get(obs_names.FUSED_LAUNCHES) - launches0
+            ))
     return [
         _assemble_stripe(
             stripe, ms, [dict(m, entropy=em) for m, em in zip(mfs, emetas)]
@@ -482,32 +569,36 @@ def seal_payload_stripe(
             pub, [flats], [manifests], [key], cfg, use_pallas=use_pallas,
             pad_rows=[pad_rows], fused_fn=fused_fn,
         )[0]
-    flats, emetas = entropy_encode_payloads(
-        flats, cfg, use_pallas=use_pallas, entropy_fn=entropy_fn
-    )
-    manifests = [dict(m, entropy=em) for m, em in zip(manifests, emetas)]
-    if cfg.codec_name != "none" and pad_rows is not None:
-        # the caller's bucket covered the RAW payload; re-bucket on the
-        # compressed sizes (still pow2, so jit traces stay bounded) — an
-        # incompressible shard can exceed its raw bucket (stream header +
-        # 16-bit renorm slack)
-        pad_rows = seal_ops.bucket_rows_for(
-            max(-(-int(f.shape[0]) // 4) for f in flats)
+    with OBS.span(
+        "archive.seal_chained", shards=len(flats),
+        codec=cfg.codec_name, parity=cfg.parity,
+    ):
+        flats, emetas = entropy_encode_payloads(
+            flats, cfg, use_pallas=use_pallas, entropy_fn=entropy_fn
         )
-    mats = [
-        encapsulate_session(pub, jax.random.fold_in(key, s), cfg.rlwe)
-        for s in range(len(flats))
-    ]
-    seal_fn = seal_fn or seal_ops.seal_stripe
-    stripe = seal_fn(
-        flats,
-        jnp.stack([m.session for m in mats]),
-        jnp.stack([m.nonce for m in mats]),
-        parity=cfg.parity,
-        use_pallas=use_pallas,
-        pad_rows=pad_rows,
-    )
-    return _assemble_stripe(stripe, mats, manifests)
+        manifests = [dict(m, entropy=em) for m, em in zip(manifests, emetas)]
+        if cfg.codec_name != "none" and pad_rows is not None:
+            # the caller's bucket covered the RAW payload; re-bucket on the
+            # compressed sizes (still pow2, so jit traces stay bounded) — an
+            # incompressible shard can exceed its raw bucket (stream header +
+            # 16-bit renorm slack)
+            pad_rows = seal_ops.bucket_rows_for(
+                max(-(-int(f.shape[0]) // 4) for f in flats)
+            )
+        mats = [
+            encapsulate_session(pub, jax.random.fold_in(key, s), cfg.rlwe)
+            for s in range(len(flats))
+        ]
+        seal_fn = seal_fn or seal_ops.seal_stripe
+        stripe = seal_fn(
+            flats,
+            jnp.stack([m.session for m in mats]),
+            jnp.stack([m.nonce for m in mats]),
+            parity=cfg.parity,
+            use_pallas=use_pallas,
+            pad_rows=pad_rows,
+        )
+        return _assemble_stripe(stripe, mats, manifests)
 
 
 def archive_stripe(
@@ -609,6 +700,33 @@ def restore_stripe_payloads(
             blocks, stripe.parity, missing, manifests, body_lens
         )
     sub = [blocks[i] for i in wanted]
+    if OBS.enabled:
+        # replay.read: sealed bytes the subset read actually moved (wanted
+        # shards that were present on their CSD)
+        OBS.flow(
+            EDGE_REPLAY_READ,
+            sum(
+                4 * int(stripe.blocks[i].sealed.n_valid_u32)
+                for i in wanted
+                if stripe.blocks[i] is not None
+            ),
+            events=len(wanted),
+        )
+        deg = set(missing) & set(wanted)
+        if deg:
+            # replay.parity: the degraded-read amplification — surviving
+            # peers OUTSIDE the wanted subset plus both parity strips, all
+            # of which recover_stripe had to pull in
+            amp = sum(
+                4 * int(stripe.blocks[i].sealed.n_valid_u32)
+                for i in range(S)
+                if stripe.blocks[i] is not None and i not in wanted
+            )
+            amp += int(stripe.parity["p"].size)
+            q_strip = stripe.parity.get("q")
+            if q_strip is not None:
+                amp += int(q_strip.size)
+            OBS.flow(EDGE_REPLAY_PARITY, amp, events=len(deg))
     sessions, nonces = [], []
     for b in sub:
         sessions.append(
@@ -643,14 +761,18 @@ def restore_stripe_payloads(
     else:
         parity_mode = "raid6" if "q" in stripe.parity else "raid5"
     unseal_fn = unseal_fn or seal_ops.unseal_stripe
-    flats, p2, q2 = unseal_fn(
-        packed,
-        jnp.stack(sessions),
-        jnp.stack(nonces),
-        parity=parity_mode,
-        use_pallas=use_pallas,
-        shard_ids=tuple(wanted),
-    )
+    with OBS.span(
+        "archive.unseal", shards=len(wanted), subset=subset,
+        degraded=len(set(missing) & set(wanted)), parity=parity_mode,
+    ):
+        flats, p2, q2 = unseal_fn(
+            packed,
+            jnp.stack(sessions),
+            jnp.stack(nonces),
+            parity=parity_mode,
+            use_pallas=use_pallas,
+            shard_ids=tuple(wanted),
+        )
     if not subset and verify_parity and stripe.parity is not None:
         for name, got in (("p", p2), ("q", q2)):
             want = stripe.parity.get(name)
@@ -879,13 +1001,14 @@ def recompute_stripe_parity(
     packed = seal_ops.SealedStripe(sealed, None, None, n_words, n_words)
     mode = "raid6" if "q" in parity else "raid5"
     fn = unseal_fn or seal_ops.unseal_stripe
-    _, p2, q2 = fn(
-        packed,
-        jnp.zeros((S, 8), jnp.uint32),
-        jnp.zeros((S, 3), jnp.uint32),
-        parity=mode,
-        use_pallas=use_pallas,
-    )
+    with OBS.span("archive.parity_recompute", shards=S, parity=mode):
+        _, p2, q2 = fn(
+            packed,
+            jnp.zeros((S, 8), jnp.uint32),
+            jnp.zeros((S, 3), jnp.uint32),
+            parity=mode,
+            use_pallas=use_pallas,
+        )
     out = {"p": np.asarray(_u32_rows_to_u8(p2))}
     if q2 is not None:
         out["q"] = np.asarray(_u32_rows_to_u8(q2))

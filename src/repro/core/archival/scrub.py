@@ -36,6 +36,7 @@ starved by recovery.
 
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -46,6 +47,8 @@ from repro.core.archival.pipeline import (
     StripeArchive,
     recompute_stripe_parity,
 )
+from repro.obs import EDGE_SCRUB_READ, EDGE_SCRUB_SYNDROME, OBS
+from repro.obs import names as obs_names
 
 __all__ = [
     "ScrubFinding",
@@ -196,25 +199,50 @@ class StripeScrubber:
         ids = list(stripe_ids)
         if not ids:
             return ScrubRound(0, 0, 0, [])
+        t0 = time.perf_counter_ns() if OBS.enabled else 0
         checked = scanned = shipped = 0
         findings: List[ScrubFinding] = []
-        while checked < len(ids):
-            sid = ids[self._next % len(ids)]
-            cost = _stripe_bytes(self.get_stripe(sid))
-            if checked > 0 and scanned + cost > budget_bytes:
-                break
-            findings.extend(self.scrub_stripe(sid))
-            stripe = self.get_stripe(sid)
-            if stripe.parity is not None:
-                shipped += sum(
-                    np.asarray(stripe.parity[k]).size
-                    for k in ("p", "q") if k in stripe.parity
-                )
-            scanned += cost
-            checked += 1
-            self._next = (self._next + 1) % len(ids)
-            if scanned >= budget_bytes:
-                break
+        with OBS.span(
+            "scrub.round", stripes=len(ids), budget_bytes=budget_bytes
+        ) as sp:
+            while checked < len(ids):
+                sid = ids[self._next % len(ids)]
+                cost = _stripe_bytes(self.get_stripe(sid))
+                if checked > 0 and scanned + cost > budget_bytes:
+                    break
+                findings.extend(self.scrub_stripe(sid))
+                stripe = self.get_stripe(sid)
+                if stripe.parity is not None:
+                    shipped += sum(
+                        np.asarray(stripe.parity[k]).size
+                        for k in ("p", "q") if k in stripe.parity
+                    )
+                scanned += cost
+                checked += 1
+                self._next = (self._next + 1) % len(ids)
+                if scanned >= budget_bytes:
+                    break
+            sp.set(checked=checked, bytes_scrubbed=scanned,
+                   findings=len(findings))
+        if OBS.enabled:
+            # a syndrome hit = stored parity disagreed with the recompute
+            # (noparity/degraded findings never got as far as a syndrome)
+            hits = sum(
+                1 for f in findings
+                if f.kind in ("shard", "p", "q", "unlocatable")
+            )
+            OBS.count(obs_names.SCRUB_ROUNDS)
+            OBS.count(obs_names.SCRUB_STRIPES, checked)
+            OBS.count(obs_names.SCRUB_BYTES, scanned)
+            OBS.count(obs_names.SCRUB_FINDINGS, len(findings))
+            OBS.count(obs_names.SCRUB_SYNDROME_HITS, hits)
+            OBS.count(obs_names.SCRUB_REPAIRED,
+                      sum(1 for f in findings if f.repaired))
+            OBS.flow(EDGE_SCRUB_READ, scanned, events=checked)
+            OBS.flow(EDGE_SCRUB_SYNDROME, shipped, events=checked)
+            OBS.observe(
+                obs_names.SCRUB_ROUND_US, (time.perf_counter_ns() - t0) / 1e3
+            )
         return ScrubRound(checked, scanned, shipped, findings)
 
 

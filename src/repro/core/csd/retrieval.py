@@ -30,6 +30,8 @@ from __future__ import annotations
 from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 from repro.core.csd import costmodel
+from repro.obs import EDGE_REPLAY_FULL_BASELINE, EDGE_REPLAY_PLANNED, OBS
+from repro.obs import names as obs_names
 
 __all__ = ["ShardRead", "ReadPlan", "plan_retrieval"]
 
@@ -96,87 +98,102 @@ def plan_retrieval(
     ``parity_shards``: parity strips per stripe (2 for RAID-6, 1 for
     RAID-5) used to size that bill.
     """
-    entries = catalog.entries
-    scores = catalog.score(centroids)
-    order = sorted(range(len(entries)), key=lambda i: -float(scores[i]))
-    if k is not None:
-        order = order[: max(int(k), 0)]
-    dead = set(int(d) for d in dead_shards)
+    with OBS.span("retrieval.plan") as sp:
+        entries = catalog.entries
+        scores = catalog.score(centroids)
+        order = sorted(range(len(entries)), key=lambda i: -float(scores[i]))
+        if k is not None:
+            order = order[: max(int(k), 0)]
+        dead = set(int(d) for d in dead_shards)
 
-    by_stripe: Dict[str, List] = {}
-    for e in entries:
-        by_stripe.setdefault(e.stripe_id, []).append(e)
+        by_stripe: Dict[str, List] = {}
+        for e in entries:
+            by_stripe.setdefault(e.stripe_id, []).append(e)
 
-    reads: List[ShardRead] = []
-    touched: Dict[str, Set[int]] = {}
-    rebuilt: Set[str] = set()  # stripes whose parity rebuild already ran
-    planned = 0
-    skipped = 0
-    for i in order:
-        e = entries[i]
-        got = touched.setdefault(e.stripe_id, set())
-        degraded = e.shard in dead
-        if degraded:
-            # a stripe with more dead shards than parity strips cannot be
-            # rebuilt — planning that read would bill bytes for a rebuild
-            # that must fail, so it is dropped instead of promised
-            stripe_dead = dead & {x.shard for x in by_stripe[e.stripe_id]}
-            if len(stripe_dead) > parity_shards:
+        reads: List[ShardRead] = []
+        touched: Dict[str, Set[int]] = {}
+        rebuilt: Set[str] = set()  # stripes whose parity rebuild already ran
+        planned = 0
+        skipped = 0
+        for i in order:
+            e = entries[i]
+            got = touched.setdefault(e.stripe_id, set())
+            degraded = e.shard in dead
+            if degraded:
+                # a stripe with more dead shards than parity strips cannot be
+                # rebuilt — planning that read would bill bytes for a rebuild
+                # that must fail, so it is dropped instead of promised
+                stripe_dead = dead & {x.shard for x in by_stripe[e.stripe_id]}
+                if len(stripe_dead) > parity_shards:
+                    skipped += 1
+                    continue
+                # one rebuild reconstructs every lost shard of the stripe at
+                # once; a second dead-shard read there adds no new bytes
+                cost = (
+                    0
+                    if e.stripe_id in rebuilt
+                    else _degraded_read_bytes(
+                        by_stripe[e.stripe_id], got, dead, parity_shards
+                    )
+                )
+            else:
+                cost = 0 if e.shard in got else e.body_bytes
+            if budget_bytes is not None and planned + cost > budget_bytes:
                 skipped += 1
                 continue
-            # one rebuild reconstructs every lost shard of the stripe at
-            # once; a second dead-shard read there adds no new bytes
-            cost = (
-                0
-                if e.stripe_id in rebuilt
-                else _degraded_read_bytes(
-                    by_stripe[e.stripe_id], got, dead, parity_shards
+            planned += cost
+            if degraded:
+                # the rebuild read every surviving body in the stripe
+                rebuilt.add(e.stripe_id)
+                got.update(x.shard for x in by_stripe[e.stripe_id])
+            else:
+                got.add(e.shard)
+            reads.append(
+                ShardRead(
+                    stripe_id=e.stripe_id,
+                    shard=e.shard,
+                    stream_id=e.stream_id,
+                    novelty=float(scores[i]),
+                    body_bytes=e.body_bytes,
+                    n_comp=e.n_comp,
+                    n_i8=e.n_i8,
+                    degraded=degraded,
+                    read_bytes=cost,
                 )
             )
-        else:
-            cost = 0 if e.shard in got else e.body_bytes
-        if budget_bytes is not None and planned + cost > budget_bytes:
-            skipped += 1
-            continue
-        planned += cost
-        if degraded:
-            # the rebuild read every surviving body in the stripe
-            rebuilt.add(e.stripe_id)
-            got.update(x.shard for x in by_stripe[e.stripe_id])
-        else:
-            got.add(e.shard)
-        reads.append(
-            ShardRead(
-                stripe_id=e.stripe_id,
-                shard=e.shard,
-                stream_id=e.stream_id,
-                novelty=float(scores[i]),
-                body_bytes=e.body_bytes,
-                n_comp=e.n_comp,
-                n_i8=e.n_i8,
-                degraded=degraded,
-                read_bytes=cost,
-            )
-        )
 
-    shards_by_stripe = {
-        sid: sorted({r.shard for r in reads if r.stripe_id == sid})
-        for sid in {r.stripe_id for r in reads}
-    }
-    comp = float(sum(r.n_comp for r in reads))
-    raw = float(sum(r.n_i8 for r in reads))
-    if reads:
-        placement, costs = costmodel.best_retrieval_placement(sys, comp, raw)
-    else:
-        placement, costs = "host", {
-            w: costmodel.ArchiveCost(0.0, 0.0) for w in ("host", "csd")
+        shards_by_stripe = {
+            sid: sorted({r.shard for r in reads if r.stripe_id == sid})
+            for sid in {r.stripe_id for r in reads}
         }
-    return ReadPlan(
-        reads=reads,
-        shards_by_stripe=shards_by_stripe,
-        bytes_planned=planned,
-        bytes_full_restore=catalog.bytes_indexed,
-        placement=placement,
-        costs=costs,
-        skipped=skipped,
-    )
+        comp = float(sum(r.n_comp for r in reads))
+        raw = float(sum(r.n_i8 for r in reads))
+        if reads:
+            placement, costs = costmodel.best_retrieval_placement(
+                sys, comp, raw
+            )
+        else:
+            placement, costs = "host", {
+                w: costmodel.ArchiveCost(0.0, 0.0) for w in ("host", "csd")
+            }
+        if OBS.enabled:
+            # the planned-vs-baseline pair is VIRTUAL traffic billed at
+            # plan time; restore bills replay.read/replay.parity when bytes
+            # actually move, so the ledger's moved_vs_planned closes the loop
+            sp.set(reads=len(reads), skipped=skipped,
+                   planned_bytes=planned, placement=placement)
+            OBS.count(obs_names.RETR_PLANS)
+            OBS.count(obs_names.RETR_PLANNED_BYTES, planned)
+            OBS.count(obs_names.RETR_FULL_BYTES, catalog.bytes_indexed)
+            OBS.count(obs_names.RETR_SKIPPED, skipped)
+            OBS.flow(EDGE_REPLAY_PLANNED, planned, events=len(reads))
+            OBS.flow(EDGE_REPLAY_FULL_BASELINE, catalog.bytes_indexed)
+        return ReadPlan(
+            reads=reads,
+            shards_by_stripe=shards_by_stripe,
+            bytes_planned=planned,
+            bytes_full_restore=catalog.bytes_indexed,
+            placement=placement,
+            costs=costs,
+            skipped=skipped,
+        )

@@ -44,6 +44,7 @@ log2(max_rows) regardless of the GOP-size mix.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -88,6 +89,13 @@ from repro.kernels.fused import ref as fused_ref
 from repro.kernels.fused.entropy_seal import entropy_seal_pallas
 from repro.kernels.seal import ops as seal_ops
 from repro.kernels.seal import ref as _ref
+from repro.obs import (
+    EDGE_REBUILD_READ,
+    EDGE_REBUILD_WRITE,
+    Metrics,
+    OBS,
+)
+from repro.obs import names as obs_names
 from repro.kernels.seal.ops import SealedStripe
 from repro.kernels.seal.seal import (
     seal_stripe_pallas,
@@ -542,15 +550,29 @@ class StripeCoalescer:
 
     ``flush()`` force-drains leftovers (end of epoch / checkpoint) into
     possibly short stripes so no GOP is ever stranded unsealed.
+
+    Accounting lives on a ``repro.obs.Metrics`` registry (pass ``metrics``
+    to share one with the owning ingest tier — ``ArchiveIngest`` does, so
+    its ``stats()`` and the coalescer's are views of the SAME instruments
+    instead of two hand-assembled dicts): ``ingest.gops`` /
+    ``ingest.stripes_sealed`` counters plus the ``ingest.pending_gops``
+    occupancy gauge.
     """
 
-    def __init__(self, n_shards: int):
+    def __init__(self, n_shards: int, *, metrics: Optional[Metrics] = None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.n_shards = n_shards
         self._buckets: Dict[int, List[PendingGOP]] = {}
-        self.n_gops = 0
-        self.n_stripes = 0
+        self.metrics = metrics if metrics is not None else Metrics()
+
+    @property
+    def n_gops(self) -> int:
+        return int(self.metrics.get(obs_names.ING_GOPS))
+
+    @property
+    def n_stripes(self) -> int:
+        return int(self.metrics.get(obs_names.ING_STRIPES))
 
     @staticmethod
     def _bucket_of(payload: jax.Array) -> int:
@@ -564,12 +586,14 @@ class StripeCoalescer:
         r = self._bucket_of(payload)
         pending = self._buckets.setdefault(r, [])
         pending.append(PendingGOP(stream_id, payload, manifest, meta))
-        self.n_gops += 1
+        self.metrics.add(obs_names.ING_GOPS)
         out: List[CoalescedStripe] = []
         while len(pending) >= self.n_shards:
             out.append(CoalescedStripe(pending[: self.n_shards], r))
             del pending[: self.n_shards]
-        self.n_stripes += len(out)
+        if out:
+            self.metrics.add(obs_names.ING_STRIPES, len(out))
+        self.metrics.set_gauge(obs_names.ING_PENDING, self.n_pending)
         return out
 
     def flush(self) -> List[CoalescedStripe]:
@@ -587,7 +611,9 @@ class StripeCoalescer:
             group = pending[i : i + self.n_shards]
             rows = max(self._bucket_of(g.payload) for g in group)
             out.append(CoalescedStripe(group, rows))
-        self.n_stripes += len(out)
+        if out:
+            self.metrics.add(obs_names.ING_STRIPES, len(out))
+        self.metrics.set_gauge(obs_names.ING_PENDING, 0)
         return out
 
     @property
@@ -595,14 +621,19 @@ class StripeCoalescer:
         return sum(len(v) for v in self._buckets.values())
 
     def stats(self) -> Dict[str, float]:
-        """Launch accounting: naive ingest = one seal launch per GOP."""
-        sealed_gops = self.n_gops - self.n_pending
+        """Launch accounting: naive ingest = one seal launch per GOP.
+
+        A registry view — every value is read back from the shared
+        ``Metrics`` instruments, never tracked twice.
+        """
+        n_gops, n_stripes = self.n_gops, self.n_stripes
+        sealed_gops = n_gops - self.n_pending
         return {
-            "n_gops": self.n_gops,
-            "n_stripes": self.n_stripes,
+            "n_gops": n_gops,
+            "n_stripes": n_stripes,
             "n_pending": self.n_pending,
             "launch_reduction": (
-                sealed_gops / self.n_stripes if self.n_stripes else float("nan")
+                sealed_gops / n_stripes if n_stripes else float("nan")
             ),
         }
 
@@ -843,16 +874,48 @@ def rebuild_csd_sharded(
     the reconstructed :class:`ArchivedBlock` on the replacement.
     """
     rebuilt: List[RebuildItem] = []
+    remaining: List[RebuildItem] = []
     spent = 0
     items = list(items)
-    for k, it in enumerate(items):
-        if spent + it.body_bytes > budget_bytes:
-            return RebuildRound(rebuilt, spent, items[k:])
-        blk = _rebuild_shard_body(
-            get_stripe(it.stripe_id), it.shard, manifests_for(it.stripe_id),
-            mesh=mesh, axis=axis, use_pallas=use_pallas,
+    t0 = time.perf_counter_ns() if OBS.enabled else 0
+    with OBS.span(
+        "rebuild.round", items=len(items), budget_bytes=budget_bytes
+    ) as sp:
+        for k, it in enumerate(items):
+            if spent + it.body_bytes > budget_bytes:
+                remaining = items[k:]
+                break
+            stripe = get_stripe(it.stripe_id)
+            if OBS.enabled:
+                # rebuild.read: every surviving body + both parity strips
+                # feed the reconstruction; rebuild.write: the rebuilt body
+                # landing on the replacement CSD
+                nb = sum(
+                    4 * int(b.sealed.n_valid_u32)
+                    for b in stripe.blocks
+                    if b is not None
+                )
+                if stripe.parity is not None:
+                    nb += int(stripe.parity["p"].size)
+                    q_strip = stripe.parity.get("q")
+                    if q_strip is not None:
+                        nb += int(q_strip.size)
+                OBS.flow(EDGE_REBUILD_READ, nb)
+                OBS.flow(EDGE_REBUILD_WRITE, it.body_bytes)
+            blk = _rebuild_shard_body(
+                stripe, it.shard, manifests_for(it.stripe_id),
+                mesh=mesh, axis=axis, use_pallas=use_pallas,
+            )
+            put_shard(it.stripe_id, it.shard, blk)
+            rebuilt.append(it)
+            spent += it.body_bytes
+        sp.set(rebuilt=len(rebuilt), bytes_rebuilt=spent)
+    if OBS.enabled:
+        OBS.count(obs_names.REBUILD_ROUNDS)
+        OBS.count(obs_names.REBUILD_SHARDS, len(rebuilt))
+        OBS.count(obs_names.REBUILD_BYTES, spent)
+        OBS.gauge(obs_names.REBUILD_BUDGET, budget_bytes)
+        OBS.observe(
+            obs_names.REBUILD_ROUND_US, (time.perf_counter_ns() - t0) / 1e3
         )
-        put_shard(it.stripe_id, it.shard, blk)
-        rebuilt.append(it)
-        spent += it.body_bytes
-    return RebuildRound(rebuilt, spent, [])
+    return RebuildRound(rebuilt, spent, remaining)

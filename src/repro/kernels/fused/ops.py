@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.archival.raid import gf_pow_gen
 from repro.kernels import as_payload_list, use_interpret
+from repro.obs import OBS, names as obs_names
 from repro.kernels.entropy.ops import HEADER_BYTES, MAX_ROWS, rows_for
 from repro.kernels.entropy.rans import N_LANES, STREAM_VERSION
 from repro.kernels.fused import ref as _ref
@@ -132,6 +133,10 @@ def entropy_seal_stripes(
 
     results: List = [None] * n_stripes
     for (S, T), idxs in groups.items():
+        # one Pallas launch per homogeneous group; the telemetry counters
+        # let the seal span report its exact launch amortization
+        OBS.count(obs_names.FUSED_LAUNCHES)
+        OBS.count(obs_names.FUSED_STRIPES, len(idxs))
         flats = [p for i in idxs for p in plists[i]]
         n_raw = [int(f.shape[0]) for f in flats]
         codes = jnp.stack(

@@ -1,0 +1,133 @@
+"""Telemetry exporters: fsync-disciplined JSONL and Chrome trace_event.
+
+Two consumers, two formats, one event source:
+
+* ``write_jsonl`` — the machine log.  One JSON object per line: every
+  finished span, then one ``metrics`` record (the registry snapshot) and
+  one ``ledger`` record (the byte-flow report).  Written with the SAME
+  durability discipline as ``core/csd/failure.Journal.commit`` — tmp file,
+  ``fsync``, atomic ``os.replace``, directory ``fsync`` — so a power cut
+  mid-export leaves the previous log intact, never a torn one.
+  ``commit_jsonl`` routes the identical payload through an actual
+  :class:`Journal` instead (crc32 record + replayable), for trainers that
+  already own one.
+* ``write_chrome_trace`` — the human view.  Chrome ``trace_event`` JSON
+  (the ``{"traceEvents": [...]}`` envelope): spans become complete ``"X"``
+  events whose begin/end nesting Perfetto reconstructs from timestamps,
+  ledger edges become counter ``"C"`` samples at the trace tail.  Load at
+  https://ui.perfetto.dev — the whole stripe lifecycle on one timeline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+__all__ = ["write_jsonl", "commit_jsonl", "write_chrome_trace",
+           "jsonl_lines", "chrome_trace_events"]
+
+
+def _fsync_replace(path: str, data: bytes) -> None:
+    """Durable atomic write (the Journal.commit discipline): payload fsync,
+    atomic rename, then directory fsync so the rename itself survives."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fd = os.open(d, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - fs without dir fsync support
+        pass
+    finally:
+        os.close(fd)
+
+
+def jsonl_lines(telemetry) -> List[str]:
+    """The JSONL event log as a list of lines (shared by both sinks)."""
+    lines = [
+        json.dumps(dict(ev, kind="span"), default=str)
+        for ev in telemetry.tracer.events
+    ]
+    if telemetry.tracer.dropped:
+        lines.append(json.dumps(
+            {"kind": "dropped_spans", "count": telemetry.tracer.dropped}
+        ))
+    lines.append(json.dumps(
+        {"kind": "metrics", "snapshot": telemetry.metrics.snapshot()},
+        default=str,
+    ))
+    lines.append(json.dumps(
+        {"kind": "ledger", "report": telemetry.ledger.report()},
+        default=str,
+    ))
+    return lines
+
+
+def write_jsonl(path: str, telemetry) -> int:
+    """Write the JSONL event log durably; returns the number of records."""
+    lines = jsonl_lines(telemetry)
+    _fsync_replace(path, ("\n".join(lines) + "\n").encode())
+    return len(lines)
+
+
+def commit_jsonl(journal, telemetry, name: str = "telemetry.jsonl") -> str:
+    """Commit the JSONL event log through an existing ``Journal`` (crc32'd
+    record, replayable, fsync discipline included).  Returns the payload
+    path the journal wrote."""
+    lines = jsonl_lines(telemetry)
+    return journal.commit(
+        name,
+        ("\n".join(lines) + "\n").encode(),
+        {"kind": "telemetry", "records": len(lines)},
+    )
+
+
+def chrome_trace_events(telemetry) -> List[Dict]:
+    """Span + counter events in Chrome ``trace_event`` form (ts/dur in us)."""
+    events: List[Dict] = [
+        {
+            "ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+            "args": {"name": "salient-store"},
+        }
+    ]
+    last_ts = 0.0
+    for ev in telemetry.tracer.events:
+        ts = ev["ts_ns"] / 1e3
+        events.append(
+            {
+                "name": ev["name"],
+                "ph": "X",
+                "ts": ts,
+                "dur": ev["dur_ns"] / 1e3,
+                "pid": 0,
+                "tid": 0,
+                "args": {k: str(v) for k, v in ev["attrs"].items()},
+            }
+        )
+        last_ts = max(last_ts, ts + ev["dur_ns"] / 1e3)
+    for edge, nbytes in sorted(telemetry.ledger.totals().items()):
+        events.append(
+            {
+                "name": f"bytes:{edge}",
+                "ph": "C",
+                "ts": last_ts,
+                "pid": 0,
+                "tid": 0,
+                "args": {"bytes": nbytes},
+            }
+        )
+    return events
+
+
+def write_chrome_trace(path: str, telemetry) -> int:
+    """Write a Perfetto-loadable trace file; returns the event count."""
+    events = chrome_trace_events(telemetry)
+    payload = {"traceEvents": events, "displayTimeUnit": "ms"}
+    _fsync_replace(path, json.dumps(payload).encode())
+    return len(events)

@@ -1,0 +1,221 @@
+"""Metrics registry: counters, gauges, fixed-bucket histograms.
+
+Dependency-free (stdlib only — the registry is imported by the kernels-
+adjacent layers, which must never grow a host-side dependency).  The three
+instrument kinds cover everything the stripe lifecycle reports:
+
+* :class:`Counter` — monotone event/byte totals (GOPs ingested, stripes
+  sealed, scrub findings).  ``snapshot(reset=True)`` windows them, so a
+  caller polling at an interval gets per-interval rates instead of
+  cumulative-only totals (the ``ingest_scale`` bench's requirement).
+* :class:`Gauge` — instantaneous levels (coalescer occupancy, lost CSDs).
+  Levels survive a windowed snapshot: resetting a level would fabricate
+  an empty coalescer.
+* :class:`Histogram` — fixed geometric buckets, p50/p95/p99 WITHOUT
+  storing samples: each observation lands in bucket
+  ``floor(log(v / lo) / log(growth))`` and percentiles interpolate
+  geometrically inside the covering bucket, clamped to the exact observed
+  min/max.  With the default ``growth = 2 ** (1/8)`` the worst-case
+  relative error of a percentile estimate is one bucket ratio (~9%),
+  at a constant 321 * 8 bytes of state per histogram — the property that
+  lets ingest tail latency run at production stream counts.
+
+``Metrics`` is instantiable (the serving tier keeps a per-``ArchiveIngest``
+registry so two ingest frontends never share counters); the process-global
+telemetry singleton owns its own instance (``repro.obs.OBS.metrics``).
+Canonical instrument names live in ``repro.obs.names`` so the serving and
+distributed tiers cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "Metrics"]
+
+
+class Counter:
+    """Monotone counter (events or bytes)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def add(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Instantaneous level; never reset by windowed snapshots."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed geometric buckets; percentiles without stored samples.
+
+    ``lo`` is the first bucket's lower bound; values below it clamp into
+    bucket 0, values past ``lo * growth**n_buckets`` into the last bucket.
+    The defaults cover 1 unit .. 2**40 units (microseconds up to ~2 weeks,
+    bytes up to a terabyte) at ~9% bucket ratio.
+    """
+
+    __slots__ = ("lo", "growth", "n_buckets", "_inv_lg", "buckets",
+                 "count", "total", "vmin", "vmax")
+
+    def __init__(self, lo: float = 1.0, growth: float = 2.0 ** 0.125,
+                 n_buckets: int = 321):
+        if lo <= 0 or growth <= 1.0 or n_buckets < 1:
+            raise ValueError("need lo > 0, growth > 1, n_buckets >= 1")
+        self.lo = float(lo)
+        self.growth = float(growth)
+        self.n_buckets = int(n_buckets)
+        self._inv_lg = 1.0 / math.log(growth)
+        self.buckets = [0] * self.n_buckets
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        if v > self.lo:
+            i = int(math.log(v / self.lo) * self._inv_lg)
+            if i >= self.n_buckets:
+                i = self.n_buckets - 1
+        else:
+            i = 0
+        self.buckets[i] += 1
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    def percentile(self, q: float) -> float:
+        """Estimate the q-th percentile by geometric interpolation inside
+        the covering bucket, clamped to the observed min/max."""
+        if not self.count:
+            return float("nan")
+        rank = (q / 100.0) * self.count
+        cum = 0
+        for i, c in enumerate(self.buckets):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                frac = (rank - cum) / c
+                b_lo = max(self.lo * self.growth ** i, self.vmin)
+                b_hi = min(self.lo * self.growth ** (i + 1), self.vmax)
+                if b_hi <= b_lo:
+                    return b_lo
+                return b_lo * (b_hi / b_lo) ** frac
+            cum += c
+        return self.vmax
+
+    def summary(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0}
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": self.vmin,
+            "max": self.vmax,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+        }
+
+    def reset(self) -> None:
+        self.buckets = [0] * self.n_buckets
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+
+class Metrics:
+    """Named instrument registry with windowed snapshots."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    # ------------------------------------------------------- get-or-create
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, **kw) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = Histogram(**kw)
+        return h
+
+    # -------------------------------------------------------- conveniences
+    def add(self, name: str, n: int = 1) -> None:
+        self.counter(name).add(n)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        self.gauge(name).set(v)
+
+    def observe(self, name: str, v: float) -> None:
+        self.histogram(name).observe(v)
+
+    def get(self, name: str, default: float = 0) -> float:
+        """Current value of a counter or gauge (0 when never touched)."""
+        c = self._counters.get(name)
+        if c is not None:
+            return c.value
+        g = self._gauges.get(name)
+        if g is not None:
+            return g.value
+        return default
+
+    def percentile(self, name: str, q: float) -> float:
+        h = self._hists.get(name)
+        return h.percentile(q) if h is not None else float("nan")
+
+    # ----------------------------------------------------------- snapshots
+    def snapshot(self, reset: bool = False) -> Dict[str, object]:
+        """Flat ``{name: value}`` view: counters/gauges as numbers,
+        histograms as their summary dicts.  ``reset=True`` zeroes counters
+        and histograms AFTER reading (windowed semantics: successive
+        snapshots report per-interval deltas); gauges are levels and keep
+        their value either way.
+        """
+        out: Dict[str, object] = {}
+        for name, c in self._counters.items():
+            out[name] = c.value
+        for name, g in self._gauges.items():
+            out[name] = g.value
+        for name, h in self._hists.items():
+            out[name] = h.summary()
+        if reset:
+            for c in self._counters.values():
+                c.value = 0
+            for h in self._hists.values():
+                h.reset()
+        return out
+
+    def clear(self) -> None:
+        self._counters.clear()
+        self._gauges.clear()
+        self._hists.clear()

@@ -39,6 +39,7 @@ key material is recycled.  All of it shows up in ``stats()``.
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List, NamedTuple, Optional
 
 import jax
@@ -62,6 +63,8 @@ from repro.distributed.archival import (
 )
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
+from repro.obs import Metrics, OBS
+from repro.obs import names as obs_names
 
 __all__ = [
     "ServeConfig",
@@ -209,7 +212,11 @@ class ArchiveIngest:
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
-        self.coalescer = StripeCoalescer(cfg.n_shards)
+        # one instrument registry for the whole ingest tier — the coalescer
+        # shares it, so ``stats()`` / ``snapshot()`` are views of a single
+        # set of counters instead of two hand-assembled dicts
+        self.metrics = Metrics()
+        self.coalescer = StripeCoalescer(cfg.n_shards, metrics=self.metrics)
         self.catalog = StripeCatalog(journal)
         if journal is not None:
             # a restart must see the old index AND resume the stripe id
@@ -225,11 +232,6 @@ class ArchiveIngest:
             ),
             default=0,
         )
-        self._entropy_raw = 0
-        self._entropy_comp = 0
-        self._plans_served = 0
-        self._planned_bytes = 0
-        self._planned_full_bytes = 0
         # durability tier: retained sealed stripes + replicated manifests
         # (the in-memory stand-in for the CSD fleet's disks), the background
         # scrubber, and the lost-CSD set the rebuild path drains
@@ -239,13 +241,6 @@ class ArchiveIngest:
         self._scrubber = StripeScrubber(
             self._stripes.__getitem__, self._stripes.__setitem__
         )
-        self._scrub_rounds = 0
-        self._scrub_bytes = 0
-        self._scrub_findings = 0
-        self._scrub_repaired = 0
-        self._rebuilt_shards = 0
-        self._rebuilt_bytes = 0
-        self._retired = 0
 
     def _seal(self, ready) -> List[StripeArchive]:
         if not ready:
@@ -258,16 +253,32 @@ class ArchiveIngest:
             keys.append(jax.random.fold_in(self._key, self._stripe_seq))
             stripe_ids.append(f"ingest_{self._stripe_seq:08d}")
             self._stripe_seq += 1
-        stripes = seal_coalesced_stripes(
-            self.pub, list(ready), keys, self.cfg.archive,
-            mesh=self.mesh, axis=self.axis,
-        )
+        with OBS.span(
+            "ingest.seal", stripes=len(ready),
+            codec=self.cfg.archive.codec_name,
+        ):
+            stripes = seal_coalesced_stripes(
+                self.pub, list(ready), keys, self.cfg.archive,
+                mesh=self.mesh, axis=self.axis,
+            )
+        t_commit = time.perf_counter_ns()
         for cs, stripe_id, stripe in zip(ready, stripe_ids, stripes):
             for b in stripe.blocks:
                 em = b.manifest.get("entropy")
                 if em and em.get("codec") != "none":
-                    self._entropy_raw += int(em["n_raw"])
-                    self._entropy_comp += int(em["n_comp"])
+                    self.metrics.add(
+                        obs_names.ING_ENTROPY_RAW, int(em["n_raw"])
+                    )
+                    self.metrics.add(
+                        obs_names.ING_ENTROPY_COMP, int(em["n_comp"])
+                    )
+            for g in cs.gops:
+                t_sub = (g.meta or {}).get("_t_submit")
+                if t_sub is not None:
+                    self.metrics.observe(
+                        obs_names.ING_GOP_LATENCY_US,
+                        (t_commit - t_sub) / 1e3,
+                    )
             self.catalog.add_stripe(
                 stripe_id,
                 stripe,
@@ -278,6 +289,13 @@ class ArchiveIngest:
             )
             self._stripes[stripe_id] = stripe
             self._manifests[stripe_id] = stripe_manifests(stripe)
+        self.metrics.set_gauge(obs_names.CAT_GOPS, len(self.catalog))
+        self.metrics.set_gauge(
+            obs_names.CAT_BYTES, self.catalog.bytes_indexed
+        )
+        self.metrics.set_gauge(
+            obs_names.STRIPES_RETAINED, len(self._stripes)
+        )
         return list(stripes)
 
     def submit(
@@ -299,7 +317,10 @@ class ArchiveIngest:
         flat, manifest, _ = encode_gop_payload(
             self.codec_params, frames, self.cfg.archive
         )
-        meta = {"novelty": float(novelty)}
+        # the submit stamp feeds the GOP-submit -> journal-commit latency
+        # histogram when this GOP's stripe seals (monotonic clock; the key
+        # rides the coalescer meta, ignored by gop_descriptors)
+        meta = {"novelty": float(novelty), "_t_submit": time.perf_counter_ns()}
         if feature is not None:
             meta["feature"] = np.asarray(feature, np.float32).reshape(-1)
         ready = self.coalescer.add(stream_id, flat, manifest, meta=meta)
@@ -327,9 +348,10 @@ class ArchiveIngest:
                 self.cfg.archive.parity
             ],
         )
-        self._plans_served += 1
-        self._planned_bytes += plan.bytes_planned
-        self._planned_full_bytes += plan.bytes_full_restore
+        self.metrics.add(obs_names.RETR_PLANS)
+        self.metrics.add(obs_names.RETR_PLANNED_BYTES, plan.bytes_planned)
+        self.metrics.add(obs_names.RETR_FULL_BYTES, plan.bytes_full_restore)
+        self.metrics.add(obs_names.RETR_SKIPPED, plan.skipped)
         return plan
 
     # ------------------------------------------------------ durability tier
@@ -341,10 +363,13 @@ class ArchiveIngest:
         rnd = self._scrubber.scrub_round(
             sorted(self._stripes), budget_bytes
         )
-        self._scrub_rounds += 1
-        self._scrub_bytes += rnd.bytes_scrubbed
-        self._scrub_findings += len(rnd.findings)
-        self._scrub_repaired += sum(f.repaired for f in rnd.findings)
+        self.metrics.add(obs_names.SCRUB_ROUNDS)
+        self.metrics.add(obs_names.SCRUB_STRIPES, rnd.stripes_checked)
+        self.metrics.add(obs_names.SCRUB_BYTES, rnd.bytes_scrubbed)
+        self.metrics.add(obs_names.SCRUB_FINDINGS, len(rnd.findings))
+        self.metrics.add(
+            obs_names.SCRUB_REPAIRED, sum(f.repaired for f in rnd.findings)
+        )
         return rnd
 
     def mark_csd_lost(self, csd: int) -> int:
@@ -352,6 +377,7 @@ class ArchiveIngest:
         retained stripe is gone until ``rebuild_csd`` restores it onto a
         replacement.  Returns how many stripe shards went degraded."""
         self._lost_csds.add(int(csd))
+        self.metrics.set_gauge(obs_names.LOST_CSDS, len(self._lost_csds))
         n = 0
         for sid, stripe in self._stripes.items():
             if csd < len(stripe.blocks) and stripe.blocks[csd] is not None:
@@ -383,10 +409,11 @@ class ArchiveIngest:
             budget_bytes=budget_bytes, put_shard=put_shard,
             mesh=self.mesh, axis=self.axis,
         )
-        self._rebuilt_shards += len(rnd.rebuilt)
-        self._rebuilt_bytes += rnd.bytes_rebuilt
+        self.metrics.add(obs_names.REBUILD_SHARDS, len(rnd.rebuilt))
+        self.metrics.add(obs_names.REBUILD_BYTES, rnd.bytes_rebuilt)
         if not rnd.remaining:
             self._lost_csds.discard(int(csd))
+        self.metrics.set_gauge(obs_names.LOST_CSDS, len(self._lost_csds))
         return rnd
 
     def retire(self, stripe_ids) -> int:
@@ -399,39 +426,57 @@ class ArchiveIngest:
             # retirement is journaled
             self._stripes.pop(sid, None)
             self._manifests.pop(sid, None)
-        self._retired += len(report.retired)
+        self.metrics.add(obs_names.RETIRED_STRIPES, len(report.retired))
+        self.metrics.set_gauge(
+            obs_names.STRIPES_RETAINED, len(self._stripes)
+        )
+        self.metrics.set_gauge(obs_names.CAT_GOPS, len(self.catalog))
+        self.metrics.set_gauge(
+            obs_names.CAT_BYTES, self.catalog.bytes_indexed
+        )
         return len(report.retired)
 
     def stats(self) -> Dict[str, float]:
+        """Legacy stats view — every value read back from the shared
+        ``Metrics`` registry (one set of instruments, see ``snapshot``
+        for the windowed raw form)."""
+        m = self.metrics
         s = self.coalescer.stats()
-        s["entropy_ratio"] = (
-            self._entropy_raw / self._entropy_comp
-            if self._entropy_comp
-            else float("nan")
-        )
+        raw = m.get(obs_names.ING_ENTROPY_RAW)
+        comp = m.get(obs_names.ING_ENTROPY_COMP)
+        s["entropy_ratio"] = raw / comp if comp else float("nan")
         # payload bytes the entropy stage moved over the host link: the
         # on-device coder ships none, the zstd/zlib fallback ships them all
         on_device = self.cfg.archive.codec_name in ("rans", "none")
-        s["host_entropy_bytes"] = 0 if on_device else self._entropy_raw
+        s["host_entropy_bytes"] = 0 if on_device else int(raw)
         # retrieval side: what the salience index is saving on reads
         s["catalog_gops"] = len(self.catalog)
         s["catalog_bytes"] = self.catalog.bytes_indexed
-        s["plans_served"] = self._plans_served
-        s["planned_read_bytes"] = self._planned_bytes
-        s["planned_full_bytes"] = self._planned_full_bytes
-        s["retrieval_bytes_ratio"] = (
-            self._planned_bytes / self._planned_full_bytes
-            if self._planned_full_bytes
-            else float("nan")
-        )
+        s["plans_served"] = int(m.get(obs_names.RETR_PLANS))
+        planned = int(m.get(obs_names.RETR_PLANNED_BYTES))
+        full = int(m.get(obs_names.RETR_FULL_BYTES))
+        s["planned_read_bytes"] = planned
+        s["planned_full_bytes"] = full
+        s["retrieval_bytes_ratio"] = planned / full if full else float("nan")
         # durability tier: is the archive being continuously verified?
         s["stripes_retained"] = len(self._stripes)
         s["lost_csds"] = len(self._lost_csds)
-        s["scrub_rounds"] = self._scrub_rounds
-        s["scrub_bytes"] = self._scrub_bytes
-        s["scrub_findings"] = self._scrub_findings
-        s["scrub_repaired"] = self._scrub_repaired
-        s["rebuilt_shards"] = self._rebuilt_shards
-        s["rebuilt_bytes"] = self._rebuilt_bytes
-        s["stripes_retired"] = self._retired
+        s["scrub_rounds"] = int(m.get(obs_names.SCRUB_ROUNDS))
+        s["scrub_bytes"] = int(m.get(obs_names.SCRUB_BYTES))
+        s["scrub_findings"] = int(m.get(obs_names.SCRUB_FINDINGS))
+        s["scrub_repaired"] = int(m.get(obs_names.SCRUB_REPAIRED))
+        s["rebuilt_shards"] = int(m.get(obs_names.REBUILD_SHARDS))
+        s["rebuilt_bytes"] = int(m.get(obs_names.REBUILD_BYTES))
+        s["stripes_retired"] = int(m.get(obs_names.RETIRED_STRIPES))
         return s
+
+    def snapshot(self, reset: bool = False) -> Dict[str, object]:
+        """Raw registry snapshot (canonical ``repro.obs.names`` keys,
+        histograms as summary dicts).  ``reset=True`` gives windowed
+        semantics: counters and histograms zero after the read so the next
+        snapshot reports per-interval activity; gauges (occupancy, catalog
+        size) are levels and keep their value.  NOTE: ``stats()`` reads
+        the same counters, so a windowed reset clears its cumulative
+        totals too — pick one consumption style per instance.
+        """
+        return self.metrics.snapshot(reset=reset)

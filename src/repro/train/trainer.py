@@ -39,6 +39,7 @@ compression as an option.
 from __future__ import annotations
 
 import json
+import os
 import re
 import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -79,6 +80,8 @@ from repro.core.csd.placement import Placement, balance_streams, rebalance
 from repro.core.csd.retrieval import ReadPlan, plan_retrieval
 from repro.data.video import VideoStream, render_clip
 from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
+from repro.obs import OBS, enable as obs_enable
+from repro.obs.export import commit_jsonl, write_chrome_trace, write_jsonl
 from repro.train.checkpoint import (
     latest_step,
     load_checkpoint,
@@ -115,6 +118,12 @@ class TrainerConfig(NamedTuple):
     # current centroids is at most retire_max_novelty (None = age alone)
     retire_ttl_steps: int = 0
     retire_max_novelty: Optional[float] = None
+    # telemetry: enable the process-global repro.obs tier (spans + metrics
+    # + byte-flow ledger) for this trainer; each StepReport then carries a
+    # per-step snapshot and ``export_telemetry`` writes a Perfetto trace +
+    # fsync'd JSONL log.  Off by default: every instrumented site then
+    # costs a single branch.
+    telemetry: bool = False
 
 
 class StepReport(NamedTuple):
@@ -136,6 +145,10 @@ class StepReport(NamedTuple):
     scrub_findings: int = 0  # corruptions detected this step
     scrub_repaired: int = 0  # ... of which repaired in place + re-verified
     retired_stripes: int = 0  # stripes journaled as retired this step
+    # per-step telemetry snapshot when TrainerConfig.telemetry is on:
+    # {"stages": {span -> dur_us}, "metrics": registry snapshot,
+    #  "ledger": byte-flow report} — None when telemetry is off
+    telemetry: Optional[Dict] = None
 
 
 class SalientTrainer:
@@ -154,6 +167,8 @@ class SalientTrainer:
         self.streams = streams
         self.workdir = workdir
         self.mesh = mesh
+        if cfg.telemetry:
+            obs_enable()
         key = jax.random.PRNGKey(seed)
         kc, kk = jax.random.split(key)
         self.codec_params = init_codec(kc, cfg.codec)
@@ -523,113 +538,155 @@ class SalientTrainer:
             )
         return clips, plan
 
+    # ----------------------------------------------------------- telemetry
+    def _step_telemetry(self, ev0: int) -> Dict:
+        """Per-step snapshot for ``StepReport.telemetry``: this step's
+        span durations by stage, the metrics registry and the byte-flow
+        ledger (both cumulative — the ledger is a conservation ledger)."""
+        stages: Dict[str, float] = {}
+        for ev in OBS.tracer.events[ev0:]:
+            us = ev["dur_ns"] / 1e3
+            stages[ev["name"]] = stages.get(ev["name"], 0.0) + us
+        return {
+            "stages": stages,
+            "metrics": OBS.metrics.snapshot(),
+            "ledger": OBS.ledger.report(),
+        }
+
+    def export_telemetry(self, basename: str = "telemetry") -> Dict[str, str]:
+        """Write the telemetry captured so far: a Perfetto-loadable Chrome
+        trace (``<workdir>/<basename>_trace.json``) plus the JSONL event
+        log, committed through this trainer's journal (crc32 + fsync
+        discipline — the log survives exactly like the archive does).
+        Returns the paths written."""
+        trace_path = os.path.join(self.workdir, f"{basename}_trace.json")
+        write_chrome_trace(trace_path, OBS)
+        jsonl_path = commit_jsonl(self.journal, OBS, f"{basename}.jsonl")
+        return {"trace": trace_path, "jsonl": jsonl_path}
+
     # -------------------------------------------------------------- step
     def run_step(self, shard_times: Optional[List[float]] = None) -> StepReport:
         cfg = self.cfg
         step_key = jax.random.PRNGKey(self.step * 977 + 13)
         params = self._params()
+        ev0 = len(OBS.tracer.events)
 
-        # 1. ingest one clip per stream
-        clips = {
-            s.stream_id: render_clip(s, self.step * cfg.clip_len, cfg.clip_len)
-            for s in self.streams
-        }
+        with OBS.span("trainer.step", step=self.step):
+            # 1. ingest one clip per stream
+            with OBS.span("trainer.ingest_clips", streams=len(self.streams)):
+                clips = {
+                    s.stream_id: render_clip(
+                        s, self.step * cfg.clip_len, cfg.clip_len
+                    )
+                    for s in self.streams
+                }
 
-        # 2. shared backbone features -> exemplar selection (per stream,
-        #    pooled over space/time)
-        feats = []
-        for sid, clip in clips.items():
-            f = extract_features(params["extractor"], clip)  # (T, h, w, C)
-            feats.append(f.mean(axis=(0, 1, 2)))
-        fmat = jnp.stack(feats)  # (n_streams, C)
-        split = select_exemplars(
-            step_key,
-            fmat,
-            k=min(cfg.exemplar_k, fmat.shape[0]),
-            n_train=min(cfg.n_train_exemplars, fmat.shape[0]),
-            known_centroids=self.known_centroids,
-        )
-        self.known_centroids = split.centroids
-        train_ids = [int(i) for i in np.asarray(split.train_idx)]
-        archive_ids = [int(i) for i in np.asarray(split.archive_idx)]
-
-        # 3. replay: pull the most-novel archived GOPs (vs the CURRENT
-        # centroids) back through the retrieval planner — only the planned
-        # shard subsets are restored, so replay moves catalog-priced bytes,
-        # not whole stripes
-        replay_clips: List[jax.Array] = []
-        plan = None
-        if (
-            cfg.replay_every
-            and self.step % cfg.replay_every == cfg.replay_every - 1
-        ):
-            replay_clips, plan = self._replay_from_archive()
-
-        # 3b. background scrub round (interleaves with replay; both are
-        # byte-budgeted so recovery traffic never starves training reads)
-        scrub = None
-        if cfg.scrub_every and self.step % cfg.scrub_every == cfg.scrub_every - 1:
-            scrub = self._scrub_round()
-
-        # 4. codec training on the novel clips + replayed exemplars (Alg. 2)
-        batch = [clips[self.streams[i].stream_id] for i in train_ids]
-        want_shape = batch[0].shape if batch else None
-        n_replayed = 0  # only GOPs that actually joined the batch count
-        for g in replay_clips:
-            g = jnp.squeeze(g, axis=1)  # (T, 1, H, W, 3) -> (T, H, W, 3)
-            # GOPs archived under a different clip geometry can't join this
-            # batch; they were still read, so the byte counters keep them
-            if want_shape is None or g.shape == want_shape:
-                batch.append(g)
-                n_replayed += 1
-        train_clips = jnp.stack(batch, axis=1)  # (T, B, H, W, 3)
-        self.trainable, self.opt_state, metrics = codec_train_step(
-            self.trainable, self.frozen, self.opt_state, self.train_cfg, train_clips
-        )
-
-        # 5. archive ingest: codec-encode the known clips, coalesce ragged
-        # GOPs across streams into full stripes; every completed stripe is
-        # packed + sealed + parity-coded in ONE fused kernel launch (per
-        # mesh shard when a storage mesh is attached) and catalog-indexed
-        # with the exemplar stage's feature/novelty descriptors
-        params = self._params()
-        recon_psnrs = []
-        ready = []
-        for i in archive_ids:
-            sid = self.streams[i].stream_id
-            frames = clips[sid][:, None]  # (T, 1, H, W, 3)
-            flat, manifest, recons = encode_gop_payload(
-                params, frames, self.archive_cfg
-            )
-            recon_psnrs.append(float(psnr(recons, frames)))
-            ready += self.coalescer.add(
-                sid, flat, manifest,
-                meta={
-                    "shard": self.placement.assignment[i],
-                    "feature": np.asarray(fmat[i], np.float32),
-                    "novelty": float(np.asarray(split.novelty)[i]),
-                },
-            )
-        n_sealed, total_bytes = self._seal_and_commit(ready)
-
-        # 6. straggler handling (dead shards feed the next replay's plan)
-        rebalanced = False
-        if shard_times is not None:
-            status = self.monitor.update(shard_times)
-            self._dead_shards = list(status.dead)
-            if status.stragglers or status.dead:
-                self.placement = rebalance(
-                    self.placement,
-                    [s.fps for s in self.streams],
-                    status.speed,
+            # 2. shared backbone features -> exemplar selection (per stream,
+            #    pooled over space/time)
+            with OBS.span("trainer.features"):
+                feats = []
+                for sid, clip in clips.items():
+                    f = extract_features(params["extractor"], clip)
+                    feats.append(f.mean(axis=(0, 1, 2)))
+                fmat = jnp.stack(feats)  # (n_streams, C)
+                split = select_exemplars(
+                    step_key,
+                    fmat,
+                    k=min(cfg.exemplar_k, fmat.shape[0]),
+                    n_train=min(cfg.n_train_exemplars, fmat.shape[0]),
+                    known_centroids=self.known_centroids,
                 )
-                rebalanced = True
+                self.known_centroids = split.centroids
+                train_ids = [int(i) for i in np.asarray(split.train_idx)]
+                archive_ids = [int(i) for i in np.asarray(split.archive_idx)]
 
-        # 7. checkpoint (drains stripes, then retires expired ones)
-        self._last_retired = 0
-        self.step += 1
-        if self.step % cfg.checkpoint_every == 0:
-            self.checkpoint()
+            # 3. replay: pull the most-novel archived GOPs (vs the CURRENT
+            # centroids) back through the retrieval planner — only the
+            # planned shard subsets are restored, so replay moves
+            # catalog-priced bytes, not whole stripes
+            replay_clips: List[jax.Array] = []
+            plan = None
+            if (
+                cfg.replay_every
+                and self.step % cfg.replay_every == cfg.replay_every - 1
+            ):
+                with OBS.span("trainer.replay"):
+                    replay_clips, plan = self._replay_from_archive()
+
+            # 3b. background scrub round (interleaves with replay; both are
+            # byte-budgeted so recovery traffic never starves training reads)
+            scrub = None
+            if (
+                cfg.scrub_every
+                and self.step % cfg.scrub_every == cfg.scrub_every - 1
+            ):
+                with OBS.span("trainer.scrub"):
+                    scrub = self._scrub_round()
+
+            # 4. codec training on the novel clips + replayed exemplars
+            with OBS.span("trainer.codec_train"):
+                batch = [clips[self.streams[i].stream_id] for i in train_ids]
+                want_shape = batch[0].shape if batch else None
+                n_replayed = 0  # only GOPs that actually join the batch
+                for g in replay_clips:
+                    g = jnp.squeeze(g, axis=1)  # (T,1,H,W,3) -> (T,H,W,3)
+                    # GOPs archived under a different clip geometry can't
+                    # join this batch; they were still read, so the byte
+                    # counters keep them
+                    if want_shape is None or g.shape == want_shape:
+                        batch.append(g)
+                        n_replayed += 1
+                train_clips = jnp.stack(batch, axis=1)  # (T, B, H, W, 3)
+                self.trainable, self.opt_state, metrics = codec_train_step(
+                    self.trainable, self.frozen, self.opt_state,
+                    self.train_cfg, train_clips
+                )
+
+            # 5. archive ingest: codec-encode the known clips, coalesce
+            # ragged GOPs across streams into full stripes; every completed
+            # stripe is packed + sealed + parity-coded in ONE fused kernel
+            # launch (per mesh shard when a storage mesh is attached) and
+            # catalog-indexed with the exemplar stage's descriptors
+            with OBS.span("trainer.archive", gops=len(archive_ids)):
+                params = self._params()
+                recon_psnrs = []
+                ready = []
+                for i in archive_ids:
+                    sid = self.streams[i].stream_id
+                    frames = clips[sid][:, None]  # (T, 1, H, W, 3)
+                    flat, manifest, recons = encode_gop_payload(
+                        params, frames, self.archive_cfg
+                    )
+                    recon_psnrs.append(float(psnr(recons, frames)))
+                    ready += self.coalescer.add(
+                        sid, flat, manifest,
+                        meta={
+                            "shard": self.placement.assignment[i],
+                            "feature": np.asarray(fmat[i], np.float32),
+                            "novelty": float(np.asarray(split.novelty)[i]),
+                        },
+                    )
+                n_sealed, total_bytes = self._seal_and_commit(ready)
+
+            # 6. straggler handling (dead shards feed the next replay plan)
+            rebalanced = False
+            if shard_times is not None:
+                status = self.monitor.update(shard_times)
+                self._dead_shards = list(status.dead)
+                if status.stragglers or status.dead:
+                    self.placement = rebalance(
+                        self.placement,
+                        [s.fps for s in self.streams],
+                        status.speed,
+                    )
+                    rebalanced = True
+
+            # 7. checkpoint (drains stripes, then retires expired ones)
+            self._last_retired = 0
+            self.step += 1
+            if self.step % cfg.checkpoint_every == 0:
+                with OBS.span("trainer.checkpoint"):
+                    self.checkpoint()
 
         return StepReport(
             step=self.step,
@@ -654,4 +711,5 @@ class SalientTrainer:
                 sum(f.repaired for f in scrub.findings) if scrub else 0
             ),
             retired_stripes=self._last_retired,
+            telemetry=self._step_telemetry(ev0) if OBS.enabled else None,
         )
