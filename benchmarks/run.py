@@ -1,9 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_kernels.json``
-(per-bench GB/s, launch counts, device count) at the repo root so the kernel
-perf trajectory is machine-readable across PRs.  Set BENCH_FULL=1 for the
-longer codec-training variant of the Fig. 8/9 rate-distortion sweep.
+Prints ``name,us_per_call,derived`` CSV and records per-bench metrics
+(GB/s, launch counts, device count) so the kernel perf trajectory is
+machine-readable across PRs.  Fresh metrics are always written to a temp
+file under the system tempdir; the committed ``BENCH_kernels.json`` at the
+repo root is only replaced — atomically, via ``os.replace`` — on an
+explicit ``--update`` run whose gates all pass.  Nothing is ever left
+at the repo root otherwise (earlier revisions parked a stray
+``BENCH_kernels.json.fresh`` there on gate failure).  Set BENCH_FULL=1
+for the longer codec-training variant of the Fig. 8/9 rate-distortion
+sweep.
 
 ``--check`` turns the committed BENCH_kernels.json into a regression gate:
 the fresh run is diffed against it per bench and the process exits nonzero
@@ -39,17 +45,29 @@ BYTES_THRESHOLD = 1.1  # >10% more bytes_moved_ratio fails --check (exact metric
 
 # Absolute gates (fresh run vs a fixed bound, no committed baseline
 # needed): the one-launch archival bench must KEEP its structural claim —
-# at most one kernel launch per K-stripe batch — and hold an honest
-# wall-clock floor vs the host codec.  The floor is set from measured
-# CPU-interpret runs (vs_host ~0.25-0.35 with +-15% machine noise), NOT at
-# the >=1.0 TPU target: on a single-core interpret runner the bench is
-# compute-bound on the shared rANS loop, so the dispatch/HBM savings the
-# fusion buys cannot show up in wall clock (see the row's gap_note).
+# at most one kernel launch per K-stripe batch — and both entropy benches
+# must hold the two-phase-encode win (PR 9) from both sides: wall-clock
+# ceilings and exactness, plus vs-host floors set from measured
+# CPU-interpret runs (entropy ~0.53-0.60, fused ~0.45-0.55, with +-15%
+# machine noise), NOT at the >=1.0 TPU target: on a single-core interpret
+# runner the bench is compute-bound on the shared rANS loop, so the
+# dispatch/HBM savings the fusion buys cannot fully show up in wall clock
+# (see the fused row's gap_note).
 ABS_GATES = {
+    # the standalone coder: >=1.5x over the pre-PR-9 24.7ms committed
+    # baseline, holding >=0.5x of host zlib with bit-exact streams
+    "entropy_fused": (
+        ("us_per_call", "ceiling", 16500.0),
+        ("gbps", "floor", 0.0158),
+        ("vs_host_speed", "floor", 0.5),
+        ("exact", "floor", 1.0),
+        ("exact_recip", "floor", 1.0),
+    ),
     "entropy_seal_fused": (
         ("launches", "ceiling", 1.0),
         ("launches_per_stripe", "ceiling", 1.0),
-        ("vs_host_speed", "floor", 0.15),
+        ("us_per_stripe", "ceiling", 22000.0),
+        ("vs_host_speed", "floor", 0.3),
     ),
     # Durability tier (scrub + rebuild under chaos): every injected
     # corruption must be detected (the crc/syndrome layers are exact, so
@@ -85,7 +103,13 @@ def _force_multidevice_host() -> None:
         ).strip()
 
 
-def _write_kernels_json(metrics: dict) -> None:
+def _dump_fresh(metrics: dict) -> str:
+    """Write the fresh metrics to a temp file under the SYSTEM tempdir
+    (never the repo root) and return its path.  This is the only copy a
+    non-``--update`` run produces, so an aborted or gate-failed run cannot
+    litter the checkout."""
+    import tempfile
+
     import jax
 
     out = {
@@ -93,10 +117,23 @@ def _write_kernels_json(metrics: dict) -> None:
         "backend": jax.default_backend(),
         "benches": metrics,
     }
-    with open(_JSON_PATH, "w") as f:
+    fd, path = tempfile.mkstemp(prefix="BENCH_kernels.", suffix=".json")
+    with os.fdopen(fd, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {_JSON_PATH} ({len(metrics)} benches)", flush=True)
+    return path
+
+
+def _commit_kernels_json(fresh_path: str, n_benches: int) -> None:
+    """Atomically replace the committed baseline with the fresh metrics:
+    copy into a sibling temp file in the repo root, then ``os.replace`` so
+    readers never observe a torn BENCH_kernels.json."""
+    import shutil
+
+    tmp = _JSON_PATH + ".tmp"
+    shutil.copyfile(fresh_path, tmp)
+    os.replace(tmp, _JSON_PATH)
+    print(f"# wrote {_JSON_PATH} ({n_benches} benches)", flush=True)
 
 
 def _load_committed() -> dict:
@@ -215,6 +252,7 @@ def _print_gate_state(gate_rows: list) -> None:
 
 def main() -> None:
     check = "--check" in sys.argv
+    update = "--update" in sys.argv
     _force_multidevice_host()
 
     from benchmarks import kernels_bench, paper_tables
@@ -260,18 +298,19 @@ def main() -> None:
         regressions += _check_abs_gates(kernels_bench.JSON_METRICS, gate_rows)
         if regressions:
             _print_gate_state(gate_rows)
+    # fresh metrics always land in the system tempdir (CI can upload them
+    # from there); the committed baseline is replaced only on an explicit
+    # --update whose gates all passed, so a failed or exploratory run can
+    # neither ratchet the baseline down nor leave debris at the repo root
+    fresh_path = _dump_fresh(kernels_bench.JSON_METRICS)
     if regressions:
-        # keep the committed baseline intact so a rerun still gates against
-        # the good numbers instead of ratcheting down to the regressed ones
-        # — but park the fresh numbers next to it so CI can upload what the
-        # failed run actually measured
-        with open(_JSON_PATH + ".fresh", "w") as f:
-            json.dump({"benches": kernels_bench.JSON_METRICS}, f, indent=2,
-                      sort_keys=True)
-        print(f"# NOT overwriting {_JSON_PATH} (regression gate failed); "
-              f"fresh metrics in {_JSON_PATH}.fresh")
+        print(f"# NOT touching {_JSON_PATH} (regression gate failed); "
+              f"fresh metrics in {fresh_path}")
+    elif update:
+        _commit_kernels_json(fresh_path, len(kernels_bench.JSON_METRICS))
     else:
-        _write_kernels_json(kernels_bench.JSON_METRICS)
+        print(f"# fresh metrics in {fresh_path} "
+              f"(pass --update to commit them to {_JSON_PATH})")
     if failures or regressions:
         sys.exit(1)
 

@@ -36,6 +36,13 @@ def as_payload_list(payloads) -> List[jax.Array]:
     """Normalize ragged stripe payloads (list/tuple or stacked (S, N) array)
     to a list of flat int8 arrays — shared by the seal and entropy ops."""
     if isinstance(payloads, (list, tuple)):
-        return [jnp.asarray(p).reshape(-1).astype(jnp.int8) for p in payloads]
+        # already-normalized payloads (the hot path) pass through without
+        # paying a per-shard reshape/astype dispatch
+        return [
+            p
+            if isinstance(p, jax.Array) and p.dtype == jnp.int8 and p.ndim == 1
+            else jnp.asarray(p).reshape(-1).astype(jnp.int8)
+            for p in payloads
+        ]
     arr = jnp.asarray(payloads)
     return [arr[s].reshape(-1).astype(jnp.int8) for s in range(arr.shape[0])]

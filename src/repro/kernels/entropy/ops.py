@@ -31,8 +31,12 @@ construction.
 Compaction of the dense emission buffer is a two-level rank-select *gather*
 (scatter-free: XLA scatters serialize on TPU and CPU alike): the k-th
 output word's row comes from a scatter-max + running-max over the 512-odd
-row offsets, and its lane from a 7-step branchless binary search over the
-in-row prefix sums.  ``core_fn`` overrides the coder launch itself; the
+row offsets, and its lane from a branchless binary search over the in-row
+prefix sums (5 u8 gather rounds to an aligned 4-lane block, one u32 gather
+for the block's boundary prefixes).  The search width is *tiered*: the
+pack's static capacity is the raw-skip worst case, and a ``lax.cond`` drops
+to half width whenever the batch's measured emission counts fit — which is
+what lets the encode pipeline run with no mid-stream host sync.  ``core_fn`` overrides the coder launch itself; the
 sharded path (``repro.distributed.archival``) passes a shard_map'd wrapper
 with the same signature, exactly like ``seal_fn``/``unseal_fn`` in the
 seal pipeline.
@@ -63,6 +67,7 @@ __all__ = [
     "MAX_ROWS",
     "rows_for",
     "cap_for",
+    "stream_word_cap",
     "encode_payloads",
     "decode_payloads",
     "entropy_traffic",
@@ -90,13 +95,24 @@ def rows_for(n_bytes: int) -> int:
 
 
 def cap_for(n_words: int) -> int:
-    """Pow2 word capacity bucket for the compaction stage (>= 1).
+    """Pow2 word capacity bucket (>= 1) for a known emission count.
 
-    The rank-select pack is jit-specialized on its output width; bucketing
-    the emitted word count caps the trace count at log2(max_words), same
-    as ``rows_for`` does for the coder launch.
+    Legacy sizing helper: the encode path used to sync the emission counts
+    to the host mid-pipeline to jit-specialize the pack on this bucket; it
+    now packs at the static worst case (:func:`stream_word_cap`) with the
+    tiered rank-select, so no device->host round-trip splits the encode.
+    Kept for callers sizing scratch buffers off a known word count.
     """
     return 1 << max(0, int(n_words - 1).bit_length())
+
+
+def stream_word_cap(T: int) -> int:
+    """Worst-case u16 stream words worth packing for a T-row shard (any
+    shard emitting more compresses to >= its raw size and is stored raw,
+    so capping the pack here discards only streams the raw-skip select
+    would discard anyway — the packed words are position-exact for ANY
+    cap, see :func:`_pack_rank_impl`)."""
+    return max(1, (T * N_LANES - HEADER_BYTES) // 2)
 
 
 def _u16_to_u8(w: jax.Array) -> jax.Array:
@@ -121,10 +137,12 @@ def _u32_to_u8(w: jax.Array) -> jax.Array:
 def _encode_core(codes, n_valid, *, use_pallas: bool, interpret: bool,
                  division: Optional[str] = None):
     if division is None:
-        # interpret/CPU: LLVM's udiv is the fewest ops; real TPU: Mosaic
-        # has no integer divide, the repaired-f32 reciprocal is the fast
-        # exact replacement (all three strategies are bit-identical)
-        division = "divide" if interpret else "rcp32"
+        # interpret/CPU: the shifted-reciprocal mulhi path beats LLVM's
+        # udiv ~18% — x86 has no vector u32 divide, so udiv scalarizes
+        # while mulhi stays SIMD; real TPU: Mosaic has no integer divide,
+        # the repaired-f32 reciprocal is the fast exact replacement (all
+        # three strategies are bit-identical)
+        division = "reciprocal" if interpret else "rcp32"
     if use_pallas:
         return rans_encode_pallas(
             codes, n_valid, division=division, interpret=interpret
@@ -150,13 +168,7 @@ def _decode_core(words, freq, states, n_valid, *, version: int, rows: int,
     return _ref.rans_decode_ref(words, freq, states, n_valid, rows=rows)
 
 
-@jax.jit
-def _emission_counts(mask):
-    """(S, T, 128) emission mask -> (S,) emitted word counts."""
-    return (mask != 0).sum(axis=(1, 2))
-
-
-def _pack_rank_impl(mask, *, cap: int):
+def _pack_rank_impl(mask, *, cap: int, tiered: bool = False):
     """Stage 1 of the rank-select pack: per-output-slot source positions.
 
     For each output slot k the source row is recovered from a scatter-max
@@ -164,54 +176,111 @@ def _pack_rank_impl(mask, *, cap: int):
     cumulative-bucket fill the decoder uses for its slot table), and the
     source lane by a branchless bit-step lower bound over the u8 in-row
     prefix sums — every wide op is a gather, which vectorizes where a
-    word-per-word scatter would serialize.
+    word-per-word scatter would serialize.  (A one-scatter inverse — write
+    each word at ``row_off + rank`` — measured ~1.6x SLOWER than these
+    gathers at the fused kernel's batch size: XLA:CPU serializes the 2M
+    element stores.)
+
+    ``tiered=True`` (both the fused kernel and the host pack, whose
+    ``cap`` is the static worst-case ``stream_word_cap``, ~2.5x a typical
+    emission count) bounds the per-slot work by the *measured* batch: when
+    no shard emits more than cap/2 words a ``lax.cond`` runs the
+    rank-select at half width and zero-pads — slots past every shard's
+    ``n_words`` are zeroed by the word pass anyway, so the outputs are
+    bit-identical.  Packing at the static worst case is what lets the
+    encode pipeline run sync-free: no device->host emission-count round
+    trip is needed to size the pack buffer.
     """
     S, T, L = mask.shape
     lm = mask != 0                                           # (S, T, L)
     # u8 in-row inclusive prefix (row counts <= 128 fit): 4x less traffic
     # for the rank-select gathers below, and the per-row totals fall out
-    # of its last lane for free
+    # of its last lane for free.  (A log-depth shift-add spelling of this
+    # prefix measured 3x faster in isolation but SLOWER in situ — its 7
+    # materialized intermediates break the fusion with the rank gathers
+    # below — so the associative-scan form stands.)
     icsum3 = jnp.cumsum(lm.astype(jnp.uint8), axis=2, dtype=jnp.uint8)
     cnt = icsum3[:, :, L - 1].astype(jnp.int32)              # (S, T)
     row_off = jnp.cumsum(cnt, axis=1) - cnt                  # exclusive
     n_words = cnt.sum(axis=1)                                # (S,)
-    lane_lens = lm.sum(axis=1, dtype=jnp.int32)              # (S, L)
-
-    # source row of output k: last row whose offset is <= k
-    rows_iota = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (S, T))
-    marks = (
-        jnp.zeros((S, cap), jnp.int32)
-        .at[jnp.arange(S)[:, None], row_off]
-        .max(rows_iota, mode="drop")
-    )
-    row_id = jax.lax.cummax(marks, axis=1)                   # (S, cap)
-    k = jnp.arange(cap, dtype=jnp.int32)[None, :]
-    j1 = (
-        k - jnp.take_along_axis(row_off, row_id, axis=1) + 1
-    ).astype(jnp.uint8)                                      # in-row rank + 1
-
-    # source lane: smallest l with icsum[row, l] >= j + 1 (branchless
-    # bit-step lower bound: 3 vector ops per round, 7 rounds = 128 lanes)
+    # per-lane emission counts, log-depth halving tree: XLA:CPU lowers the
+    # strided axis-1 reduce of the (S, T, L) mask to column loads that
+    # don't vectorize (2.6x slower than this tree at the fused batch size)
+    x = lm.astype(jnp.int32)
+    while x.shape[1] > 1:
+        h = x.shape[1] // 2
+        x = x[:, :h] + x[:, h:]
+    lane_lens = x[:, 0]                                      # (S, L)
     icsum = icsum3.reshape(S, T * L)
-    base = row_id * L
-    lane = jnp.zeros((S, cap), jnp.int32)
-    for b in (64, 32, 16, 8, 4, 2, 1):
-        t = lane | b
-        v = jnp.take_along_axis(icsum, base + t - 1, axis=1)
-        lane = jnp.where(v < j1, t, lane)
-    return base + lane, n_words, lane_lens
+
+    # u32 view of the prefix grid: the final binary-search level reads 4
+    # adjacent u8 prefixes as one aligned word (bitcast semantics are
+    # HLO-level deterministic: element 0 -> least significant byte)
+    icsum4 = jax.lax.bitcast_convert_type(
+        icsum3.reshape(S, T * L // 4, 4), jnp.uint32
+    )
+
+    def src_for(c: int):
+        # source row of output k (k < c): last row whose offset is <= k.
+        # Row ids fit u16 at any T below the MAX_ROWS edge, so the
+        # scatter-max + running max scan move half the bytes of the i32
+        # spelling (dtype picked on the static T)
+        idt = jnp.uint16 if T <= 0xFFFF else jnp.int32
+        rows_iota = jnp.broadcast_to(jnp.arange(T, dtype=idt), (S, T))
+        marks = (
+            jnp.zeros((S, c), idt)
+            .at[jnp.arange(S)[:, None], row_off]
+            .max(rows_iota, mode="drop")
+        )
+        row_id = jax.lax.cummax(marks, axis=1).astype(jnp.int32)  # (S, c)
+        k = jnp.arange(c, dtype=jnp.int32)[None, :]
+        j1 = (
+            k - jnp.take_along_axis(row_off, row_id, axis=1) + 1
+        ).astype(jnp.uint8)                                  # in-row rank + 1
+
+        # source lane: smallest l with icsum[row, l] >= j + 1.  Branchless
+        # bit-step lower bound, wide ops only: 5 u8 gather rounds narrow to
+        # an aligned 4-lane block, then ONE u32 gather reads that block's
+        # remaining 3 boundary prefixes and 2 compare-adds finish the rank
+        # — 6 gathers total where the naive 7-round search pays 7
+        base = row_id * L
+        lane = jnp.zeros((S, c), jnp.int32)
+        for b in (64, 32, 16, 8, 4):
+            t = lane | b
+            v = jnp.take_along_axis(icsum, base + t - 1, axis=1)
+            lane = jnp.where(v < j1, t, lane)
+        quad = jnp.take_along_axis(
+            icsum4, (base >> 2) + (lane >> 2), axis=1
+        )
+        j32 = j1.astype(jnp.uint32)
+        lane += (
+            ((quad & jnp.uint32(0xFF)) < j32).astype(jnp.int32)
+            + (((quad >> jnp.uint32(8)) & jnp.uint32(0xFF)) < j32).astype(
+                jnp.int32
+            )
+            + (((quad >> jnp.uint32(16)) & jnp.uint32(0xFF)) < j32).astype(
+                jnp.int32
+            )
+        )
+        return base + lane
+
+    half = cap // 2
+    if tiered and half >= 1:
+        src = jax.lax.cond(
+            jnp.max(n_words) <= half,
+            lambda: jnp.pad(src_for(half), ((0, 0), (0, cap - half))),
+            lambda: src_for(cap),
+        )
+    else:
+        src = src_for(cap)
+    return src, n_words, lane_lens
 
 
-# Jit'd entry point for the host-side pack; the plain ``_pack_rank_impl``
-# body is also traced *inside* the one-launch entropy+seal kernel
-# (``repro.kernels.fused``), where an extra jit boundary would be a bug.
-_pack_rank = jax.jit(_pack_rank_impl, static_argnames=("cap",))
 
 
 def _pack_bytes_impl(words, src, n_words, lane_lens, freq, states):
     """Stage 2: gather the words into stream order and serialize header +
-    word area to bytes (kept as a separate dispatch so XLA cannot re-fuse
-    the rank-select producers into the byte pass and recompute them)."""
+    word area to bytes."""
     S, T, L = words.shape
     cap = src.shape[1]
     w = jnp.take_along_axis(words.reshape(S, T * L), src, axis=1)
@@ -228,18 +297,36 @@ def _pack_bytes_impl(words, src, n_words, lane_lens, freq, states):
     return jnp.concatenate([header, _u16_to_u8(comp_words)], axis=1)
 
 
-_pack_bytes = jax.jit(_pack_bytes_impl)
-
-
+@functools.partial(jax.jit, static_argnames=("cap",))
 def _pack_streams(words, mask, freq, states, *, cap: int):
-    """Dense emissions -> padded compressed bytes (S, HEADER + 2*cap).
+    """One-dispatch host pack: tiered rank-select + byte serialize.
 
-    Rank-select compaction in decoder-read (row-major) order, scatter-free
-    on the wide axis (see :func:`_pack_rank`).  ``cap`` must be >= the
-    largest per-shard word count (pow2-bucketed via :func:`cap_for`).
+    Returns (packed int8 streams (S, HEADER + 2*cap) — int8 so the exact-
+    length shard slices need no per-shard cast — and the (S,) emission
+    counts).  The plain ``_pack_rank_impl``/``_pack_bytes_impl`` bodies are
+    also traced *inside* the one-launch entropy+seal kernel
+    (``repro.kernels.fused``), where an extra jit boundary would be a bug;
+    with the tiered rank-select the single-jit spelling measures identical
+    to split dispatches, so the host path takes the fewer-roundtrips form.
     """
-    src, n_words, lane_lens = _pack_rank(mask, cap=cap)
-    return _pack_bytes(words, src, n_words, lane_lens, freq, states)
+    src, n_words, lane_lens = _pack_rank_impl(mask, cap=cap, tiered=True)
+    comp = _pack_bytes_impl(words, src, n_words, lane_lens, freq, states)
+    return comp.astype(jnp.int8), n_words
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def _stage_codes(flats, rows: int):
+    """Pad ragged shard payloads to the (rows, 128) lane grid in ONE traced
+    dispatch (shape-keyed cache: one trace per distinct payload-length mix,
+    the same bound eager per-shard pads paid in per-op dispatches)."""
+    return jnp.stack(
+        [
+            jnp.pad(f, (0, rows * N_LANES - f.shape[0])).reshape(
+                rows, N_LANES
+            )
+            for f in flats
+        ]
+    )
 
 
 def _parse_header(comp):
@@ -312,8 +399,10 @@ def encode_payloads(
     """rANS-encode S ragged shard payloads in one fused launch.
 
     payloads: list of flat int8 arrays (ragged ok) or an (S, N) int8 array.
-    Returns (compressed int8 streams — exact length, header included — and
-    per-shard metas ``{"codec", "version", "n_raw", "n_comp", "rows"}``).
+    Returns (compressed int8 streams — exact length, header included; coded
+    shards come back as host numpy slices of the one blocking fetch, raw
+    shards pass their device payload through — and per-shard metas
+    ``{"codec", "version", "n_raw", "n_comp", "rows"}``).
     ``rows`` is the padded lane-row count the whole stripe was coded at;
     decode needs it back.  ``version`` is the stream format version the
     decoder dispatches on.  ``core_fn`` overrides the coder launch (the
@@ -329,12 +418,7 @@ def encode_payloads(
             f"payload of {max(n_raw)} bytes needs {T} lane rows (max "
             f"{MAX_ROWS}); split it across more stripe shards"
         )
-    codes = jnp.stack(
-        [
-            jnp.pad(f, (0, T * N_LANES - n)).reshape(T, N_LANES)
-            for f, n in zip(flats, n_raw)
-        ]
-    )
+    codes = _stage_codes(flats, rows=T)
     n_valid = jnp.asarray(n_raw, jnp.int32).reshape(-1, 1)
     if core_fn is None:
         core_fn = functools.partial(
@@ -342,10 +426,17 @@ def encode_payloads(
             interpret=use_interpret(interpret), division=division,
         )
     words, mask, freq, states = core_fn(codes, n_valid)
-    n_words = [int(n) for n in np.asarray(_emission_counts(mask))]
-    comp_pad = _pack_streams(
-        words, mask, freq, states, cap=cap_for(max(n_words))
+    # pack at the static raw-skip worst case (no mid-pipeline host sync to
+    # size the buffer — the tiered rank-select recovers the tight-bucket
+    # cost whenever the batch's true counts allow)
+    comp_pad, n_words_dev = _pack_streams(
+        words, mask, freq, states, cap=stream_word_cap(T)
     )
+    # ONE blocking device->host fetch covers the stream bytes and the
+    # emission counts the manifest needs; slicing the host buffer is then
+    # free, where per-shard eager device slices each paid a dispatch
+    buf = np.asarray(comp_pad)
+    n_words = [int(n) for n in np.asarray(n_words_dev)]
     n_comp = [HEADER_BYTES + 2 * nw for nw in n_words]
     comps, metas = [], []
     for s, (nr, nc) in enumerate(zip(n_raw, n_comp)):
@@ -359,7 +450,7 @@ def encode_payloads(
                  "n_raw": nr, "n_comp": nr, "rows": T}
             )
         else:
-            comps.append(comp_pad[s, :nc].astype(jnp.int8))
+            comps.append(buf[s, :nc])
             metas.append(
                 {"codec": "rans", "version": STREAM_VERSION,
                  "n_raw": nr, "n_comp": nc, "rows": T}

@@ -6,29 +6,60 @@ feeds S x 128 lanes to the vector unit instead of idling per shard.  A
 shard's flat int8 payload is laid out as (T, 128) rows whose 128 columns
 are 128 *independent* rANS lanes (lane l owns bytes l, 128+l, 256+l, ...),
 the interleaved layout from Giesen's SIMD rANS with the lane axis mapped
-onto the TPU lane dimension.  The loop *schedule* is a static knob
-(``rows_per_step``): on TPU each trip advances an (N_GROUPS=8, 128)
-lane-group tile — one full sublane-by-lane vreg — cutting the sequential
-trip count from T to T/8; under interpret (CPU CI) each trip advances one
-row, because many tiny ops schedule ~5x cheaper there than few fat fused
-bodies.  The schedule cannot change a single output bit — only which ops
-compute them — and the suite asserts both schedules bit-identical.
-(Widening the *state* interleave instead — G x 128 independent streams —
-was measured and rejected: every extra rANS stream wastes >= 16 bits of
-initial-state flush for zero entropy gain, ~2.7 KiB per 64 KiB shard,
-about a 10% compression-ratio loss.)
+onto the TPU lane dimension.
+
+The coding loop is a *two-phase* encode with no ``fori_loop`` anywhere:
+
+  phase 1 computes the whole row/lane schedule as batched tensor ops —
+  the (T, S, 128) validity of every position against ``n_valid`` in one
+  iota compare, and one select that swaps every invalid position's
+  pregathered symbol table entry for the *identity sentinel*
+  (f = PROB_SCALE, cum = 0: the state update collapses to
+  x' = x + q*(M - f) + c = x and the renorm test (x >> 20) >= PROB_SCALE
+  cannot fire for any 32-bit state, so the step is an exact no-op and the
+  lane freezes).  That removes every per-lane mask, compare and select
+  from the sequential region: boundary rows, fully-padded rows and
+  ``n_valid = 0`` dummy shards all ride the same unmasked body;
+
+  phase 2 is a minimal-carry ``lax.scan`` over the rows (reverse order —
+  rANS encodes backwards so decode streams forwards) whose carry is ONLY
+  the (S, 128) lane states; the per-row emitted words and emission masks
+  leave through the scan's stacked outputs instead of a dense carry
+  buffer threaded through a ``fori_loop``, which is what let XLA:CPU
+  vectorize the row I/O instead of serializing a (T, S, 128)
+  dynamic-update chain.  The per-lane word counts and exclusive stream
+  offsets then fall out of the emission mask as batched prefix sums, and
+  ``ops.py`` writes every output word with one rank-select gather pass
+  against those precomputed offsets.
+
+The scan *step width* stays a static knob (``rows_per_step``): each scan
+trip advances that many rows, 1 under interpret (many tiny ops schedule
+cheaper than few fat fused bodies on CPU) and an (N_GROUPS=8, 128)
+sublane-by-lane vreg tile on TPU.  The schedule cannot change a single
+output bit — only which ops compute them — and the suite asserts both
+schedules bit-identical.  (Widening the *state* interleave instead —
+G x 128 independent streams — was measured and rejected: every extra rANS
+stream wastes >= 16 bits of initial-state flush for zero entropy gain,
+~2.7 KiB per 64 KiB shard, about a 10% compression-ratio loss.)
 
 Per shard the kernel runs three fused stages without leaving VMEM:
 
-  1. histogram over all T*128 bytes as a one-hot *matmul*: the byte splits
+  1. histogram over all T*128 bytes, by one of two exact, bit-identical
+     strategies (the ``histogram`` knob, defaulted per backend like
+     ``division``): ``"dot"`` — the one-hot *matmul*: the byte splits
      into hi/lo nibbles and hist.reshape(16, 16) = onehot(hi)^T @
      onehot(lo), an (N, 16) x (N, 16) f32 contraction — exact because
      every partial sum is an integer <= T*128 <= 2^24, below the f32
-     mantissa — no scatter-add anywhere (``.at[...].add`` serializes on
-     TPU and CPU alike; ``test_kernel_hygiene.py`` now bans it from
-     kernel sources).  f32 operands hit the fast GEMM path on the CPU
-     interpret backend, where the int8-accumulate-int32 form fell off to
-     a naive loop and dominated the whole encode;
+     mantissa (the TPU default: the MXU eats it); or ``"swar"`` — pack
+     bytes 4-per-u32, XOR against each candidate symbol's splatted
+     pattern, SWAR zero-byte detect, ``population_count``, and an
+     explicit halving-tree add reduction (the interpret/CPU default:
+     ~3x the one-hot GEMM, whose 16-wide M/N tiles leave the CPU GEMM at
+     a quarter of peak, and the *tree* matters — XLA:CPU's own reduce
+     lowering over the word axis was measured 14x slower than the same
+     adds spelled as a log-depth slice chain).  Neither path scatters
+     (``.at[...].add`` serializes on TPU and CPU alike;
+     ``test_kernel_hygiene.py`` bans it from kernel sources);
   2. static table build: :func:`build_freq_table` (integer-exact
      normalization to ``M = 2**PROB_BITS``, every present symbol >= 1)
      plus :func:`build_enc_tables`, which precomputes per-symbol
@@ -38,22 +69,22 @@ Per shard the kernel runs three fused stages without leaving VMEM:
      header; the reciprocals are *derived* state — decode is
      multiplication-only and provably never reads them, so shipping them
      would inflate every stream by 1.25 KiB for nothing;
-  3. the coding loop, processed in *reverse* row order (rANS encodes
-     backwards so decode streams forwards), emitting at most one 16-bit
-     word per lane per row (32-bit states, 16-bit renormalization: state
-     in [2^16, 2^32) means renorm fires at most once per symbol, which is
-     what makes the loop branchlessly vectorizable).  Symbol tables are
-     pregathered per position before the loop, so the hot path reads only
-     aligned row slices; rows are coded in two phases split on the
-     n_valid boundary — rows fully inside every shard's payload skip the
-     per-lane valid masking entirely, and fully-empty padding rows (pow2
-     bucketing leaves up to half) are never visited.
+  3. the two-phase coding loop described above, emitting at most one
+     16-bit word per lane per row (32-bit states, 16-bit renormalization:
+     state in [2^16, 2^32) means renorm fires at most once per symbol,
+     which is what makes the loop branchlessly vectorizable).  Symbol
+     tables are pregathered per position and sentinel-masked before the
+     scan, so the sequential region reads only aligned row slices and
+     carries only the lane states — no gathers, no masks, no dense
+     output buffer on the hot path.
 
 The per-symbol division x // freq runs as one of three exact,
-bit-identical strategies (see :func:`_enc_step`): the hardware udiv
-(interpret default), the error-repaired f32 reciprocal multiply (TPU
-default — Mosaic has no integer division, which is what kept the PR-3
-coder off real hardware), or the all-integer Granlund-Montgomery mulhi.
+bit-identical strategies (see :func:`_enc_step`): the all-integer
+Granlund-Montgomery mulhi (interpret default — x86 has no vector u32
+divide, so udiv scalarizes while mulhi stays SIMD), the error-repaired
+f32 reciprocal multiply (TPU default — Mosaic has no integer division,
+which is what kept the PR-3 coder off real hardware), or the hardware
+udiv.
 The f32 path is immune to the x/c -> x*(1/c) jit canonicalization that
 breaks naive float kernels: the renorm invariant bounds the quotient by
 2^20, so any faithful rounding stays within +-0.2 of the true quotient
@@ -267,6 +298,60 @@ def _histogram(vals: jax.Array, n_valid) -> jax.Array:
     return counts - jnp.where(sym == 0, n - n_valid, 0)
 
 
+_SWAR_CHUNK = 32              # symbols per SWAR sweep: bounds the (S, CHUNK,
+                              # T*32) popcount intermediate to a few MiB
+
+
+def _histogram_swar(vals: jax.Array, nv: jax.Array) -> jax.Array:
+    """Exact byte histograms of all S zero-padded (T, 128) shards at once ->
+    (S, 256) int32, GEMM-free: SWAR zero-byte test + popcount.
+
+    Bytes pack little-endian 4-per-u32; for each candidate symbol the word
+    is XORed against the symbol splatted to all four byte positions, the
+    classic ``~(((x & 7f..) + 7f..) | x | 7f..)`` zero-byte detector
+    leaves 0x80 exactly at matching bytes, and a ``population_count`` per
+    word counts them.  The per-symbol totals reduce over the word axis as
+    an explicit halving-tree of adds — spelled as slices on purpose:
+    XLA:CPU's reduce lowering over that axis was measured 14x slower than
+    the identical adds in log-depth slice form, while the tree vectorizes
+    flat-out.  Symbols sweep in ``_SWAR_CHUNK`` batches to bound the
+    popcount intermediate (the fused kernel batches K stripes of shards
+    through here).  Bit-identical to :func:`_histogram` by construction —
+    both count exactly; padding bytes are zero (``ops.py`` contract) and
+    are subtracted from bin 0, exactly as there.
+    """
+    S, T, L = vals.shape
+    n = T * L
+    # byte-pack via u8 truncate + bitcast: the 4 strided u32 slices +
+    # shift-or spelling of the same pack measured ~5 ms on the bench
+    # shapes — minor-axis strided loads do not vectorize on XLA:CPU —
+    # while the truncate is one dense pass and the bitcast is free
+    w = jax.lax.bitcast_convert_type(
+        vals.reshape(S, n // 4, 4).astype(jnp.uint8), jnp.uint32
+    )                                                        # (S, n/4)
+    k7f = jnp.uint32(0x7F7F7F7F)
+    k01 = jnp.uint32(0x01010101)
+    outs = []
+    for y0 in range(0, 256, _SWAR_CHUNK):
+        pat = (
+            jax.lax.broadcasted_iota(jnp.uint32, (_SWAR_CHUNK,), 0)
+            + jnp.uint32(y0)
+        ) * k01
+        x = w[:, None, :] ^ pat[None, :, None]
+        z = ~(((x & k7f) + k7f) | x | k7f)                   # 0x80 at matches
+        c = jax.lax.population_count(z)
+        while c.shape[2] > 1:
+            m = c.shape[2]
+            if m % 2:
+                c = jnp.pad(c, ((0, 0), (0, 0), (0, 1)))
+                m += 1
+            c = c[:, :, : m // 2] + c[:, :, m // 2 :]
+        outs.append(c[:, :, 0])
+    counts = jnp.concatenate(outs, axis=1).astype(jnp.int32)
+    sym = jax.lax.broadcasted_iota(jnp.int32, (1, 256), 1)
+    return counts - jnp.where(sym == 0, n - nv, 0)
+
+
 def _enc_step(x, packed, aux, *, division: str = "divide"):
     """One interleaved encode step: (states, sym tables) -> states'.
 
@@ -277,9 +362,10 @@ def _enc_step(x, packed, aux, *, division: str = "divide"):
     loop carries nothing else.  The state update divides by freq with one
     of three exact, bit-identical strategies (asserted in the tests):
 
-      * ``"divide"`` — the hardware udiv.  LLVM scalarizes it on CPU but
-        it is still the fewest ops there; Mosaic has no integer division
-        at all (which is what kept the PR-3 kernel off real TPUs).
+      * ``"divide"`` — the hardware udiv.  Fewest ops on paper, but LLVM
+        scalarizes it on CPU (no vector u32 divide on x86) so the SIMD
+        mulhi path beats it there; Mosaic has no integer division at all
+        (which is what kept the PR-3 kernel off real TPUs).
       * ``"rcp32"`` — f32 reciprocal multiply with a +-1 integer repair.
         The renorm invariant bounds the true quotient by 2^20, so the
         faithful-rounding error of f32(x) * (1/f) is < 0.2 quotient units
@@ -342,18 +428,35 @@ def _signed(s, valid):
     return jnp.where(valid, s - ((s & 0x80) << 1), 0).astype(jnp.int8)
 
 
-def _row_valid(r, nv):
-    """(S, 128) global-index valid mask for row r vs n_valid (S, 1)."""
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, N_LANES), 1)
-    return (r * N_LANES + lane) < nv
+def _valid_positions(T: int, nv):
+    """(T, S, 128) global-byte-index validity mask vs n_valid (S, 1).
+
+    One batched iota compare — the whole n_valid row/lane schedule the
+    old two-loop encoder derived per trip, computed up front so the
+    sequential scan carries no masking at all."""
+    S = nv.shape[0]
+    pos = (
+        jax.lax.broadcasted_iota(jnp.int32, (T, 1, N_LANES), 0) * N_LANES
+        + jax.lax.broadcasted_iota(jnp.int32, (T, 1, N_LANES), 2)
+    )
+    return pos < nv.reshape(1, S, 1)
 
 
-def rans_encode_body(vals, nv, *, division: str, rows_per_step: int):
+# Identity sentinel symbol entry: f = PROB_SCALE (shift = 12 -> s1 = 11),
+# cum = 0.  _enc_step on it is an exact no-op for every division strategy:
+# emit = (x >> 20) >= PROB_SCALE never fires for a 32-bit state, and
+# x' = x + q*(PROB_SCALE - f) + cum = x regardless of what q computes.
+_ENC_SENTINEL = PROB_SCALE | (11 << 13)
+
+
+def rans_encode_body(vals, nv, *, division: str, rows_per_step: int,
+                     histogram: str = "dot"):
     """Encode-stage dataflow shared by the standalone entropy kernel and the
     one-launch entropy+seal kernel (``repro.kernels.fused``): histogram ->
-    freq tables -> pregather -> interleaved two-phase encode loop.  Pure jnp
-    over values already loaded from refs, so both kernel bodies trace the
-    exact same op sequence — fusing cannot change a single output bit.
+    freq tables -> pregather -> two-phase encode (batched schedule + pure
+    ``lax.scan``).  Pure jnp over values already loaded from refs, so both
+    kernel bodies trace the exact same op sequence — fusing cannot change a
+    single output bit.
 
     ``vals``: (S, T, 128) int32 symbol bytes in [0, 255]; ``nv``: (S, 1)
     int32 valid byte counts.  Returns ``(words (S, T, 128) u16, mask
@@ -361,17 +464,19 @@ def rans_encode_body(vals, nv, *, division: str, rows_per_step: int):
     """
     S, T, _ = vals.shape
 
-    # fused stage 1+2: per-shard matmul histogram -> tables (the stripe is
-    # the block: shards ride the batch axis of every loop op, so one row
-    # step feeds S x 128 lanes to the vector unit instead of idling per
-    # shard)
-    counts = jnp.stack(
-        [_histogram(vals[s], nv[s, 0]) for s in range(S)]
-    )
+    # fused stage 1+2: per-shard histogram -> tables (the stripe is the
+    # block: shards ride the batch axis of every op, so one scan step
+    # feeds S x 128 lanes to the vector unit instead of idling per shard)
+    if histogram == "swar":
+        counts = _histogram_swar(vals, nv)
+    else:
+        counts = jnp.stack(
+            [_histogram(vals[s], nv[s, 0]) for s in range(S)]
+        )
     freq = jax.vmap(build_freq_table)(counts)                # (S, 256)
     packed, mprime, rcp = jax.vmap(build_enc_tables)(freq)
 
-    # pregather the per-position symbol tables once: the loop then reads
+    # pregather the per-position symbol tables once: the scan then reads
     # only aligned (rows_per_step, S, 128) slices, no gathers on the hot
     # path
     flat = vals.reshape(S, T * N_LANES)
@@ -390,68 +495,49 @@ def rans_encode_body(vals, nv, *, division: str, rows_per_step: int):
         if aux is not None else pk
     )
 
-    # two-phase row schedule on the n_valid boundary: rows fully inside
-    # every shard's payload run an unmasked body (the common case — no
-    # per-lane valid test at all), the boundary region runs the masked
-    # body, and fully-empty rows (pow2 bucketing leaves up to half of
-    # them) are never visited — their words/mask stay zero.  Each trip
-    # advances ``rows_per_step`` rows: 1 under interpret (tiny ops beat
-    # fat fused bodies on CPU), N_GROUPS on TPU (the (8, 128) sublane
-    # tile is one vreg).  The schedule cannot change a single output bit
-    # — only which ops compute them.
-    R = rows_per_step
-    n_full = (jnp.min(nv) // N_LANES) // R
-    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
+    # phase 1: the batched schedule.  Swap every invalid position's table
+    # entry for the identity sentinel — the encode step freezes the lane
+    # exactly like the old per-trip ``where`` masking (same frozen states,
+    # words and emissions, bit for bit), but the masking now costs one
+    # vectorized select OUTSIDE the sequential region.  ``aux`` needs no
+    # swap: with f = PROB_SCALE the quotient is multiplied by zero, so any
+    # defined aux value (padding bytes gather symbol 0's, and the table
+    # build clamps f >= 1) yields the same frozen state.  Boundary rows,
+    # fully-padded rows and n_valid = 0 dummy shards all take this path —
+    # there are no dynamic trip counts left to recompute per batch.
+    pk = jnp.where(_valid_positions(T, nv), pk, jnp.uint32(_ENC_SENTINEL))
 
-    def chunk(x, ch, masked):
+    # phase 2: minimal-carry scan, rows_per_step rows per trip in reverse
+    # row order.  Carry = lane states only; words/mask leave through the
+    # scan's stacked ys, not a dense dynamic-update chain.
+    R = rows_per_step
+    pkc = pk.reshape(T // R, R, S, N_LANES)
+    auxc = aux.reshape(T // R, R, S, N_LANES)
+
+    def step(x, xs):
+        pc, ac = xs
         ws, ms = [None] * R, [None] * R
         for k in range(R - 1, -1, -1):
-            r = ch * R + k
-            p = jax.lax.dynamic_index_in_dim(pk, r, 0, keepdims=False)
-            a = jax.lax.dynamic_index_in_dim(aux, r, 0, keepdims=False)
-            x2, x_pre, emit = _enc_step(x, p, a, division=division)
-            if masked:
-                valid = _row_valid(r, nv)
-                x = jnp.where(valid, x2, x)                  # pad lanes: no-op
-                emit = emit & valid
-            else:
-                x = x2
+            x, x_pre, emit = _enc_step(x, pc[k], ac[k], division=division)
             ws[k] = (x_pre & jnp.uint32(0xFFFF)).astype(jnp.uint16)
             ms[k] = emit.astype(jnp.uint8)
-        return x, jnp.stack(ws), jnp.stack(ms)
+        return x, (jnp.stack(ws), jnp.stack(ms))
 
-    def body_masked(j, carry):
-        x, words, mask = carry
-        ch = n_used - 1 - j
-        x, wt, mt = chunk(x, ch, True)
-        words = jax.lax.dynamic_update_index_in_dim(words, wt, ch * R, 0)
-        mask = jax.lax.dynamic_update_index_in_dim(mask, mt, ch * R, 0)
-        return x, words, mask
-
-    def body_full(j, carry):
-        x, words, mask = carry
-        ch = n_full - 1 - j
-        x, wt, mt = chunk(x, ch, False)
-        words = jax.lax.dynamic_update_index_in_dim(words, wt, ch * R, 0)
-        mask = jax.lax.dynamic_update_index_in_dim(mask, mt, ch * R, 0)
-        return x, words, mask
-
-    carry = (
-        jnp.full((S, N_LANES), RANS_L, jnp.uint32),
-        jnp.zeros((T, S, N_LANES), jnp.uint16),
-        jnp.zeros((T, S, N_LANES), jnp.uint8),
-    )
-    carry = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
-    x, words, mask = jax.lax.fori_loop(0, n_full, body_full, carry)
-    return jnp.moveaxis(words, 1, 0), jnp.moveaxis(mask, 1, 0), freq, x
+    x0 = jnp.full((S, N_LANES), RANS_L, jnp.uint32)
+    x, (w_rev, m_rev) = jax.lax.scan(step, x0, (pkc[::-1], auxc[::-1]))
+    words = jnp.moveaxis(w_rev[::-1].reshape(T, S, N_LANES), 1, 0)
+    mask = jnp.moveaxis(m_rev[::-1].reshape(T, S, N_LANES), 1, 0)
+    return words, mask, freq, x
 
 
 def _encode_kernel(codes_ref, nvalid_ref, words_ref, mask_ref, freq_ref,
-                   state_ref, *, division: str, rows_per_step: int):
+                   state_ref, *, division: str, rows_per_step: int,
+                   histogram: str):
     vals = (codes_ref[...].astype(jnp.int32)) & 0xFF         # (S, T, 128)
     nv = nvalid_ref[...]                                     # (S, 1)
     words, mask, freq, states = rans_encode_body(
-        vals, nv, division=division, rows_per_step=rows_per_step
+        vals, nv, division=division, rows_per_step=rows_per_step,
+        histogram=histogram,
     )
     words_ref[...] = words
     mask_ref[...] = mask
@@ -463,10 +549,14 @@ def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
                    *, rows_per_step: int):
     """Version-1 decode: row-major word stream, prefix-sum read pointer.
 
-    Mirrors the encoder's two-phase row schedule (unmasked body for rows
-    fully inside every shard's payload, masked body on the n_valid
-    boundary, empty rows never visited) — the decode consumes rows
-    forward, so the full phase runs first.
+    Mirrors the encoder's two-phase shape: the whole row/lane validity
+    schedule is one batched iota compare (phase 1), and the sequential
+    region is a minimal-carry ``lax.scan`` over the rows — carry = (lane
+    states, stream read pointer), decoded rows leave through the scan's
+    stacked outputs.  The decode consumes rows forward (the encoder ran
+    them in reverse).  Invalid lanes renorm-mask to zero consumption, so
+    boundary rows, fully-padded rows and n_valid = 0 shards ride the same
+    body with no dynamic trip counts.
     """
     stream = stream_ref[...]                                 # (S, W) u16
     S, W = stream.shape
@@ -477,53 +567,39 @@ def _decode_kernel(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
     slot2sym = jax.vmap(slot_to_symbol)(freq)
 
     R = rows_per_step
-    n_full = (jnp.min(nv) // N_LANES) // R
-    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
+    vc = _valid_positions(T, nv).reshape(T // R, R, S, N_LANES)
 
-    def chunk(x, base, ch, masked):
+    def step(carry, vck):
+        x, base = carry
         rows = [None] * R
         for k in range(R):
-            r = ch * R + k
+            valid = vck[k]
             x2, sym, need = _dec_step(x, dec_packed, slot2sym)
-            sgn = (sym - ((sym & 0x80) << 1)).astype(jnp.int8)
-            if masked:
-                valid = _row_valid(r, nv)
-                need = need & valid
-                sgn = jnp.where(valid, sgn, 0)
+            need = need & valid
+            sgn = jnp.where(
+                valid, (sym - ((sym & 0x80) << 1)).astype(jnp.int8), 0
+            )
             csum = jnp.cumsum(need.astype(jnp.int32), axis=-1)
             pos = base[:, None] + csum - need.astype(jnp.int32)
             w = jnp.take_along_axis(
                 stream, jnp.minimum(pos, W - 1), axis=1
             ).astype(jnp.uint32)
             x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
-            x = jnp.where(valid, x2, x) if masked else x2
+            x = jnp.where(valid, x2, x)
             base = base + csum[:, N_LANES - 1]
             rows[k] = sgn
-        return x, base, jnp.stack(rows)
+        return (x, base), jnp.stack(rows)
 
-    def body_full(j, carry):
-        x, base, out = carry
-        x, base, tile = chunk(x, base, j, False)
-        return x, base, jax.lax.dynamic_update_index_in_dim(out, tile, j * R, 0)
-
-    def body_masked(j, carry):
-        x, base, out = carry
-        ch = n_full + j
-        x, base, tile = chunk(x, base, ch, True)
-        return x, base, jax.lax.dynamic_update_index_in_dim(
-            out, tile, ch * R, 0
-        )
-
-    carry = (state_ref[...], jnp.zeros((S,), jnp.int32),
-             jnp.zeros((T, S, N_LANES), jnp.int8))
-    carry = jax.lax.fori_loop(0, n_full, body_full, carry)
-    _, _, out = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
-    codes_ref[...] = jnp.moveaxis(out, 1, 0)
+    carry = (state_ref[...], jnp.zeros((S,), jnp.int32))
+    _, out = jax.lax.scan(step, carry, vc)
+    codes_ref[...] = jnp.moveaxis(out.reshape(T, S, N_LANES), 1, 0)
 
 
 def _decode_kernel_v0(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
                       *, rows_per_step: int):
-    """Version-0 decode twin: lane-major words, per-lane read pointers."""
+    """Version-0 decode twin: lane-major words, per-lane read pointers.
+    Same minimal-carry scan shape as the v1 decoder — carry = (lane
+    states, per-lane word pointers)."""
     lane_words = stream_ref[...]                             # (S, T, 128) u16
     S, T, _ = lane_words.shape
     freq = freq_ref[...]
@@ -532,50 +608,34 @@ def _decode_kernel_v0(stream_ref, freq_ref, state_ref, nvalid_ref, codes_ref,
     slot2sym = jax.vmap(slot_to_symbol)(freq)
 
     R = rows_per_step
-    n_full = (jnp.min(nv) // N_LANES) // R
-    n_used = -(-(-(-jnp.max(nv) // N_LANES)) // R)
+    vc = _valid_positions(T, nv).reshape(T // R, R, S, N_LANES)
 
-    def chunk(x, ptr, ch, masked):
+    def step(carry, vck):
+        x, ptr = carry
         rows = [None] * R
         for k in range(R):
-            r = ch * R + k
+            valid = vck[k]
             x2, sym, need = _dec_step(x, dec_packed, slot2sym)
-            sgn = (sym - ((sym & 0x80) << 1)).astype(jnp.int8)
-            if masked:
-                valid = _row_valid(r, nv)
-                need = need & valid
-                sgn = jnp.where(valid, sgn, 0)
+            need = need & valid
+            sgn = jnp.where(
+                valid, (sym - ((sym & 0x80) << 1)).astype(jnp.int8), 0
+            )
             w = jnp.take_along_axis(
                 lane_words, jnp.minimum(ptr, T - 1)[:, None, :], axis=1
             )[:, 0].astype(jnp.uint32)
             x2 = jnp.where(need, (x2 << jnp.uint32(16)) | w, x2)
-            x = jnp.where(valid, x2, x) if masked else x2
+            x = jnp.where(valid, x2, x)
             ptr = ptr + need.astype(jnp.int32)
             rows[k] = sgn
-        return x, ptr, jnp.stack(rows)
+        return (x, ptr), jnp.stack(rows)
 
-    def body_full(j, carry):
-        x, ptr, out = carry
-        x, ptr, tile = chunk(x, ptr, j, False)
-        return x, ptr, jax.lax.dynamic_update_index_in_dim(out, tile, j * R, 0)
-
-    def body_masked(j, carry):
-        x, ptr, out = carry
-        ch = n_full + j
-        x, ptr, tile = chunk(x, ptr, ch, True)
-        return x, ptr, jax.lax.dynamic_update_index_in_dim(
-            out, tile, ch * R, 0
-        )
-
-    carry = (state_ref[...], jnp.zeros((S, N_LANES), jnp.int32),
-             jnp.zeros((T, S, N_LANES), jnp.int8))
-    carry = jax.lax.fori_loop(0, n_full, body_full, carry)
-    _, _, out = jax.lax.fori_loop(0, n_used - n_full, body_masked, carry)
-    codes_ref[...] = jnp.moveaxis(out, 1, 0)
+    carry = (state_ref[...], jnp.zeros((S, N_LANES), jnp.int32))
+    _, out = jax.lax.scan(step, carry, vc)
+    codes_ref[...] = jnp.moveaxis(out.reshape(T, S, N_LANES), 1, 0)
 
 
 def _rows_per_step(rows_per_step, interpret: bool, rows: int) -> int:
-    """Static loop-schedule width: 1 row/trip under interpret (many tiny
+    """Static scan-step width: 1 row/trip under interpret (many tiny
     ops beat few fat fused bodies on CPU), an (N_GROUPS, 128) sublane tile
     per trip otherwise (one vreg per step on TPU).  Pure schedule — the
     output bits are identical for every choice."""
@@ -586,8 +646,21 @@ def _rows_per_step(rows_per_step, interpret: bool, rows: int) -> int:
     return rows_per_step
 
 
+def _histogram_impl(histogram, interpret: bool) -> str:
+    """Default the histogram strategy per backend: SWAR popcount under
+    interpret (the CPU GEMM runs 16-wide tiles at a quarter of peak),
+    one-hot matmul otherwise (the MXU eats it).  Bit-identical either
+    way — both are exact counts."""
+    if histogram is None:
+        histogram = "swar" if interpret else "dot"
+    if histogram not in ("dot", "swar"):
+        raise ValueError(f"unknown histogram strategy {histogram!r}")
+    return histogram
+
+
 def rans_encode_pallas(codes, n_valid, *, division: str = "divide",
-                       rows_per_step: int = None, interpret: bool = True):
+                       rows_per_step: int = None, histogram: str = None,
+                       interpret: bool = True):
     """Encode all S shards of a stripe in one launch (the stripe is the
     kernel block; shards stack on the batch axis of every vector op).
 
@@ -597,10 +670,14 @@ def rans_encode_pallas(codes, n_valid, *, division: str = "divide",
     n_valid: (S, 1) int32 valid byte count per shard — positions past it
     are padding and are excluded from both the histogram and the coding
     loop (their lanes idle, costing zero stream bytes).
-    division: "divide" (hardware udiv — interpret/CPU default), "rcp32"
+    division: "reciprocal" (all-integer Granlund-Montgomery mulhi — the
+    interpret/CPU default; u32 udiv scalarizes on x86), "rcp32"
     (error-repaired f32 reciprocal — the TPU default; Mosaic has no
-    integer divide) or "reciprocal" (all-integer Granlund-Montgomery
-    mulhi); the streams are bit-identical in all three.
+    integer divide) or "divide" (hardware udiv); the streams are
+    bit-identical in all three.
+    histogram: "swar" (popcount sweep — interpret/CPU default) or "dot"
+    (one-hot matmul — TPU default); exact counts, bit-identical streams
+    either way.
     Returns (words (S, T, 128) uint16, mask (S, T, 128) uint8,
     freq (S, 256) int32, states (S, 128) uint32): the dense emission buffer
     + per-row emission mask (rank-select compacted by the caller), the
@@ -615,9 +692,10 @@ def rans_encode_pallas(codes, n_valid, *, division: str = "divide",
     if division not in ("divide", "rcp32", "reciprocal"):
         raise ValueError(f"unknown division strategy {division!r}")
     rps = _rows_per_step(rows_per_step, interpret, T)
+    hist = _histogram_impl(histogram, interpret)
     return pl.pallas_call(
         functools.partial(_encode_kernel, division=division,
-                          rows_per_step=rps),
+                          rows_per_step=rps, histogram=hist),
         out_shape=[
             jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint16),
             jax.ShapeDtypeStruct((S, T, N_LANES), jnp.uint8),

@@ -2,7 +2,7 @@
 the seal datapath, batched over K coalesced stripes per launch.
 
 One launch takes a batch of B = K * S zero-padded shard payloads straight
-through codes -> matmul histogram -> freq tables -> interleaved rANS ->
+through codes -> histogram -> freq tables -> interleaved rANS ->
 rank-select stream pack -> adaptive raw-skip select -> ChaCha20 keystream ->
 XOR-seal -> RAID-5 P / RAID-6 Q, with the packed word streams living only in
 VMEM: the HBM roundtrip the chained ``kernels/entropy`` -> ``kernels/seal``
@@ -54,10 +54,12 @@ from repro.kernels.entropy.ops import (
     HEADER_BYTES,
     _pack_bytes_impl,
     _pack_rank_impl,
+    stream_word_cap,
 )
 from repro.kernels.entropy.rans import (
     N_LANES,
     T_TILE,
+    _histogram_impl,
     _rows_per_step,
     rans_encode_body,
 )
@@ -69,13 +71,9 @@ from repro.kernels.seal.seal import (
     keystream_batch,
 )
 
+# ``stream_word_cap`` moved next to the pack it sizes (entropy ops); the
+# fused module re-exports it because the seal-side capacity story lives here
 __all__ = ["entropy_seal_pallas", "stream_word_cap", "seal_rows_cap"]
-
-
-def stream_word_cap(T: int) -> int:
-    """Worst-case u16 stream words worth packing for a T-row shard (any
-    shard emitting more compresses to >= raw and is stored raw)."""
-    return max(1, (T * N_LANES - HEADER_BYTES) // 2)
 
 
 def seal_rows_cap(T: int) -> int:
@@ -87,7 +85,7 @@ def seal_rows_cap(T: int) -> int:
 def _entropy_seal_kernel(
     codes_ref, nvalid_ref, keys_ref, nonces_ref, qcoef_ref,
     sealed_ref, nwords_ref, *parity_refs,
-    n_shards: int, division: str, rows_per_step: int,
+    n_shards: int, division: str, rows_per_step: int, histogram: str,
 ):
     B, T, L = codes_ref.shape
     R_cap = sealed_ref.shape[1]
@@ -97,12 +95,17 @@ def _entropy_seal_kernel(
     # stage 1: interleaved rANS encode — the standalone entropy kernel's
     # exact op sequence (shared body), K*S shards on the batch axis
     words, mask, freq, states = rans_encode_body(
-        vals, nv, division=division, rows_per_step=rows_per_step
+        vals, nv, division=division, rows_per_step=rows_per_step,
+        histogram=histogram,
     )
 
     # stage 2: rank-select pack straight into v1 stream bytes, in VMEM —
-    # the packed word streams never touch HBM
-    src, n_words, lane_lens = _pack_rank_impl(mask, cap=stream_word_cap(T))
+    # the packed word streams never touch HBM.  ``tiered``: the static cap
+    # is the raw-skip worst case (~2.5x typical emissions), so the pack
+    # runs at half width whenever the batch's true counts allow
+    src, n_words, lane_lens = _pack_rank_impl(
+        mask, cap=stream_word_cap(T), tiered=True
+    )
     stream_u8 = _pack_bytes_impl(words, src, n_words, lane_lens, freq, states)
 
     # stage 3: adaptive raw-skip select (n_words is the TRUE emission
@@ -163,7 +166,7 @@ def _entropy_seal_kernel(
 def entropy_seal_pallas(
     codes, n_valid, keys, nonces, q_coef, *, n_shards: int,
     parity: str = "raid6", division: str = "divide",
-    rows_per_step: Optional[int] = None,
+    rows_per_step: Optional[int] = None, histogram: Optional[str] = None,
     grid_stripes: Optional[bool] = None, interpret: bool = True,
 ):
     """One launch: rANS-encode, pack, ChaCha20-XOR-seal and parity-fold a
@@ -204,6 +207,7 @@ def entropy_seal_pallas(
     kern = functools.partial(
         _entropy_seal_kernel,
         n_shards=n_shards, division=division, rows_per_step=rps,
+        histogram=_histogram_impl(histogram, interpret),
     )
     n_parity = {"none": 0, "raid5": 1, "raid6": 2}[parity]
     out_shape = [

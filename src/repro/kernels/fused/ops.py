@@ -102,7 +102,9 @@ def entropy_seal_stripes(
         )
     interp = use_interpret(interpret)
     if division is None:
-        division = "divide" if interp else "rcp32"
+        # same pick as entropy ops._encode_core: SIMD mulhi reciprocal on
+        # interpret/CPU, repaired-f32 reciprocal on real TPU — identical bits
+        division = "reciprocal" if interp else "rcp32"
     n_stripes = len(stripes)
     if isinstance(pad_rows, (list, tuple)):
         if len(pad_rows) != n_stripes:

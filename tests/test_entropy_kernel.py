@@ -187,6 +187,90 @@ def test_row_and_tile_schedules_bit_identical():
         assert _eq(got[0].reshape(-1)[:n], flat)
 
 
+def _bucket_stripe(T, seed):
+    """A stripe pinning bucket T's n_valid boundaries: an exactly-full
+    shard, one byte short (last lane of the last row pads), the first
+    byte of the last row, a sub-header tiny shard, and an incompressible
+    raw-skip rider."""
+    rng = np.random.default_rng(seed)
+    n_full = T * N_LANES
+    return [
+        _latents(seed, n_full),
+        _latents(seed + 1, n_full - 1),
+        _latents(seed + 2, (T - 1) * N_LANES + 1),
+        _latents(seed + 3, 5),
+        jnp.asarray(rng.integers(-128, 128, n_full, dtype=np.int8)),
+    ]
+
+
+@pytest.mark.parametrize("T", [8, 16, 32, 64, 128, 256, 512])
+def test_two_phase_bit_identity_every_bucket(T):
+    """The batched two-phase encode (phase 1: full emission schedule as
+    tensor ops; phase 2: one compaction pass) matches the staged scan
+    oracle bit for bit in EVERY pow2 row bucket, with raw-skip shards and
+    n_valid boundary rows riding in the same stripe."""
+    payloads = _bucket_stripe(T, seed=40 + T)
+    ck, mk = eops.encode_payloads(payloads, use_pallas=True)
+    cr, mr = eops.encode_payloads(payloads, use_pallas=False)
+    assert mk == mr
+    assert all(m["rows"] == T for m in mk)
+    assert mk[3]["raw"] and mk[4]["raw"]  # tiny + incompressible skip
+    if T >= 32:  # smaller buckets can't amortize the 1536-byte header
+        assert not mk[0].get("raw")
+    for a, b in zip(ck, cr):
+        assert _eq(a, b)
+    back = eops.decode_payloads(ck, mk)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+
+
+def test_two_phase_histogram_impls_bit_identical():
+    """Both exact histogram strategies (SWAR popcount sweep / one-hot
+    matmul) feed the two-phase schedule identical tables — streams must
+    not differ by a bit."""
+    from repro.kernels.entropy.rans import rans_encode_pallas
+
+    payloads = _bucket_stripe(32, seed=77)
+    outs = {
+        h: eops.encode_payloads(
+            payloads,
+            core_fn=lambda c, nv, h=h: rans_encode_pallas(
+                c, nv, histogram=h, interpret=True
+            ),
+        )
+        for h in ("swar", "dot")
+    }
+    (c_s, m_s), (c_d, m_d) = outs["swar"], outs["dot"]
+    assert m_s == m_d
+    for a, b in zip(c_s, c_d):
+        assert _eq(a, b)
+
+
+@pytest.mark.parametrize("D", [1, 2, 4, 8])
+@pytest.mark.parametrize("T", [8, 64])
+def test_two_phase_sharded_buckets_bit_identical(T, D):
+    """The shard_map'd twins inherit the two-phase schedule unchanged:
+    mesh {1,2,4,8} encodes of boundary-row stripes match the single-device
+    streams byte-for-byte and roundtrip."""
+    if D > jax.device_count():
+        pytest.skip(f"need {D} devices, have {jax.device_count()}")
+    from repro.distributed.archival import (
+        entropy_decode_sharded,
+        entropy_encode_sharded,
+    )
+
+    payloads = _bucket_stripe(T, seed=60 + T)
+    single_c, single_m = eops.encode_payloads(payloads)
+    mesh = Mesh(np.array(jax.devices()[:D]), ("data",))
+    c, m = entropy_encode_sharded(payloads, mesh=mesh)
+    assert m == single_m
+    for a, b in zip(c, single_c):
+        assert _eq(a, b)
+    back = entropy_decode_sharded(c, m, mesh=mesh)
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
+
+
 def test_golden_v0_stream_decodes():
     """A PR-4-era version-0 (128-lane, lane-major words) stream captured at
     the old HEAD must keep decoding after the lane-group format change —

@@ -10,6 +10,7 @@ kernel-callable ChaCha core are integer-only; quantize carries the
 reciprocal-multiply fix.  This test keeps it that way.
 """
 
+import ast
 import io
 import os
 import token
@@ -120,6 +121,91 @@ def _banned_tpu_constructs(source: str):
                         ):
                             yield t.start[0], t.line.strip()
                         break
+
+
+def _entropy_sources():
+    """The entropy column: the coder package plus the fused write chain."""
+    files = []
+    for sub in ("entropy", "fused"):
+        root = os.path.join(KERNEL_ROOT, sub)
+        for dirpath, _, names in os.walk(root):
+            files += [
+                os.path.join(dirpath, n) for n in names if n.endswith(".py")
+            ]
+    return sorted(files)
+
+
+def _uses_name(node: ast.AST, name: str) -> bool:
+    return any(
+        isinstance(n, ast.Name) and n.id == name for n in ast.walk(node)
+    )
+
+
+def _induction_indexed_fori_loops(source: str):
+    """Yield (line, text) for each ``fori_loop`` whose body indexes by the
+    induction variable — a per-row subscript gather/update inside the
+    carry chain, the serializing construct the two-phase encode removed
+    (XLA:CPU cannot vectorize across trips whose memory access depends on
+    the trip index; each row waits on the last).  A ``fori_loop`` whose
+    body never subscripts by its induction variable (reduction-style
+    carries) stays allowed.
+    """
+    tree = ast.parse(source)
+    defs = {
+        n.name: n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)
+    }
+    src_lines = source.splitlines()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        fn_name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None
+        )
+        if fn_name != "fori_loop" or len(node.args) < 3:
+            continue
+        body = node.args[2]
+        if isinstance(body, ast.Name):
+            body = defs.get(body.id)
+        if body is None or not getattr(body, "args", None):
+            continue
+        params = body.args.args
+        if not params:
+            continue
+        ivar = params[0].arg
+        inner = body.body if isinstance(body, ast.FunctionDef) else [body.body]
+        for stmt in inner:
+            for n in ast.walk(stmt):
+                hit = (
+                    isinstance(n, ast.Subscript) and _uses_name(n.slice, ivar)
+                ) or (
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr.startswith("dynamic_")
+                    and any(_uses_name(a, ivar) for a in n.args)
+                )
+                if hit:
+                    yield node.lineno, src_lines[node.lineno - 1].strip()
+                    return
+
+
+@pytest.mark.parametrize("path", _entropy_sources(), ids=os.path.basename)
+def test_no_induction_indexed_fori_loop_in_entropy(path):
+    """PR 9 removed the per-row ``fori_loop`` carry chain from the entropy
+    encode (the two-phase schedule computes the full emission schedule as
+    batched tensor ops and compacts in one pass); this keeps the
+    serializing construct from returning to the coder column."""
+    with open(path) as f:
+        offenders = [
+            f"{path}:{line}: {text}"
+            for line, text in _induction_indexed_fori_loops(f.read())
+        ]
+    assert not offenders, (
+        "induction-indexed fori_loop in entropy coder code (serializes "
+        "rows on every backend — use the two-phase batched schedule: "
+        "precompute the emission schedule with tensor ops, then one "
+        "gather/select pass):\n" + "\n".join(offenders)
+    )
 
 
 @pytest.mark.parametrize("path", _kernel_sources(), ids=os.path.basename)
