@@ -1,0 +1,110 @@
+"""Seed-deterministic multi-stream ingest workload generator.
+
+Drives the ``ingest_scale`` bench (and ``tests/test_ingest_scale.py``)
+with N simulated camera streams pushing pre-encoded GOP payloads at the
+``StreamIngestFrontend``.  Same determinism contract as
+``repro.core.csd.chaos.ChaosFleet``: the ENTIRE arrival schedule — every
+(stream, sequence, size, novelty) tuple — is precomputed in ``__init__``
+from ``np.random.default_rng(cfg.seed)``, so a given config replays the
+identical workload regardless of how the consumer interleaves pumps,
+drains, or sheds.  Payload BYTES are derived per arrival from
+``default_rng([seed, stream_id, seq])``, so two replays (or the
+synchronous-vs-pipelined identity test) see bit-identical payloads
+without materializing them all up front.
+
+Edge realism knobs (what the edge-video literature says binds at the
+edge — multi-stream admission and tail latency, not single-stream
+throughput):
+
+* **heavy-tailed GOP sizes** — lognormal around ``median_bytes`` with
+  ``sigma`` fattening the tail, clipped to [min_bytes, max_bytes]; big
+  outlier GOPs land in cold coalescer buckets and exercise the
+  straggler drain.
+* **bursty arrivals** — streams emit in geometric-length bursts (one
+  camera spamming motion events), picked by a zipf-skewed stream
+  distribution so a few hot cameras dominate, as in real deployments.
+* **novelty** — per-GOP uniform [0, 1); the admission controller sheds
+  lowest-novelty first, so the shed fraction under pressure is
+  deterministic too.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import numpy as np
+
+__all__ = ["WorkloadConfig", "Arrival", "IngestWorkload"]
+
+
+class WorkloadConfig(NamedTuple):
+    n_streams: int = 16
+    n_gops: int = 128       # total arrivals across every stream
+    seed: int = 0
+    # heavy-tailed sizes: lognormal(median, sigma) clipped to [min, max]
+    min_bytes: int = 1 << 10
+    median_bytes: int = 4 << 10
+    sigma: float = 0.6
+    max_bytes: int = 48 << 10
+    # bursts: geometric length (mean ~= 1/burst_p), zipf-skewed streams
+    burst_p: float = 0.25
+    zipf_a: float = 1.3
+
+
+class Arrival(NamedTuple):
+    """One scheduled GOP arrival (payload bytes derived on demand)."""
+
+    index: int      # global arrival order
+    stream_id: int
+    seq: int        # per-stream sequence number
+    nbytes: int
+    novelty: float
+
+
+class IngestWorkload:
+    """Precomputed arrival schedule + per-arrival payload derivation."""
+
+    def __init__(self, cfg: WorkloadConfig = WorkloadConfig()):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        arrivals: List[Arrival] = []
+        seqs = [0] * cfg.n_streams
+        mu = np.log(cfg.median_bytes)
+        while len(arrivals) < cfg.n_gops:
+            # zipf-skewed stream pick: hot cameras burst far more often
+            sid = int(rng.zipf(cfg.zipf_a) - 1) % cfg.n_streams
+            burst = 1 + int(rng.geometric(cfg.burst_p) - 1)
+            for _ in range(min(burst, cfg.n_gops - len(arrivals))):
+                nbytes = int(
+                    np.clip(
+                        rng.lognormal(mu, cfg.sigma),
+                        cfg.min_bytes, cfg.max_bytes,
+                    )
+                )
+                nbytes -= nbytes % 4  # whole uint32 words, like real codes
+                arrivals.append(
+                    Arrival(
+                        len(arrivals), sid, seqs[sid], nbytes,
+                        float(rng.random()),
+                    )
+                )
+                seqs[sid] += 1
+        self.arrivals: List[Arrival] = arrivals
+
+    def payload(self, a: Arrival) -> np.ndarray:
+        """Derive arrival ``a``'s flat int8 payload (bit-stable per
+        (seed, stream, seq) — independent of replay interleaving)."""
+        rng = np.random.default_rng([self.cfg.seed, a.stream_id, a.seq])
+        # normal-clipped codes: compressible, like real codec output
+        return np.clip(
+            rng.normal(0.0, 12.0, a.nbytes), -127, 127
+        ).astype(np.int8)
+
+    @staticmethod
+    def manifest(a: Arrival) -> dict:
+        """Minimal packing manifest for a synthetic payload."""
+        return {"spec": [], "n_i8": a.nbytes}
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(a.nbytes for a in self.arrivals)

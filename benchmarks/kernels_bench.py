@@ -983,10 +983,9 @@ def obs_overhead() -> List[Row]:
 
     Every hot-path call site guards on a single ``OBS.enabled`` branch, so
     the disabled cost must stay inside noise.  The harness times the SAME
-    ``seal_payload_stripe`` call with telemetry off and on, interleaved
-    (min-of-5 each, so ambient jitter hits both arms equally), and reports
-    the enabled-over-disabled overhead fraction — ``run.py --check`` gates
-    it at 3%.  It then runs one instrumented seal→scrub→restore pass and
+    ``seal_payload_stripe`` call with telemetry off and on in interleaved
+    pairs (ambient jitter hits both arms equally) and reports the SIGNED
+    paired-median overhead fraction — ``run.py --check`` gates it at 3%.  It then runs one instrumented seal→scrub→restore pass and
     dumps the Chrome trace + JSONL event log at the repo root so CI can
     archive a Perfetto-loadable artifact from every bench run.
     """
@@ -1047,8 +1046,15 @@ def obs_overhead() -> List[Row]:
             return ys[len(ys) // 2]
 
         def _window(round_no):
-            """One measurement window: 15 interleaved pairs, quartile-
-            trimmed mean of the per-pair differences."""
+            """One measurement window: 15 interleaved pairs; the estimate
+            is the MEDIAN of the per-pair differences over the median
+            disabled time, reported SIGNED.  A clamped-at-zero estimate
+            made the ceiling gate vacuous the moment ambient noise pushed
+            the disabled arm slower than the enabled one (us_disabled >
+            us_per_call with overhead_frac pinned to 0.0 — exactly what
+            the committed row showed); a signed median keeps the gate
+            honest: a genuinely-free telemetry tier reads as a small
+            fraction of either sign, a real regression reads positive."""
             off_ns, on_ns = [], []
             for rep in range(15):
                 pair = ((False, off_ns), (True, on_ns))
@@ -1058,27 +1064,27 @@ def obs_overhead() -> List[Row]:
                     st = _seal(31 * round_no + rep)
                     jax.block_until_ready(st[0][0].sealed.body)
                     sink.append(time.perf_counter_ns() - t0)
-            diffs = sorted(b - a for a, b in zip(off_ns, on_ns))
-            iqm = diffs[len(diffs) // 4: -(len(diffs) // 4)]
-            frac = max(0.0, (sum(iqm) / len(iqm)) / _median(off_ns))
+            diffs = [b - a for a, b in zip(off_ns, on_ns)]
+            frac = _median(diffs) / _median(off_ns)
             return frac, _median(on_ns) / 1e3, _median(off_ns) / 1e3
 
         # The true obs cost is ~10us of Python on a ~40ms interpret-mode
         # seal (~0.03%); scheduler spikes on a loaded runner reach +-25%
         # of a call, so any single window only bounds the overhead from
         # above.  A ceiling gate needs the tightest such bound: take the
-        # BEST of up to 3 independent windows (adjacent-in-time pairs
-        # cancel slow drift, the quartile trim drops spike pairs, GC is
-        # pinned off so a collection can't land inside one arm), stopping
-        # early once a window comes in clearly clean.
+        # window of smallest MAGNITUDE of up to 3 independent tries
+        # (adjacent-in-time pairs cancel slow drift, the pair median
+        # drops spike pairs, GC is pinned off so a collection can't land
+        # inside one arm), stopping early once a window comes in clearly
+        # clean.
         gc.collect()
         gc.disable()
         overhead_frac, us_on, us_off = _window(0)
         for rnd in (1, 2):
-            if overhead_frac <= 0.01:
+            if abs(overhead_frac) <= 0.01:
                 break
             cand = _window(rnd)
-            if cand[0] < overhead_frac:
+            if abs(cand[0]) < abs(overhead_frac):
                 overhead_frac, us_on, us_off = cand
         if gc_was_on:
             gc.enable()
@@ -1125,11 +1131,245 @@ def obs_overhead() -> List[Row]:
     )
     return [
         ("kernel/obs_seal_enabled", us_on,
-         f"overhead_frac={overhead_frac:.4f} vs disabled"
-         f" (interleaved min-of-5)"),
+         f"overhead_frac={overhead_frac:+.4f} vs disabled"
+         f" (signed paired-median, 15 interleaved pairs)"),
         ("kernel/obs_seal_disabled", us_off,
          "single-branch fast path, telemetry off"),
         ("kernel/obs_trace_export", float("nan"),
          f"trace_events={n_ev} jsonl_lines={n_ln}"
          f" ledger_edges={len(edges)} -> TELEMETRY_*.json[l]"),
     ]
+
+
+def ingest_scale() -> List[Row]:
+    """Streaming ingest at scale: N camera streams through the admission-
+    controlled, double-buffered ``StreamIngestFrontend``.
+
+    Drives the seed-deterministic ``benchmarks.ingest_workload`` (zipf-hot
+    streams, geometric bursts, heavy-tailed GOP sizes) at 16 and 256
+    streams — plus the paper-scale 1024-stream point under ``BENCH_FULL=1``
+    — and reports, per point: sealed stripes/s, p50/p99 GOP-to-commit
+    latency (offer stamp -> catalog commit, from the shared ingest
+    histogram), the admission-control shed fraction, and fused launches
+    per stripe (same-bucket stripes share one launch, so the ratio must
+    stay below 1).  ``run.py --check`` gates all four families absolutely.
+
+    The bench also proves the two-slot submit ring actually overlaps:
+    the SAME ready stripes are sealed (a) serialized — each batch's
+    dispatch immediately followed by its blocking fetch/commit — and
+    (b) through the ring, which fetches batch k only after batch k+1's
+    host prep + launch are in flight.  Both arms also time the fetch
+    STALL (host blocked in ``block_until_ready`` on the dispatched
+    batch).  The ring must hide the stall — serialized pays ~the full
+    kernel runtime per batch at the fetch, the ring pays ~zero because
+    the launch ran while the next batch was being staged — and that
+    assert holds on any host.  The wall-clock assert (pipelined beats
+    dispatch+fetch serialized) additionally requires >1 CPU core: on a
+    single-core host the OS is work-conserving, so hiding the stall
+    moves work around without shrinking the total; there the ring is
+    only required not to cost anything (<=1.2x serialized).
+    """
+    import os
+
+    from benchmarks.ingest_workload import IngestWorkload, WorkloadConfig
+    from repro import obs
+    from repro.core.crypto import rlwe
+    from repro.obs import names as obs_names
+    from repro.obs.export import write_chrome_trace
+    from repro.serving.engine import ArchiveIngest, IngestConfig
+    from repro.serving.ingest import FrontendConfig, StreamIngestFrontend
+
+    pub, _ = rlwe.keygen(jax.random.PRNGKey(41))
+    icfg = IngestConfig()
+    # 2-16KB payloads span exactly four pow2 row buckets, so the fused
+    # seal's jit surface stays at a handful of (S, T) variants
+    size_kw = dict(
+        min_bytes=2 << 10, median_bytes=4 << 10, sigma=0.5,
+        max_bytes=16 << 10,
+    )
+    fcfg = FrontendConfig(
+        max_stream_gops=6,          # zipf-hot streams overflow -> sheds
+        queue_budget_bytes=2 << 20,
+        batch_stripes=4,
+        deadline_us=150_000.0,      # stragglers drain as partial stripes
+    )
+    pump_every = 24
+
+    def _drive(n_streams: int, n_gops: int, seed: int):
+        wl = IngestWorkload(
+            WorkloadConfig(
+                n_streams=n_streams, n_gops=n_gops, seed=seed, **size_kw
+            )
+        )
+        payloads = [wl.payload(a) for a in wl.arrivals]  # off the clock
+        ing = ArchiveIngest(None, pub, icfg, seed=3)
+        fe = StreamIngestFrontend(ing, fcfg, seed=5)
+        with obs.enabled():
+            t0 = time.perf_counter_ns()
+            for a, p in zip(wl.arrivals, payloads):
+                fe.offer(
+                    a.stream_id, p, wl.manifest(a), novelty=a.novelty
+                )
+                if (a.index + 1) % pump_every == 0:
+                    fe.pump()
+            fe.pump()
+            fe.drain()
+            wall_us = (time.perf_counter_ns() - t0) / 1e3
+            launches = int(obs.OBS.metrics.get(obs_names.FUSED_LAUNCHES))
+            root = os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))
+            )
+            n_ev = write_chrome_trace(
+                os.path.join(root, "TELEMETRY_ingest_trace.json"), obs.OBS
+            )
+        st = fe.stats()
+        return {
+            "wall_us": wall_us,
+            "stripes": fe.committed,
+            "stripes_per_s": fe.committed / (wall_us / 1e6),
+            "p50_us": ing.metrics.percentile(
+                obs_names.ING_GOP_LATENCY_US, 50
+            ),
+            "p99_us": ing.metrics.percentile(
+                obs_names.ING_GOP_LATENCY_US, 99
+            ),
+            "shed_frac": st["shed_frac"],
+            "shed_gops": st["shed_gops"],
+            "launches_per_stripe": launches / max(1, fe.committed),
+            "trace_events": n_ev,
+        }
+
+    # warm the fused seal's jit variants (full + short stripes across the
+    # size buckets) off the clock with a small throwaway drive
+    _drive(4, 64, seed=99)
+
+    points = [(16, 192), (256, 512)]
+    if os.environ.get("BENCH_FULL", "0") == "1":
+        points.append((1024, 1280))
+    results = {n: _drive(n, g, seed=n) for n, g in points}
+
+    # ---- overlap: the two-slot ring vs serialized dispatch+commit over
+    # the SAME ready stripes (12 stripes, 3 batches of 4).  Device-heavy
+    # 32-64KB GOPs so the fused launch has real runtime to hide.
+    wl = IngestWorkload(
+        WorkloadConfig(
+            n_streams=16, n_gops=96, seed=7,
+            min_bytes=32 << 10, median_bytes=48 << 10, sigma=0.3,
+            max_bytes=64 << 10,
+        )
+    )
+    stage = ArchiveIngest(None, pub, icfg, seed=17)
+    ready = []
+    for a in wl.arrivals:
+        ready += stage.coalescer.add(
+            a.stream_id, wl.payload(a), wl.manifest(a),
+            meta={"novelty": a.novelty},
+        )
+        if len(ready) >= 12:
+            break
+    ready = ready[:12]
+    B = fcfg.batch_stripes
+
+    def _stall_of(slot) -> int:
+        """ns the host spends blocked on the slot's dispatched arrays."""
+        t0 = time.perf_counter_ns()
+        for g in slot[2].kernel.groups:
+            jax.block_until_ready(g.sealed)
+            jax.block_until_ready(g.n_words_rans)
+        return time.perf_counter_ns() - t0
+
+    def run_serialized():
+        ing = ArchiveIngest(None, pub, icfg, seed=19)
+        stall = 0
+        t0 = time.perf_counter_ns()
+        for i in range(0, len(ready), B):
+            slot = ing._seal_dispatch(ready[i : i + B])
+            stall += _stall_of(slot)
+            ing._seal_commit(slot)
+        return (time.perf_counter_ns() - t0) / 1e3, stall / 1e3
+
+    def run_pipelined():
+        ing = ArchiveIngest(None, pub, icfg, seed=19)
+        stall = 0
+        t0 = time.perf_counter_ns()
+        slot = None
+        for i in range(0, len(ready), B):
+            nxt = ing._seal_dispatch(ready[i : i + B])
+            if slot is not None:
+                stall += _stall_of(slot)
+                ing._seal_commit(slot)
+            slot = nxt
+        stall += _stall_of(slot)
+        ing._seal_commit(slot)
+        return (time.perf_counter_ns() - t0) / 1e3, stall / 1e3
+
+    run_serialized()  # warm the (S, T) variants at batch granularity
+    run_pipelined()
+    ser, pipe = [], []
+    for _ in range(5):  # interleaved so drift hits both arms equally
+        ser.append(run_serialized())
+        pipe.append(run_pipelined())
+
+    def _med(xs):
+        ys = sorted(xs)
+        return ys[len(ys) // 2]
+
+    us_ser, stall_ser = _med([w for w, _ in ser]), _med([s for _, s in ser])
+    us_pipe, stall_pipe = _med([w for w, _ in pipe]), _med(
+        [s for _, s in pipe]
+    )
+    overlap = us_ser / us_pipe
+    stall_hidden = 1.0 - stall_pipe / stall_ser if stall_ser else 0.0
+    # the acceptance bar for the submit ring: the launch runs WHILE the
+    # next batch stages, so the fetch-side stall must collapse...
+    assert stall_pipe < stall_ser, (
+        f"submit ring hides no stall: pipelined {stall_pipe:.0f}us >= "
+        f"serialized {stall_ser:.0f}us"
+    )
+    # ...and where a second core exists to run the hidden launch, B
+    # back-to-back batches through the ring must also beat the
+    # serialized dispatch+fetch wall clock.  A single-core host is
+    # work-conserving (hiding the stall cannot shrink the total), so
+    # there the ring only has to be free of overhead.
+    if (os.cpu_count() or 1) > 1:
+        assert us_pipe < us_ser, (
+            f"submit ring shows no overlap: pipelined {us_pipe:.0f}us >= "
+            f"serialized {us_ser:.0f}us on {os.cpu_count()} cores"
+        )
+    else:
+        assert us_pipe <= 1.2 * us_ser, (
+            f"submit ring costs wall clock on 1 core: {us_pipe:.0f}us vs "
+            f"serialized {us_ser:.0f}us"
+        )
+
+    metrics: Dict[str, float] = {
+        "pipeline_overlap": overlap,
+        "stall_hidden_frac": stall_hidden,
+        "stall_us_serialized": stall_ser,
+        "stall_us_pipelined": stall_pipe,
+    }
+    for n, r in results.items():
+        for k in (
+            "stripes_per_s", "p50_us", "p99_us", "shed_frac",
+            "launches_per_stripe",
+        ):
+            metrics[f"{k}_{n}"] = r[k]
+    record_json("ingest_scale", **metrics)
+
+    rows: List[Row] = []
+    for n, r in results.items():
+        rows.append(
+            (f"kernel/ingest_scale_{n}streams", r["wall_us"],
+             f"stripes/s={r['stripes_per_s']:.1f} "
+             f"p50={r['p50_us'] / 1e3:.1f}ms p99={r['p99_us'] / 1e3:.1f}ms "
+             f"shed={r['shed_frac']:.3f}({r['shed_gops']}) "
+             f"launches/stripe={r['launches_per_stripe']:.2f}")
+        )
+    rows.append(
+        ("kernel/ingest_submit_ring", us_pipe,
+         f"overlap={overlap:.2f}x vs serialized {us_ser:.0f}us, "
+         f"fetch stall {stall_ser:.0f}us -> {stall_pipe:.0f}us "
+         f"({stall_hidden:.1%} hidden; 12 stripes, {B}/batch, "
+         f"median-of-5 interleaved)")
+    )
+    return rows

@@ -117,9 +117,21 @@ exactly ONE site so the totals conserve:
   shards); ``replay.parity`` — degraded-read amplification (surviving
   unwanted peers + parity strips fed to ``recover_stripe``); both billed
   in ``restore_stripe_payloads``.
+* ``ingest.shed`` — payload bytes the streaming admission controller
+  (``serving/ingest.py``) refused under queue pressure; billed at exactly
+  one site (``StreamIngestFrontend._shed``), each shed journaled — never
+  a silent drop.
 * ``replay.planned`` / ``replay.full_baseline`` are billed by the query
   planner (``core/csd/retrieval.py``); ``scrub.*`` / ``rebuild.*`` by the
   durability tier (``core/archival/scrub.py``, ``distributed/archival``).
+
+Pipelined submission: ``seal_payload_stripes`` splits into a dispatch
+half (KEM + host staging + async fused launch) and a finalize half (the
+single blocking device→host fetch + archive assembly).  The streaming
+ingest tier (``serving/ingest.py``) runs them through a two-slot submit
+ring so batch k's seal overlaps batch k+1's host prep; the synchronous
+entry is literally ``finalize(dispatch(...))``, so both paths are
+bit-identical by construction.
 
 Spans (``archive.seal`` / ``archive.seal_chained`` / ``archive.unseal`` /
 ``archive.entropy_*`` / ``archive.parity_recompute``) carry stripe shape,
@@ -178,6 +190,9 @@ __all__ = [
     "entropy_decode_payloads",
     "seal_payload_stripe",
     "seal_payload_stripes",
+    "seal_payload_stripes_dispatch",
+    "seal_payload_stripes_finalize",
+    "PendingStripeSeal",
     "archive_stripe",
     "restore_stripe",
     "restore_stripe_payloads",
@@ -462,6 +477,125 @@ def _assemble_stripe(stripe, mats, manifests: List[Dict]) -> StripeArchive:
     return StripeArchive(blocks, parity)
 
 
+class PendingStripeSeal(NamedTuple):
+    """A dispatched-but-unfetched stripe-seal batch.
+
+    Exactly one of the three payload fields is populated:
+
+    * ``kernel``   — a ``fused_ops.PendingSeal`` (the default async path:
+      the jitted launch is in flight, nothing has synced);
+    * ``results``  — eager ``[(SealedStripe, emetas), ...]`` from a legacy
+      one-shot ``fused_fn`` override (already blocked at dispatch);
+    * ``archives`` — fully assembled ``StripeArchive``s (host-codec /
+      non-rans fallback, which has no async seam).
+
+    ``mats`` / ``manifests`` ride along so the finalize half can assemble
+    without re-deriving KEM material.
+    """
+
+    kernel: Optional[fused_ops.PendingSeal]
+    results: Optional[List]
+    archives: Optional[List[StripeArchive]]
+    mats: List[List]
+    manifests: List[List[Dict]]
+
+
+def seal_payload_stripes_dispatch(
+    pub: rlwe.PublicKey,
+    stripes: List[List[jax.Array]],
+    manifests: List[List[Dict]],
+    keys: List[jax.Array],
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    use_pallas: bool = True,
+    pad_rows=None,
+    fused_fn=None,
+    fused_dispatch_fn=None,
+) -> PendingStripeSeal:
+    """Async half of ``seal_payload_stripes``: KEM-encapsulate the session
+    keys, stage the payloads, and dispatch the fused launch WITHOUT the
+    device→host sync.  The returned handle is redeemed by
+    ``seal_payload_stripes_finalize``; the two-slot submit ring
+    (``repro.serving.ingest``) dispatches batch k+1's host prep between
+    the two halves so host staging overlaps the in-flight seal.
+
+    ``fused_dispatch_fn`` overrides the async launch (the sharded path
+    passes ``entropy_seal_stripes_dispatch`` with a shard_map'd
+    ``core_fn``); a legacy one-shot ``fused_fn`` still works but blocks
+    at dispatch (its results are carried to finalize eagerly).
+    """
+    n = len(stripes)
+    if not (n == len(manifests) == len(keys)):
+        raise ValueError(
+            f"{n} stripes vs {len(manifests)} manifests / {len(keys)} keys"
+        )
+    if isinstance(pad_rows, (list, tuple)):
+        pr_list = list(pad_rows)
+    else:
+        pr_list = [pad_rows] * n
+    if cfg.codec_name != "rans":
+        archives = [
+            seal_payload_stripe(
+                pub, f, m, k, cfg, use_pallas=use_pallas, pad_rows=pr
+            )
+            for f, m, k, pr in zip(stripes, manifests, keys, pr_list)
+        ]
+        return PendingStripeSeal(None, None, archives, [], [])
+    mats = [
+        [
+            encapsulate_session(pub, jax.random.fold_in(k, s), cfg.rlwe)
+            for s in range(len(f))
+        ]
+        for k, f in zip(keys, stripes)
+    ]
+    keys_a = [jnp.stack([m.session for m in ms]) for ms in mats]
+    nonces_a = [jnp.stack([m.nonce for m in ms]) for ms in mats]
+    with OBS.span(
+        "archive.seal", stripes=n, shards=len(stripes[0]),
+        codec=cfg.codec_name, parity=cfg.parity,
+    ) as sp:
+        launches0 = OBS.metrics.get(obs_names.FUSED_LAUNCHES) if OBS.enabled else 0
+        if fused_fn is not None:
+            results = fused_fn(
+                stripes, keys_a, nonces_a, parity=cfg.parity,
+                use_pallas=use_pallas, pad_rows=pr_list,
+            )
+            kernel = None
+        else:
+            dispatch = fused_dispatch_fn or fused_ops.entropy_seal_stripes_dispatch
+            kernel = dispatch(
+                stripes, keys_a, nonces_a, parity=cfg.parity,
+                use_pallas=use_pallas, pad_rows=pr_list,
+            )
+            results = None
+        if OBS.enabled:
+            sp.set(launches=int(
+                OBS.metrics.get(obs_names.FUSED_LAUNCHES) - launches0
+            ))
+    return PendingStripeSeal(kernel, results, None, mats, manifests)
+
+
+def seal_payload_stripes_finalize(
+    pending: PendingStripeSeal,
+) -> List[StripeArchive]:
+    """Blocking half: fetch the dispatched batch's rANS word counts (the
+    only device→host sync) and assemble + ledger-bill the archives."""
+    if pending.archives is not None:
+        return pending.archives
+    if pending.kernel is not None:
+        results = fused_ops.entropy_seal_stripes_finalize(pending.kernel)
+    else:
+        results = pending.results
+    return [
+        _assemble_stripe(
+            stripe, ms, [dict(m, entropy=em) for m, em in zip(mfs, emetas)]
+        )
+        for (stripe, emetas), ms, mfs in zip(
+            results, pending.mats, pending.manifests
+        )
+    ]
+
+
 def seal_payload_stripes(
     pub: rlwe.PublicKey,
     stripes: List[List[jax.Array]],
@@ -484,55 +618,16 @@ def seal_payload_stripes(
     between entropy and seal.  ``fused_fn`` overrides the batched launch
     (the sharded path passes ``entropy_seal_stripes`` with a shard_map'd
     ``core_fn``).  Host codecs fall back to the per-stripe chained path.
-    Outputs are bit-identical to mapping ``seal_payload_stripe``.
+    Outputs are bit-identical to mapping ``seal_payload_stripe`` — and,
+    being exactly ``finalize(dispatch(...))``, to the pipelined submit
+    ring by construction.
     """
-    n = len(stripes)
-    if not (n == len(manifests) == len(keys)):
-        raise ValueError(
-            f"{n} stripes vs {len(manifests)} manifests / {len(keys)} keys"
+    return seal_payload_stripes_finalize(
+        seal_payload_stripes_dispatch(
+            pub, stripes, manifests, keys, cfg, use_pallas=use_pallas,
+            pad_rows=pad_rows, fused_fn=fused_fn,
         )
-    if isinstance(pad_rows, (list, tuple)):
-        pr_list = list(pad_rows)
-    else:
-        pr_list = [pad_rows] * n
-    if cfg.codec_name != "rans":
-        return [
-            seal_payload_stripe(
-                pub, f, m, k, cfg, use_pallas=use_pallas, pad_rows=pr
-            )
-            for f, m, k, pr in zip(stripes, manifests, keys, pr_list)
-        ]
-    mats = [
-        [
-            encapsulate_session(pub, jax.random.fold_in(k, s), cfg.rlwe)
-            for s in range(len(f))
-        ]
-        for k, f in zip(keys, stripes)
-    ]
-    fn = fused_fn or fused_ops.entropy_seal_stripes
-    with OBS.span(
-        "archive.seal", stripes=n, shards=len(stripes[0]),
-        codec=cfg.codec_name, parity=cfg.parity,
-    ) as sp:
-        launches0 = OBS.metrics.get(obs_names.FUSED_LAUNCHES) if OBS.enabled else 0
-        results = fn(
-            stripes,
-            [jnp.stack([m.session for m in ms]) for ms in mats],
-            [jnp.stack([m.nonce for m in ms]) for ms in mats],
-            parity=cfg.parity,
-            use_pallas=use_pallas,
-            pad_rows=pr_list,
-        )
-        if OBS.enabled:
-            sp.set(launches=int(
-                OBS.metrics.get(obs_names.FUSED_LAUNCHES) - launches0
-            ))
-    return [
-        _assemble_stripe(
-            stripe, ms, [dict(m, entropy=em) for m, em in zip(mfs, emetas)]
-        )
-        for (stripe, emetas), ms, mfs in zip(results, mats, manifests)
-    ]
+    )
 
 
 def seal_payload_stripe(

@@ -74,11 +74,14 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
 
 from repro.core.archival.pipeline import (
     ArchiveConfig,
+    PendingStripeSeal,
     StripeArchive,
     archive_stripe,
     restore_stripe,
     seal_payload_stripe,
     seal_payload_stripes,
+    seal_payload_stripes_dispatch,
+    seal_payload_stripes_finalize,
 )
 from repro.core.crypto import rlwe
 from repro.kernels import use_interpret
@@ -115,6 +118,8 @@ __all__ = [
     "StripeCoalescer",
     "seal_coalesced_stripe",
     "seal_coalesced_stripes",
+    "seal_coalesced_stripes_dispatch",
+    "seal_coalesced_stripes_finalize",
     "RebuildItem",
     "RebuildRound",
     "plan_rebuild",
@@ -355,6 +360,15 @@ def _sharded_fused_fn(mesh: Mesh, axis: str):
     )
 
 
+def _sharded_fused_dispatch_fn(mesh: Mesh, axis: str):
+    """``_sharded_fused_fn``'s async twin — the ``fused_dispatch_fn`` seam
+    value for the pipelined submit ring (dispatch only, no device sync)."""
+    return functools.partial(
+        fused_ops.entropy_seal_stripes_dispatch,
+        core_fn=functools.partial(entropy_seal_sharded, mesh=mesh, axis=axis),
+    )
+
+
 # --------------------------------------------------- sharded entropy stage
 @functools.lru_cache(maxsize=None)
 def _sharded_entropy_core(mesh: Mesh, axis: str, decode: bool,
@@ -549,14 +563,20 @@ class StripeCoalescer:
         so ragged-stripe padding waste stays < 2x worst-case.
 
     ``flush()`` force-drains leftovers (end of epoch / checkpoint) into
-    possibly short stripes so no GOP is ever stranded unsealed.
+    possibly short stripes so no GOP is ever stranded unsealed;
+    ``drain_expired(deadline_us)`` is the straggler-aware variant — it
+    drains ONLY the buckets whose oldest GOP has waited past the deadline
+    (oldest bucket first), so a cold bucket cannot hold its GOPs hostage
+    and p99 GOP-to-commit stays bounded while hot buckets keep batching.
 
     Accounting lives on a ``repro.obs.Metrics`` registry (pass ``metrics``
     to share one with the owning ingest tier — ``ArchiveIngest`` does, so
     its ``stats()`` and the coalescer's are views of the SAME instruments
     instead of two hand-assembled dicts): ``ingest.gops`` /
     ``ingest.stripes_sealed`` counters plus the ``ingest.pending_gops``
-    occupancy gauge.
+    occupancy gauge.  ``add()`` stamps ``meta["_t_submit"]`` (monotonic ns)
+    when the caller didn't, so latency and deadline accounting never need
+    the caller's cooperation.
     """
 
     def __init__(self, n_shards: int, *, metrics: Optional[Metrics] = None):
@@ -564,6 +584,7 @@ class StripeCoalescer:
             raise ValueError("n_shards must be >= 1")
         self.n_shards = n_shards
         self._buckets: Dict[int, List[PendingGOP]] = {}
+        self._pending_bytes = 0
         self.metrics = metrics if metrics is not None else Metrics()
 
     @property
@@ -583,16 +604,25 @@ class StripeCoalescer:
             meta: Optional[Dict] = None) -> List[CoalescedStripe]:
         """Queue one GOP; returns the stripes it completed (usually 0 or 1)."""
         payload = jnp.asarray(payload).reshape(-1).astype(jnp.int8)
+        meta = dict(meta) if meta else {}
+        meta.setdefault("_t_submit", time.perf_counter_ns())
         r = self._bucket_of(payload)
         pending = self._buckets.setdefault(r, [])
         pending.append(PendingGOP(stream_id, payload, manifest, meta))
+        self._pending_bytes += int(payload.shape[0])
         self.metrics.add(obs_names.ING_GOPS)
         out: List[CoalescedStripe] = []
         while len(pending) >= self.n_shards:
             out.append(CoalescedStripe(pending[: self.n_shards], r))
             del pending[: self.n_shards]
+        return self._emitted(out)
+
+    def _emitted(self, out: List[CoalescedStripe]) -> List[CoalescedStripe]:
         if out:
             self.metrics.add(obs_names.ING_STRIPES, len(out))
+            self._pending_bytes -= sum(
+                int(g.payload.shape[0]) for cs in out for g in cs.gops
+            )
         self.metrics.set_gauge(obs_names.ING_PENDING, self.n_pending)
         return out
 
@@ -611,14 +641,60 @@ class StripeCoalescer:
             group = pending[i : i + self.n_shards]
             rows = max(self._bucket_of(g.payload) for g in group)
             out.append(CoalescedStripe(group, rows))
-        if out:
-            self.metrics.add(obs_names.ING_STRIPES, len(out))
-        self.metrics.set_gauge(obs_names.ING_PENDING, 0)
-        return out
+        return self._emitted(out)
+
+    def drain_expired(self, deadline_us: float,
+                      now_ns: Optional[int] = None) -> List[CoalescedStripe]:
+        """Force-drain buckets whose OLDEST GOP has waited past the deadline.
+
+        The straggler policy: a bucket that has not filled a stripe within
+        ``deadline_us`` of its oldest GOP's submit stamp is drained into a
+        (possibly short) stripe rather than holding its GOPs hostage —
+        this is what bounds p99 GOP-to-commit on cold buckets.  Expired
+        buckets drain oldest-first (and insertion order within a bucket is
+        already oldest-first), so the longest-waiting GOPs always land in
+        the first emitted stripe.  Fresh buckets are untouched and keep
+        batching toward full stripes.
+        """
+        now = time.perf_counter_ns() if now_ns is None else int(now_ns)
+        cutoff = now - int(float(deadline_us) * 1e3)
+        aged = []
+        for r, pending in self._buckets.items():
+            if not pending:  # fully-drained bucket keys linger in the dict
+                continue
+            t_old = min(
+                (g.meta or {}).get("_t_submit", now) for g in pending
+            )
+            if t_old <= cutoff:
+                aged.append((t_old, r))
+        if not aged:
+            return []
+        aged.sort()
+        gops = [g for _, r in aged for g in self._buckets.pop(r)]
+        out: List[CoalescedStripe] = []
+        for i in range(0, len(gops), self.n_shards):
+            group = gops[i : i + self.n_shards]
+            rows = max(self._bucket_of(g.payload) for g in group)
+            out.append(CoalescedStripe(group, rows))
+        return self._emitted(out)
 
     @property
     def n_pending(self) -> int:
         return sum(len(v) for v in self._buckets.values())
+
+    @property
+    def queue_bytes(self) -> int:
+        """Payload bytes currently queued (running counter, O(1))."""
+        return self._pending_bytes
+
+    def oldest_submit_ns(self) -> Optional[int]:
+        """Submit stamp of the oldest pending GOP, or None when empty."""
+        stamps = [
+            (g.meta or {}).get("_t_submit")
+            for v in self._buckets.values() for g in v
+        ]
+        stamps = [s for s in stamps if s is not None]
+        return min(stamps) if stamps else None
 
     def stats(self) -> Dict[str, float]:
         """Launch accounting: naive ingest = one seal launch per GOP.
@@ -702,14 +778,43 @@ def seal_coalesced_stripes(
         raise ValueError(f"{len(batch)} stripes vs {len(keys)} keys")
     if not batch:
         return []
+    return seal_coalesced_stripes_finalize(
+        seal_coalesced_stripes_dispatch(
+            pub, batch, keys, cfg, mesh=mesh, axis=axis,
+            use_pallas=use_pallas,
+        )
+    )
+
+
+def seal_coalesced_stripes_dispatch(
+    pub: rlwe.PublicKey,
+    batch: List[CoalescedStripe],
+    keys: List[jax.Array],
+    cfg: ArchiveConfig = ArchiveConfig(),
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: str = "data",
+    use_pallas: bool = True,
+) -> PendingStripeSeal:
+    """Async half of ``seal_coalesced_stripes``: stage + launch the batch
+    WITHOUT the device sync (see ``seal_payload_stripes_dispatch``).  The
+    two-slot submit ring dispatches batch k+1's host prep between this and
+    ``seal_coalesced_stripes_finalize``.  Non-rans codecs have no async
+    seam and seal eagerly inside the returned handle.
+    """
+    if len(batch) != len(keys):
+        raise ValueError(f"{len(batch)} stripes vs {len(keys)} keys")
+    if not batch:
+        return PendingStripeSeal(None, None, [], [], [])
     if cfg.codec_name != "rans":
-        return [
+        archives = [
             seal_coalesced_stripe(
                 pub, cs, k, cfg, mesh=mesh, axis=axis, use_pallas=use_pallas
             )
             for cs, k in zip(batch, keys)
         ]
-    return seal_payload_stripes(
+        return PendingStripeSeal(None, None, archives, [], [])
+    return seal_payload_stripes_dispatch(
         pub,
         [[g.payload for g in cs.gops] for cs in batch],
         [[g.manifest for g in cs.gops] for cs in batch],
@@ -717,8 +822,19 @@ def seal_coalesced_stripes(
         cfg,
         use_pallas=use_pallas,
         pad_rows=[cs.pad_rows for cs in batch],
-        fused_fn=_sharded_fused_fn(mesh, axis) if mesh is not None else None,
+        fused_dispatch_fn=(
+            _sharded_fused_dispatch_fn(mesh, axis) if mesh is not None
+            else None
+        ),
     )
+
+
+def seal_coalesced_stripes_finalize(
+    pending: PendingStripeSeal,
+) -> List[StripeArchive]:
+    """Blocking half: redeem a dispatched coalesced batch (the single
+    device→host fetch + archive assembly + ledger billing)."""
+    return seal_payload_stripes_finalize(pending)
 
 
 # ------------------------------------------------------------- CSD rebuild

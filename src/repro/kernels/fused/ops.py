@@ -26,12 +26,23 @@ same arrays plus the launch's static config as keyword arguments
 ``n_shards`` varies per batch group); the sharded path
 (``repro.distributed.archival``) passes a shard_map'd wrapper, exactly
 like the ``core_fn`` seams of the entropy and seal ops.
+
+Pipelined submission: the wrapper is split at the single device→host
+sync point (the rANS word-count fetch — the ``encode_payloads``
+single-fetch pattern).  ``entropy_seal_stripes_dispatch`` does all host
+prep and fires the jitted launches WITHOUT blocking — the returned
+:class:`PendingSeal` holds lazy device arrays — and
+``entropy_seal_stripes_finalize`` performs the blocking fetch plus the
+host-side manifest/slicing tail.  ``entropy_seal_stripes`` is exactly
+``finalize(dispatch(...))``, so a caller that overlaps host prep for
+batch k+1 with batch k's in-flight launch (``repro.serving.ingest``'s
+two-slot submit ring) produces bit-identical archives by construction.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +57,42 @@ from repro.kernels.fused import ref as _ref
 from repro.kernels.fused.entropy_seal import entropy_seal_pallas
 from repro.kernels.seal.ops import SealedStripe, bucket_rows_for, pad_rows_for
 
-__all__ = ["entropy_seal_stripe", "entropy_seal_stripes"]
+__all__ = [
+    "entropy_seal_stripe",
+    "entropy_seal_stripes",
+    "entropy_seal_stripes_dispatch",
+    "entropy_seal_stripes_finalize",
+    "PendingSeal",
+]
+
+
+class _PendingGroup(NamedTuple):
+    """One in-flight fused launch group: lazy device outputs + the host
+    metadata the finalize tail needs to slice them back per stripe."""
+
+    idxs: List[int]       # stripe indices (input order) in this group
+    S: int                # shards per stripe
+    T: int                # padded lane rows of the launch
+    n_raw: List[int]      # raw payload bytes, group-flat (len(idxs) * S)
+    sealed: jax.Array     # lazy (len(idxs)*S, T', 128) sealed rows
+    n_words_rans: jax.Array  # lazy per-shard rANS word counts
+    p: Optional[jax.Array]
+    q: Optional[jax.Array]
+
+
+class PendingSeal(NamedTuple):
+    """A dispatched-but-not-fetched ``entropy_seal_stripes`` batch.
+
+    Every launch in ``groups`` is already in flight (jax dispatch is
+    async); the only remaining work is the device→host word-count fetch
+    and the host-side slicing, which ``entropy_seal_stripes_finalize``
+    performs.  Holding one of these while preparing the next batch is the
+    whole double-buffering contract.
+    """
+
+    n_stripes: int
+    pr_list: List
+    groups: List[_PendingGroup]
 
 
 @functools.partial(
@@ -68,7 +114,7 @@ def _fused_core(codes, n_valid, keys, nonces, q_coef, *, n_shards: int,
     )
 
 
-def entropy_seal_stripes(
+def entropy_seal_stripes_dispatch(
     stripes: Sequence,
     keys: Sequence,
     nonces: Sequence,
@@ -79,22 +125,17 @@ def entropy_seal_stripes(
     pad_rows=None,
     division: Optional[str] = None,
     core_fn=None,
-) -> List[Tuple[SealedStripe, List[Dict]]]:
-    """Fused one-launch archival for a batch of stripes.
+) -> PendingSeal:
+    """Host prep + async launch for a batch of stripes — NO device sync.
 
-    stripes: per-stripe payload lists (ragged int8, or (S, N) arrays);
-    keys / nonces: per-stripe (S, 8) / (S, 3) uint32 session material;
-    pad_rows: None, an int, or a per-stripe sequence — a not-None entry
-    requests the chained pipeline's pow2 re-bucketing of the sealed rows
-    on the COMPRESSED sizes (the raw bucket value itself is superseded,
-    exactly as ``seal_payload_stripe`` re-buckets before the chained
-    seal); None requests the chained exact ``pad_rows_for`` padding.
-
-    Returns ``[(SealedStripe, entropy_metas), ...]`` in input order,
-    bit-identical to encode_payloads -> seal_stripe per stripe.
+    Same inputs as ``entropy_seal_stripes``; returns a :class:`PendingSeal`
+    whose launches are in flight.  The caller may do arbitrary host work
+    (staging the NEXT batch) before calling
+    ``entropy_seal_stripes_finalize``, which performs the single blocking
+    word-count fetch and the slicing tail.
     """
     if not len(stripes):
-        return []
+        return PendingSeal(0, [], [])
     if not (len(stripes) == len(keys) == len(nonces)):
         raise ValueError(
             f"{len(stripes)} stripes vs {len(keys)} keys / "
@@ -133,7 +174,7 @@ def entropy_seal_stripes(
         stripe_T.append(T)
         groups.setdefault((len(pl_), T), []).append(i)
 
-    results: List = [None] * n_stripes
+    out_groups: List[_PendingGroup] = []
     for (S, T), idxs in groups.items():
         # one Pallas launch per homogeneous group; the telemetry counters
         # let the seal span report its exact launch amortization
@@ -162,12 +203,28 @@ def entropy_seal_stripes(
             parity=parity, use_pallas=use_pallas, interpret=interp,
             division=division,
         )
-        nw_host = [int(w) for w in np.asarray(n_words_rans).reshape(-1)]
-        for j, i in enumerate(idxs):
+        out_groups.append(
+            _PendingGroup(idxs, S, T, n_raw, sealed, n_words_rans, p, q)
+        )
+    return PendingSeal(n_stripes, pr_list, out_groups)
+
+
+def entropy_seal_stripes_finalize(
+    pending: PendingSeal,
+) -> List[Tuple[SealedStripe, List[Dict]]]:
+    """Blocking tail of a dispatched batch: fetch the rANS word counts
+    (the ONLY device→host sync) and slice every stripe back to the
+    chained path's row count.  Idempotence is not needed — call once."""
+    results: List = [None] * pending.n_stripes
+    pr_list = pending.pr_list
+    for g in pending.groups:
+        S, T = g.S, g.T
+        nw_host = [int(w) for w in np.asarray(g.n_words_rans).reshape(-1)]
+        for j, i in enumerate(g.idxs):
             off = j * S
             metas, stored_words, stored_len = [], [], []
             for s in range(S):
-                nr = n_raw[off + s]
+                nr = g.n_raw[off + s]
                 nc = HEADER_BYTES + 2 * nw_host[off + s]
                 if nc >= nr:
                     metas.append(
@@ -185,14 +242,50 @@ def entropy_seal_stripes(
             rows_of = bucket_rows_for if pr_list[i] is not None else pad_rows_for
             R = rows_of(max(stored_words))
             stripe = SealedStripe(
-                sealed[off:off + S, :R],
-                p[j, :R] if p is not None else None,
-                q[j, :R] if q is not None else None,
+                g.sealed[off:off + S, :R],
+                g.p[j, :R] if g.p is not None else None,
+                g.q[j, :R] if g.q is not None else None,
                 tuple(stored_words),
                 tuple(stored_len),
             )
             results[i] = (stripe, metas)
     return results
+
+
+def entropy_seal_stripes(
+    stripes: Sequence,
+    keys: Sequence,
+    nonces: Sequence,
+    *,
+    parity: str = "raid6",
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    pad_rows=None,
+    division: Optional[str] = None,
+    core_fn=None,
+) -> List[Tuple[SealedStripe, List[Dict]]]:
+    """Fused one-launch archival for a batch of stripes.
+
+    stripes: per-stripe payload lists (ragged int8, or (S, N) arrays);
+    keys / nonces: per-stripe (S, 8) / (S, 3) uint32 session material;
+    pad_rows: None, an int, or a per-stripe sequence — a not-None entry
+    requests the chained pipeline's pow2 re-bucketing of the sealed rows
+    on the COMPRESSED sizes (the raw bucket value itself is superseded,
+    exactly as ``seal_payload_stripe`` re-buckets before the chained
+    seal); None requests the chained exact ``pad_rows_for`` padding.
+
+    Returns ``[(SealedStripe, entropy_metas), ...]`` in input order,
+    bit-identical to encode_payloads -> seal_stripe per stripe.  This is
+    exactly ``finalize(dispatch(...))`` — the pipelined submit ring uses
+    the two halves directly and stays bit-identical by construction.
+    """
+    return entropy_seal_stripes_finalize(
+        entropy_seal_stripes_dispatch(
+            stripes, keys, nonces, parity=parity, use_pallas=use_pallas,
+            interpret=interpret, pad_rows=pad_rows, division=division,
+            core_fn=core_fn,
+        )
+    )
 
 
 def entropy_seal_stripe(

@@ -46,6 +46,7 @@ from .ledger import (  # noqa: F401  (re-exported surface)
     EDGE_ENTROPY_COMP,
     EDGE_ENTROPY_RAW,
     EDGE_HOST_TO_DEVICE,
+    EDGE_INGEST_SHED,
     EDGE_REBUILD_READ,
     EDGE_REBUILD_WRITE,
     EDGE_REPLAY_FULL_BASELINE,
@@ -66,7 +67,7 @@ __all__ = [
     "Tracer", "Span", "NullSpan", "NULL_SPAN",
     "ByteLedger", "names",
     "EDGE_HOST_TO_DEVICE", "EDGE_ENTROPY_RAW", "EDGE_ENTROPY_COMP",
-    "EDGE_DEVICE_TO_JOURNAL", "EDGE_SHARD_TO_PARITY",
+    "EDGE_DEVICE_TO_JOURNAL", "EDGE_SHARD_TO_PARITY", "EDGE_INGEST_SHED",
     "EDGE_REPLAY_PLANNED", "EDGE_REPLAY_FULL_BASELINE",
     "EDGE_REPLAY_READ", "EDGE_REPLAY_PARITY",
     "EDGE_SCRUB_READ", "EDGE_SCRUB_SYNDROME",

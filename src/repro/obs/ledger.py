@@ -21,6 +21,10 @@ edge                        billed by / meaning
                             journal (compressed + sealed: the only payload
                             traffic the CSD design ships)
 ``ingest.shard_to_parity``  P/Q parity strip bytes per sealed stripe
+``ingest.shed``             payload bytes the streaming admission controller
+                            refused under queue pressure
+                            (``serving/ingest.StreamIngestFrontend._shed``,
+                            journaled — never a silent drop)
 ``replay.planned``          bytes a retrieval plan promised to move
                             (``plan_retrieval``; virtual — billed at plan
                             time, compared against ``replay.read``)
@@ -57,6 +61,7 @@ __all__ = [
     "EDGE_ENTROPY_COMP",
     "EDGE_DEVICE_TO_JOURNAL",
     "EDGE_SHARD_TO_PARITY",
+    "EDGE_INGEST_SHED",
     "EDGE_REPLAY_PLANNED",
     "EDGE_REPLAY_FULL_BASELINE",
     "EDGE_REPLAY_READ",
@@ -72,6 +77,7 @@ EDGE_ENTROPY_RAW = "ingest.entropy_raw"
 EDGE_ENTROPY_COMP = "ingest.entropy_comp"
 EDGE_DEVICE_TO_JOURNAL = "ingest.device_to_journal"
 EDGE_SHARD_TO_PARITY = "ingest.shard_to_parity"
+EDGE_INGEST_SHED = "ingest.shed"
 EDGE_REPLAY_PLANNED = "replay.planned"
 EDGE_REPLAY_FULL_BASELINE = "replay.full_baseline"
 EDGE_REPLAY_READ = "replay.read"

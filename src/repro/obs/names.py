@@ -17,6 +17,9 @@ ING_PENDING = "ingest.pending_gops"            # gauge: coalescer occupancy
 ING_ENTROPY_RAW = "ingest.entropy_raw_bytes"   # counter
 ING_ENTROPY_COMP = "ingest.entropy_comp_bytes"  # counter
 ING_GOP_LATENCY_US = "ingest.gop_to_commit_us"  # histogram: submit->sealed
+ING_QUEUE_DEPTH = "ingest.queue_depth"         # gauge: frontend queued bytes
+ING_SHED_BYTES = "ingest.shed_bytes"           # counter: admission sheds
+ING_SHED_GOPS = "ingest.shed_gops"             # counter: GOPs shed
 
 # ------------------------------------------------------------- retrieval
 RETR_PLANS = "retrieval.plans_served"          # counter

@@ -59,7 +59,8 @@ from repro.distributed.archival import (
     StripeCoalescer,
     plan_rebuild,
     rebuild_csd_sharded,
-    seal_coalesced_stripes,
+    seal_coalesced_stripes_dispatch,
+    seal_coalesced_stripes_finalize,
 )
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, init_cache
@@ -242,9 +243,14 @@ class ArchiveIngest:
             self._stripes.__getitem__, self._stripes.__setitem__
         )
 
-    def _seal(self, ready) -> List[StripeArchive]:
+    def _seal_dispatch(self, ready):
+        """Async half of ``_seal``: draw keys/ids in sequence order, stage
+        the batch and dispatch the fused launch WITHOUT the device sync.
+        Returns the slot the submit ring carries: ``(ready, stripe_ids,
+        pending)``, redeemed by ``_seal_commit`` — which MUST run in
+        dispatch order (stripe ids/keys are sequence-numbered)."""
         if not ready:
-            return []
+            return None
         # draw every stripe's key/id up front (sequence order fixed before
         # any sealing), then hand the whole batch to the fused path — same-
         # bucket stripes share ONE kernel launch instead of one per stripe
@@ -257,10 +263,20 @@ class ArchiveIngest:
             "ingest.seal", stripes=len(ready),
             codec=self.cfg.archive.codec_name,
         ):
-            stripes = seal_coalesced_stripes(
+            pending = seal_coalesced_stripes_dispatch(
                 self.pub, list(ready), keys, self.cfg.archive,
                 mesh=self.mesh, axis=self.axis,
             )
+        return (list(ready), stripe_ids, pending)
+
+    def _seal_commit(self, slot) -> List[StripeArchive]:
+        """Blocking half of ``_seal``: fetch the dispatched batch, then
+        catalog/retain/meter every stripe exactly as the synchronous path
+        always has (the commit stamp feeds the GOP latency histogram)."""
+        if slot is None:
+            return []
+        ready, stripe_ids, pending = slot
+        stripes = seal_coalesced_stripes_finalize(pending)
         t_commit = time.perf_counter_ns()
         for cs, stripe_id, stripe in zip(ready, stripe_ids, stripes):
             for b in stripe.blocks:
@@ -297,6 +313,12 @@ class ArchiveIngest:
             obs_names.STRIPES_RETAINED, len(self._stripes)
         )
         return list(stripes)
+
+    def _seal(self, ready) -> List[StripeArchive]:
+        # the synchronous entry IS dispatch+commit back-to-back, so the
+        # pipelined submit ring (``serving/ingest.py``) stays bit-identical
+        # to this path by construction
+        return self._seal_commit(self._seal_dispatch(ready))
 
     def submit(
         self,

@@ -79,7 +79,10 @@ from repro.core.csd.failure import Journal, StragglerMonitor
 from repro.core.csd.placement import Placement, balance_streams, rebalance
 from repro.core.csd.retrieval import ReadPlan, plan_retrieval
 from repro.data.video import VideoStream, render_clip
-from repro.distributed.archival import StripeCoalescer, seal_coalesced_stripe
+from repro.distributed.archival import (
+    StripeCoalescer,
+    seal_coalesced_stripes,
+)
 from repro.obs import OBS, enable as obs_enable
 from repro.obs.export import commit_jsonl, write_chrome_trace, write_jsonl
 from repro.train.checkpoint import (
@@ -118,6 +121,11 @@ class TrainerConfig(NamedTuple):
     # current centroids is at most retire_max_novelty (None = age alone)
     retire_ttl_steps: int = 0
     retire_max_novelty: Optional[float] = None
+    # straggler drain: force-flush coalescer buckets whose oldest GOP has
+    # waited longer than this many microseconds (0 = off, buckets only
+    # drain at checkpoint) — bounds GOP-to-commit tail latency when a
+    # cold bucket never fills a stripe
+    archive_deadline_us: float = 0.0
     # telemetry: enable the process-global repro.obs tier (spans + metrics
     # + byte-flow ledger) for this trainer; each StepReport then carries a
     # per-step snapshot and ``export_telemetry`` writes a Perfetto trace +
@@ -266,21 +274,32 @@ class SalientTrainer:
 
     # ----------------------------------------------------------- archival
     def _seal_and_commit(self, stripes) -> Tuple[int, int]:
-        """Seal coalesced stripes (one fused launch each, sharded over the
-        storage mesh when attached), journal-commit bodies + parity + the
-        replicated manifest record, and index the stripe into the salience
-        catalog so retrieval plans can find its GOPs.
+        """Seal coalesced stripes (batched: same-bucket stripes share ONE
+        fused launch, sharded over the storage mesh when attached),
+        journal-commit bodies + parity + the replicated manifest record,
+        and index the stripe into the salience catalog so retrieval plans
+        can find its GOPs.
 
         Returns (GOPs sealed, sealed bytes).
         """
+        stripes = list(stripes)
         n_gops, total_bytes = 0, 0
-        for cs in stripes:
-            key = jax.random.fold_in(self._archive_key, self._stripe_seq)
-            stripe = seal_coalesced_stripe(
-                self.pub, cs, key, self.archive_cfg, mesh=self.mesh
+        if not stripes:
+            return n_gops, total_bytes
+        # draw every stripe's key/name up front (sequence order fixed
+        # before any sealing — bit-identical to sealing one at a time),
+        # then hand the whole batch to the fused path
+        keys, rec_names = [], []
+        for _ in stripes:
+            keys.append(
+                jax.random.fold_in(self._archive_key, self._stripe_seq)
             )
-            rec_name = f"archive_{self._stripe_seq:08d}"
+            rec_names.append(f"archive_{self._stripe_seq:08d}")
             self._stripe_seq += 1
+        sealed = seal_coalesced_stripes(
+            self.pub, stripes, keys, self.archive_cfg, mesh=self.mesh
+        )
+        for cs, rec_name, stripe in zip(stripes, rec_names, sealed):
             body = b"".join(
                 np.asarray(b.sealed.body).astype("<u4").tobytes()
                 for b in stripe.blocks
@@ -665,6 +684,13 @@ class SalientTrainer:
                             "feature": np.asarray(fmat[i], np.float32),
                             "novelty": float(np.asarray(split.novelty)[i]),
                         },
+                    )
+                if cfg.archive_deadline_us > 0:
+                    # straggler-aware drain: GOPs stuck past the deadline
+                    # seal as (possibly short) stripes instead of waiting
+                    # for stripe-mates that may never come
+                    ready += self.coalescer.drain_expired(
+                        cfg.archive_deadline_us
                     )
                 n_sealed, total_bytes = self._seal_and_commit(ready)
 

@@ -1,0 +1,263 @@
+"""Streaming ingest frontend: the pipelined submit ring must be
+bit-identical to the synchronous seal path, admission control must shed
+loudly (journal + ledger + counters, never silently), and the coalescer's
+straggler drain must emit oldest-first partial stripes that round-trip
+bit-exact through the fused seal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.ingest_workload import IngestWorkload, WorkloadConfig
+from repro import obs
+from repro.core.archival.pipeline import (
+    ArchiveConfig,
+    restore_stripe_payloads,
+)
+from repro.core.crypto import rlwe
+from repro.core.csd.failure import Journal
+from repro.distributed.archival import (
+    StripeCoalescer,
+    seal_coalesced_stripe,
+    seal_coalesced_stripes,
+)
+from repro.obs import EDGE_INGEST_SHED
+from repro.obs import names as obs_names
+from repro.serving.engine import ArchiveIngest, IngestConfig
+from repro.serving.ingest import (
+    SHED_PREFIX,
+    FrontendConfig,
+    StreamIngestFrontend,
+)
+
+CFG = ArchiveConfig()
+# small heavy-tailed GOPs: fast under interpret mode, still multi-bucket
+SIZE_KW = dict(min_bytes=512, median_bytes=1024, sigma=0.4, max_bytes=4096)
+NO_DEADLINE = 1e15  # straggler drain disabled (cutoff far in the past)
+
+
+@pytest.fixture(scope="module")
+def keypair():
+    return rlwe.keygen(jax.random.PRNGKey(3))
+
+
+def _eq(a, b) -> bool:
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _deep_eq(a, b) -> bool:
+    """Structural equality that compares array leaves by value (manifest
+    dicts carry jnp arrays, so plain ``==`` is ambiguous)."""
+    if isinstance(a, dict):
+        return (
+            isinstance(b, dict) and a.keys() == b.keys()
+            and all(_deep_eq(a[k], b[k]) for k in a)
+        )
+    if isinstance(a, (list, tuple)):
+        return (
+            isinstance(b, (list, tuple)) and len(a) == len(b)
+            and all(_deep_eq(x, y) for x, y in zip(a, b))
+        )
+    if isinstance(a, (np.ndarray, jax.Array)):
+        return _eq(a, b)
+    return a == b
+
+
+def _assert_stripes_equal(got, want):
+    assert len(got.blocks) == len(want.blocks)
+    for bg, bw in zip(got.blocks, want.blocks):
+        assert _deep_eq(bg.manifest, bw.manifest)
+        for field in ("kem_c1", "kem_c2", "nonce", "body"):
+            assert _eq(getattr(bg.sealed, field), getattr(bw.sealed, field))
+        assert int(bg.sealed.n_valid_u32) == int(bw.sealed.n_valid_u32)
+    assert (got.parity is None) == (want.parity is None)
+    if got.parity is not None:
+        assert _eq(got.parity["p"], want.parity["p"])
+        assert _eq(got.parity["q"], want.parity["q"])
+
+
+# ------------------------------------------------------------ bit-identity
+def _drive(pipelined: bool, pub, pump_every: int = 5):
+    """Feed the same deterministic workload through the frontend, sealing
+    either via the two-slot submit ring (``pump``) or via the synchronous
+    ``_seal`` at the same cadence.  Queues/budget are sized so nothing is
+    shed and the straggler deadline never fires: stripe composition then
+    depends only on admission order, which is identical in both arms."""
+    wl = IngestWorkload(
+        WorkloadConfig(n_streams=6, n_gops=36, seed=13, **SIZE_KW)
+    )
+    ing = ArchiveIngest(None, pub, IngestConfig(), seed=21)
+    fe = StreamIngestFrontend(
+        ing,
+        FrontendConfig(
+            max_stream_gops=64, queue_budget_bytes=1 << 30,
+            batch_stripes=2, deadline_us=NO_DEADLINE,
+        ),
+        seed=7,
+    )
+    for a in wl.arrivals:
+        fe.offer(a.stream_id, wl.payload(a), wl.manifest(a),
+                 novelty=a.novelty)
+        if (a.index + 1) % pump_every == 0:
+            if pipelined:
+                fe.pump()
+            else:
+                ready = fe._admit_to_coalescer()
+                ready += ing.coalescer.drain_expired(fe.cfg.deadline_us)
+                ing._seal(ready)
+    if pipelined:
+        fe.pump()
+        fe.drain()
+    else:
+        ready = fe._admit_to_coalescer() + ing.coalescer.flush()
+        ing._seal(ready)
+    assert not fe.shed_log  # identity run must not shed
+    return ing
+
+
+def test_submit_ring_bit_identical_to_synchronous(keypair):
+    """The two-slot ring (dispatch k+1, THEN commit k) produces byte-for-
+    byte the archives the synchronous dispatch+commit path produces: same
+    stripe ids, same sealed bodies/KEM/nonces/parity, same manifests."""
+    pub, _ = keypair
+    ring = _drive(True, pub)
+    sync = _drive(False, pub)
+    assert sorted(ring._stripes) == sorted(sync._stripes)
+    assert len(ring._stripes) >= 3
+    for sid in sync._stripes:
+        _assert_stripes_equal(ring._stripes[sid], sync._stripes[sid])
+        assert _deep_eq(ring._manifests[sid], sync._manifests[sid])
+
+
+# -------------------------------------------------------- admission control
+def test_admission_shed_is_journaled_and_billed(tmp_path, keypair):
+    """Under queue pressure the frontend sheds the LOWEST-novelty GOP —
+    and every shed leaves a journal record, lands on the ``ingest.shed``
+    ledger edge, and bumps the shed counters.  Nothing disappears
+    silently: offered == sealed + shed."""
+    pub, _ = keypair
+    j = Journal(str(tmp_path))
+    ing = ArchiveIngest(None, pub, IngestConfig(), seed=4)
+    fe = StreamIngestFrontend(
+        ing,
+        FrontendConfig(
+            max_stream_gops=2, queue_budget_bytes=5 * 2048,
+            batch_stripes=2, deadline_us=NO_DEADLINE,
+        ),
+        seed=1,
+        journal=j,
+    )
+    payload = np.ones(2048, np.int8)
+    man = {"spec": [], "n_i8": 2048}
+    with obs.enabled():
+        assert fe.offer(0, payload, man, novelty=0.5)
+        assert fe.offer(0, payload, man, novelty=0.6)
+        # stream queue full, offered novelty is the lowest -> shed offered
+        assert not fe.offer(0, payload, man, novelty=0.4)
+        # offered novelty beats the lowest queued -> evict the 0.5
+        assert fe.offer(0, payload, man, novelty=0.9)
+        # byte budget (5 GOPs): later streams push past it -> global
+        # lowest novelty (the 0.6) is shed by the budget pass
+        for nov in (0.8, 0.75, 0.85, 0.7):
+            fe.offer(1 + int(nov * 100) % 3, payload, man, novelty=nov)
+        assert fe.queue_bytes <= fe.cfg.queue_budget_bytes
+        totals = obs.OBS.ledger.totals()
+        assert totals[EDGE_INGEST_SHED] == sum(
+            r.nbytes for r in fe.shed_log
+        )
+    assert [r.novelty for r in fe.shed_log] == [0.4, 0.5, 0.6]
+    assert [r.reason for r in fe.shed_log] == [
+        "stream_queue", "stream_queue", "byte_budget",
+    ]
+    assert fe.metrics.get(obs_names.ING_SHED_GOPS) == 3
+    assert fe.metrics.get(obs_names.ING_SHED_BYTES) == 3 * 2048
+    # every shed survived into the journal, in shed order, meta intact
+    recs = [
+        r for r in j.replay() if r["name"].startswith(SHED_PREFIX)
+    ]
+    assert [r["meta"]["novelty"] for r in recs] == [0.4, 0.5, 0.6]
+    assert [r["meta"]["reason"] for r in recs] == [
+        "stream_queue", "stream_queue", "byte_budget",
+    ]
+    assert all("stream_id" in r["meta"] and "seq" in r["meta"]
+               for r in recs)
+    # the survivors still seal; offered == sealed + shed
+    fe.pump()
+    fe.drain()
+    st = fe.stats()
+    offered = 8
+    assert st["shed_gops"] == 3
+    assert int(fe.metrics.get(obs_names.ING_GOPS)) == offered - 3
+    assert st["shed_frac"] == pytest.approx(3 / offered)
+
+
+# ------------------------------------------------------- straggler drain
+def test_drain_expired_emits_oldest_bucket_first():
+    """Expired buckets drain oldest-bucket-first (by their oldest GOP's
+    submit stamp), insertion order within a bucket; fresh buckets are
+    untouched and keep batching toward full stripes."""
+    coal = StripeCoalescer(n_shards=4)
+    t0 = 1_000_000_000
+    now = t0 + 10_000_000_000  # 10s later
+
+    def add(nbytes, t, tag):
+        return coal.add(
+            tag, np.full(nbytes, tag % 5, np.int8),
+            {"spec": [], "n_i8": nbytes, "tag": tag},
+            meta={"_t_submit": t},
+        )
+
+    # bucket B (8KB rows) is NEWER than bucket A (512B rows) but added
+    # first — the drain must still emit A's GOPs first
+    assert add(8192, t0 + 1000, 10) == []
+    assert add(8192, t0 + 1100, 11) == []
+    assert add(512, t0, 0) == []
+    assert add(512, t0 + 50, 1) == []
+    assert add(512, t0 + 100, 2) == []
+    # fresh bucket C (its own 32KB row bucket): stamped "now", must
+    # survive the drain
+    assert add(32768, now, 99) == []
+
+    out = coal.drain_expired(1.0, now_ns=now)
+    tags = [g.manifest["tag"] for cs in out for g in cs.gops]
+    assert tags == [0, 1, 2, 10, 11]  # oldest bucket first, FIFO within
+    assert [len(cs.gops) for cs in out] == [4, 1]
+    # a mixed drained group pads to the LARGEST member bucket
+    assert out[0].pad_rows == coal._bucket_of(jnp.zeros(8192, jnp.int8))
+    assert coal.n_pending == 1  # the fresh GOP kept batching
+    assert coal.queue_bytes == 32768
+    # nothing left to re-expire once drained
+    assert coal.drain_expired(1.0, now_ns=now) == []
+
+
+def test_drained_partial_stripe_roundtrips_through_fused_seal(keypair):
+    """A deadline-drained SHORT stripe (S=3 of 4) seals bit-identically
+    through the batched fused path vs the per-stripe reference, and its
+    payloads restore bit-exact (parity verified)."""
+    pub, sec = keypair
+    coal = StripeCoalescer(n_shards=4)
+    rng = np.random.default_rng(9)
+    payloads = [
+        np.clip(rng.normal(0, 8.0, 1024 + 32 * i), -127, 127).astype(
+            np.int8
+        )
+        for i in range(3)
+    ]
+    for i, p in enumerate(payloads):
+        assert coal.add(
+            i, p, {"spec": [], "n_i8": int(p.size)},
+            meta={"_t_submit": 1000},
+        ) == []
+    out = coal.drain_expired(1.0, now_ns=10_000_000_000)
+    assert len(out) == 1 and len(out[0].gops) == 3  # short stripe
+    key = jax.random.PRNGKey(77)
+    batched = seal_coalesced_stripes(pub, out, [key], CFG)
+    assert len(batched) == 1
+    _assert_stripes_equal(
+        batched[0], seal_coalesced_stripe(pub, out[0], key, CFG)
+    )
+    back, _ = restore_stripe_payloads(sec, batched[0], CFG)
+    assert len(back) == 3
+    for got, want in zip(back, payloads):
+        assert _eq(got, want)
